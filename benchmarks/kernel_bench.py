@@ -1,0 +1,78 @@
+"""Microbenchmarks for the Pallas kernels (CPU interpret-mode correctness +
+reference-path wall time; TPU numbers come from deployment, not this box).
+
+``derived`` columns report the structural wins that survive any backend:
+HBM bytes of the weight operand vs bf16 (the memory-roofline lever).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import QuantSpec, quantize_native
+from repro.kernels import ref
+from repro.kernels.ops import qmatmul_qt
+
+
+def _time(fn, *args, iters: int = 5) -> float:
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def bench_qmatmul(m: int = 128, k: int = 1024, n: int = 1024) -> list[tuple]:
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (m, k), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, n), jnp.float32) * 0.05
+    rows = []
+    bf16_bytes = k * n * 2
+    for bits in (8, 4):
+        spec = QuantSpec(bits=bits, per_channel=True, channel_axis=-1,
+                         po2_scale=False)
+        qt = quantize_native(w, spec)
+        scale = jnp.asarray(qt.scale, jnp.float32).reshape(-1)
+        ref_fn = jax.jit(lambda x_, d=qt.data, s=scale, b=bits:
+                         ref.qmatmul_ref(x_, d, s, b))
+        t_ref = _time(ref_fn, x)
+        y_ref = ref_fn(x)
+        y_kernel = qmatmul_qt(x, qt)
+        err = float(jnp.max(jnp.abs(y_kernel - y_ref)))
+        w_bytes = k * n * bits // 8
+        rows.append((f"qmatmul_int{bits}_ref_path", t_ref,
+                     f"w_bytes_ratio={w_bytes/bf16_bytes:.2f};kernel_err={err:.1e}"))
+    return rows
+
+
+def bench_qkv_attention(s: int = 1024, d: int = 64, hg: int = 4) -> list[tuple]:
+    from repro.kernels.qkv_attention import qkv_attention_pallas
+    key = jax.random.PRNGKey(1)
+    g = 4
+    q = jax.random.normal(key, (g, hg, d), jnp.float32)
+    k_ = jax.random.normal(jax.random.fold_in(key, 1), (g, s, d), jnp.float32)
+    v_ = jax.random.normal(jax.random.fold_in(key, 2), (g, s, d), jnp.float32)
+    ks = jnp.abs(k_).max(axis=(1, 2)) / 127.0
+    vs = jnp.abs(v_).max(axis=(1, 2)) / 127.0
+    kq = jnp.clip(jnp.round(k_ / ks[:, None, None]), -127, 127).astype(jnp.int8)
+    vq = jnp.clip(jnp.round(v_ / vs[:, None, None]), -127, 127).astype(jnp.int8)
+    lengths = jnp.full((g,), s, jnp.int32)
+
+    def ref_fn():
+        kf = jnp.broadcast_to((kq.astype(jnp.float32) * ks[:, None, None])[:, None],
+                              (g, hg, s, d))
+        vf = jnp.broadcast_to((vq.astype(jnp.float32) * vs[:, None, None])[:, None],
+                              (g, hg, s, d))
+        return ref.qkv_attention_ref(q[:, :, None, :], kf, vf, 1.0, 1.0)
+
+    t_ref = _time(jax.jit(ref_fn))
+    out_k = qkv_attention_pallas(q, kq, vq, ks, vs, lengths, block_s=256,
+                                 interpret=True)
+    out_r = ref_fn()[:, :, 0, :]
+    err = float(jnp.max(jnp.abs(out_k - out_r)))
+    cache_ratio = 1 / 2  # int8 vs bf16 KV bytes
+    return [(f"qkv_attention_int8_ref_path", t_ref,
+             f"kv_bytes_ratio={cache_ratio:.2f};kernel_err={err:.1e}")]

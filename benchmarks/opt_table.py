@@ -1,0 +1,69 @@
+"""Framework-wide optimized-vs-baseline roofline table (§Perf generalization).
+
+Compares the baseline pod1 artifacts against the ``__con`` (train:
+activation-sharding constraints + SWA skip) and ``__w8__kv8__con`` (decode:
+int8 weights + int8 KV + constraints) variants for every arch.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.core.energy import TPU_V5E, roofline_terms
+
+ART = os.environ.get("REPRO_ARTIFACTS", "artifacts")
+
+
+def _load(tag):
+    p = os.path.join(ART, "dryrun", tag + ".json")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        rec = json.load(f)
+    return rec if rec.get("status") == "ok" and "analysis" in rec else None
+
+
+def _tstep(rec) -> tuple[float, float]:
+    a = rec["analysis"]
+    chips = rec["devices"]
+    t = roofline_terms(a["flops"] * chips, a["bytes_accessed"] * chips,
+                       a["collective_bytes"]["total"] * chips, chips, TPU_V5E)
+    mem = rec["production"]["memory"]
+    lower = (mem["argument_bytes"] + mem["output_bytes"]) / TPU_V5E.hbm_bw
+    t_low = max(t["compute_s"], lower, t["collective_s"])
+    return t_low, t["compute_s"] / t_low if t_low else 0.0
+
+
+def rows(shape: str, suffix: str) -> list[dict]:
+    out = []
+    from repro.configs import ARCHS
+    for arch in ARCHS:
+        base = _load(f"{arch}__{shape}__pod1")
+        opt = _load(f"{arch}__{shape}__pod1{suffix}")
+        if not base or not opt:
+            continue
+        tb, fb = _tstep(base)
+        to, fo = _tstep(opt)
+        out.append(dict(arch=arch, shape=shape,
+                        t_base_s=tb, t_opt_s=to,
+                        speedup=tb / to if to else 0.0,
+                        frac_base=fb, frac_opt=fo))
+    return out
+
+
+def main() -> None:
+    all_rows = (rows("train_4k", "__con")
+                + rows("prefill_32k", "__w8__con")
+                + rows("decode_32k", "__w8__kv8__con"))
+    print("| arch | shape | t_step base | t_step opt | speedup | frac base→opt |")
+    print("|" + "---|" * 6)
+    for r in all_rows:
+        print(f"| {r['arch']} | {r['shape']} | {r['t_base_s']:.3e} "
+              f"| {r['t_opt_s']:.3e} | {r['speedup']:.2f}× "
+              f"| {r['frac_base']:.3f} → {r['frac_opt']:.3f} |")
+    with open(os.path.join(ART, "opt_table.json"), "w") as f:
+        json.dump(all_rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

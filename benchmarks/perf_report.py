@@ -1,0 +1,106 @@
+"""§Perf: render before/after comparisons for the hillclimbed cells from
+dry-run artifacts (baseline vs tagged variants)."""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.core.energy import TPU_V5E, roofline_terms
+
+ART = os.environ.get("REPRO_ARTIFACTS", "artifacts")
+
+
+def load(tag: str) -> dict | None:
+    p = os.path.join(ART, "dryrun", tag + ".json")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return json.load(f)
+
+
+def terms_of(rec: dict) -> dict:
+    a = rec["analysis"]
+    chips = rec["devices"]
+    t = roofline_terms(a["flops"] * chips, a["bytes_accessed"] * chips,
+                       a["collective_bytes"]["total"] * chips, chips, TPU_V5E)
+    mem = rec["production"]["memory"]
+    # structural lower bound on HBM traffic: weights/optimizer + step I/O
+    lower = (mem["argument_bytes"] + mem["output_bytes"]) / TPU_V5E.hbm_bw
+    t["memory_lower_s"] = lower
+    t["t_step_lower_s"] = max(t["compute_s"], lower, t["collective_s"])
+    t["fraction_upper"] = t["compute_s"] / t["t_step_s"]
+    t["fraction_lower_bound_model"] = t["compute_s"] / t["t_step_lower_s"]
+    return t
+
+
+def compare(cell: str, variants: list[tuple[str, str]]) -> list[dict]:
+    rows = []
+    for label, tag in variants:
+        rec = load(tag)
+        if rec is None or rec.get("status") != "ok" or "analysis" not in rec:
+            rows.append({"variant": label, "status": "missing"})
+            continue
+        t = terms_of(rec)
+        a = rec["analysis"]
+        rows.append({
+            "variant": label,
+            "flops_dev": a["flops"],
+            "bytes_dev": a["bytes_accessed"],
+            "coll_dev_gib": a["collective_bytes"]["total"] / 2**30,
+            "compute_s": t["compute_s"],
+            "memory_s": t["memory_s"],
+            "memory_lower_s": t["memory_lower_s"],
+            "collective_s": t["collective_s"],
+            "t_step_s": t["t_step_s"],
+            "t_step_lower_s": t["t_step_lower_s"],
+            "frac_struct": t["fraction_lower_bound_model"],
+            "args_gib": rec["production"]["memory"]["argument_bytes"] / 2**30,
+        })
+    return rows
+
+
+CELLS = {
+    "qwen1.5-110b × train_4k (most collective-bound)": [
+        ("baseline", "qwen1.5-110b__train_4k__pod1"),
+        ("+constraints", "qwen1.5-110b__train_4k__pod1__con"),
+        ("+constraints+dots-remat", "qwen1.5-110b__train_4k__pod1__con-dots"),
+        ("+constraints+bf16-reshard", "qwen1.5-110b__train_4k__pod1__con-bf16"),
+    ],
+    "hymba-1.5b × prefill_32k (worst useful-ratio)": [
+        ("baseline (masked SWA)", "hymba-1.5b__prefill_32k__pod1"),
+        ("+swa-block-skip", "hymba-1.5b__prefill_32k__pod1__swa"),
+        ("+swa+constraints", "hymba-1.5b__prefill_32k__pod1__swa-con"),
+    ],
+    "qwen2-72b × decode_32k (paper-representative: quantized serving)": [
+        ("baseline bf16 W/KV", "qwen2-72b__decode_32k__pod1"),
+        ("W8 + KV8 (paper data-approx)", "qwen2-72b__decode_32k__pod1__w8__kv8"),
+        ("W4 + KV8", "qwen2-72b__decode_32k__pod1__w4__kv8"),
+        ("W8+KV8+constraints", "qwen2-72b__decode_32k__pod1__w8__kv8__con"),
+        ("W8+KV8+con+serve-layout", "qwen2-72b__decode_32k__pod1__w8__kv8__srv"),
+        ("W4+KV8+con+serve-layout", "qwen2-72b__decode_32k__pod1__w4__kv8__srv"),
+        ("W8+KV4+con (int4 cache)", "qwen2-72b__decode_32k__pod1__w8__kv4__con"),
+    ],
+}
+
+
+def main() -> None:
+    for cell, variants in CELLS.items():
+        print(f"\n## {cell}")
+        rows = compare(cell, variants)
+        hdr = ("| variant | FLOPs/dev | coll GiB/dev | compute_s | mem_s(ub) | "
+               "mem_s(struct) | coll_s | t_step(struct) | frac(struct) |")
+        print(hdr)
+        print("|" + "---|" * 9)
+        for r in rows:
+            if r.get("status") == "missing":
+                print(f"| {r['variant']} | (pending) |" + " |" * 7)
+                continue
+            print(f"| {r['variant']} | {r['flops_dev']:.2e} | "
+                  f"{r['coll_dev_gib']:.1f} | {r['compute_s']:.2e} | "
+                  f"{r['memory_s']:.2e} | {r['memory_lower_s']:.2e} | "
+                  f"{r['collective_s']:.2e} | {r['t_step_lower_s']:.2e} | "
+                  f"{r['frac_struct']:.3f} |")
+
+
+if __name__ == "__main__":
+    main()

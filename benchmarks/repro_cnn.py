@@ -1,0 +1,184 @@
+"""Paper reproduction benchmarks: Table 1, Fig. 3, Fig. 4 analogues.
+
+Per-profile QAT (each profile trained separately from a shared init, exactly
+like the paper's per-configuration engines), then:
+
+* **Table 1** — accuracy / modeled latency / weight-image bytes (LUT+BRAM
+  analogue) / modeled power per profile.
+* **Fig. 3**  — the accuracy-vs-energy Pareto points (CSV).
+* **Fig. 4**  — merged adaptive engine (A8-W8 + Mixed): resource overhead vs
+  the largest standalone engine, plus the 10 Ah-budget battery simulation
+  (classifications executable, adaptive vs non-adaptive).
+
+Training on CPU is minutes per profile → results cache to
+``artifacts/repro/table1.json``; delete the file to retrain.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.energy import TPU_V5E, activity_factor, step_energy
+from repro.core.manager import ProfileStats, battery_simulation
+from repro.core.merge import merge_plan
+from repro.core.profiles import paper_profiles, profile_table
+from repro.data.digits import batches, make_dataset
+from repro.models import cnn as C
+from repro.optim.adam import AdamConfig, adam_init, adam_update
+
+ART = os.environ.get("REPRO_ARTIFACTS", "artifacts")
+CACHE = os.path.join(ART, "repro", "table1.json")
+
+# paper's measured reference points (Table 1) for trend validation
+PAPER_TABLE1 = {
+    "A16-W8": {"acc": 98.9, "power_mw": 160},
+    "A16-W4": {"acc": 95.3, "power_mw": 134},
+    "A8-W8": {"acc": 98.8, "power_mw": 142},
+    "A8-W4": {"acc": 95.3, "power_mw": 132},
+    "A4-W4": {"acc": 95.8, "power_mw": 141},
+}
+
+# modeled per-inference time for the tiny CNN on one v5e core: the paper's
+# latency is precision-INDEPENDENT (HLS schedule bound) — we mirror that by
+# deriving one latency from the float roofline and holding it constant.
+_CNN_MACS = 2 * (28 * 28 * 3 * 3 * 1 * 64 + 14 * 14 * 3 * 3 * 64 * 64
+                 + 7 * 7 * 64 * 10)
+CNN_LATENCY_S = max(_CNN_MACS / TPU_V5E.peak_flops, 2e-6)  # dispatch floor
+
+
+def train_profile(profile_idx: int, table, steps: int = 120,
+                  seed: int = 0) -> dict:
+    cfg = C.CNNConfig()
+    params = C.init_cnn(cfg, jax.random.PRNGKey(seed))
+    acfg = AdamConfig(lr=1e-3, total_steps=steps, warmup_steps=10)
+    tab = jnp.asarray(table)
+
+    @jax.jit
+    def step(params, opt, images, labels):
+        br = tab[profile_idx]
+        (l, m), g = jax.value_and_grad(C.cnn_loss, has_aux=True)(
+            params, br, {"images": images, "labels": labels})
+        params, opt, _ = adam_update(acfg, g, opt, params)
+        return params, opt, l
+
+    train_x, train_y = make_dataset(4096, seed=1, difficulty="hard")
+    opt = adam_init(params)
+    it = batches(train_x, train_y, 256, seed=3 + profile_idx)
+    for _ in range(steps):
+        x, y = next(it)
+        params, opt, loss = step(params, opt, jnp.asarray(x), jnp.asarray(y))
+    return params
+
+
+def profile_energy(name: str, a_bits: int, w_bits: int) -> tuple[float, float]:
+    """(power_w, energy_j) per inference under the activity model."""
+    mem_ratio = min(w_bits, 16) / 16.0
+    act = activity_factor(min(a_bits, 16), min(w_bits, 16), mem_ratio)
+    e = step_energy(CNN_LATENCY_S, act, chips=1)
+    return e / CNN_LATENCY_S, e
+
+
+def run_table1(force: bool = False, steps: int = 120) -> dict:
+    if os.path.exists(CACHE) and not force:
+        with open(CACHE) as f:
+            return json.load(f)
+    profs = paper_profiles(C.CNN_LAYERS, inner_layers=["conv1"])
+    table = profile_table(profs, C.CNN_LAYERS)
+    test_x, test_y = make_dataset(2048, seed=2, difficulty="hard")
+    cfg = C.CNNConfig()
+    shapes = C.cnn_weight_shapes(cfg)
+    rows = {}
+    params_by_profile = {}
+    for i, prof in enumerate(profs):
+        t0 = time.time()
+        params = train_profile(i, table, steps=steps)
+        params_by_profile[prof.name] = params
+        acc = C.cnn_accuracy(params, jnp.asarray(table)[i], test_x, test_y)
+        ab, wb = prof.bits["conv0"]
+        if prof.name == "Mixed":
+            ab, wb = 8, 8  # outer layers' precision (inner conv at 4)
+        power_w, energy_j = profile_energy(prof.name, ab, wb)
+        if prof.name == "Mixed":  # inner conv at A4-W4 → weighted activity
+            p44, e44 = profile_energy("A4-W4", 4, 4)
+            inner_share = (14 * 14 * 9 * 64 * 64) / (_CNN_MACS / 2)
+            power_w = power_w * (1 - inner_share) + p44 * inner_share
+            energy_j = power_w * CNN_LATENCY_S
+        w_bytes = sum(
+            int(np.prod(shapes[ln])) * min(prof.bits[ln][1], 16) // 8
+            for ln in C.CNN_LAYERS)
+        rows[prof.name] = {
+            "accuracy_pct": round(acc * 100, 2),
+            "latency_us": round(CNN_LATENCY_S * 1e6, 3),
+            "weight_bytes": w_bytes,
+            "power_w_model": round(power_w, 3),
+            "energy_j_model": energy_j,
+            "train_s": round(time.time() - t0, 1),
+        }
+        print(f"[table1] {prof.name:7s} acc {acc*100:5.2f}%  "
+              f"P={power_w:.1f}W  bytes={w_bytes}")
+    os.makedirs(os.path.dirname(CACHE), exist_ok=True)
+    result = {"rows": rows, "latency_us": CNN_LATENCY_S * 1e6,
+              "paper_reference": PAPER_TABLE1}
+    with open(CACHE, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def run_fig4(table1: dict) -> dict:
+    """Merged adaptive engine (A8-W8 + Mixed) + battery simulation."""
+    profs = paper_profiles(C.CNN_LAYERS, inner_layers=["conv1"])
+    by_name = {p.name: p for p in profs}
+    pair = [by_name["A8-W8"], by_name["Mixed"]]
+    plan = merge_plan(pair)
+    cfg = C.CNNConfig()
+    res = plan.resource_bytes(C.cnn_weight_shapes(cfg))
+    rows = table1["rows"]
+    stats = [
+        ProfileStats("A8-W8", rows["A8-W8"]["accuracy_pct"] / 100,
+                     rows["A8-W8"]["energy_j_model"], CNN_LATENCY_S),
+        ProfileStats("Mixed", rows["Mixed"]["accuracy_pct"] / 100,
+                     rows["Mixed"]["energy_j_model"], CNN_LATENCY_S),
+    ]
+    # paper Fig.4 assumes a 10 Ah battery; in the model's µJ-per-inference
+    # regime that is ≈2M most-accurate inferences worth of energy
+    budget_j = stats[0].energy_j * 2_000_000
+    adaptive = battery_simulation(stats, budget_j, accuracy_target=0.985,
+                                  accuracy_floor=0.90, critical_every=10)
+    fixed = battery_simulation(stats, budget_j, accuracy_target=0.985,
+                               accuracy_floor=0.90, fixed_profile=0)
+    out = {
+        "merge": {
+            "shared_layers": list(plan.shared_layers),
+            "switched_layers": list(plan.switched_layers),
+            "sharing_ratio": plan.sharing_ratio(),
+            **{k: v for k, v in res.items()},
+        },
+        "power_saving_pct": round(
+            100 * (1 - stats[1].energy_j / stats[0].energy_j), 2),
+        "accuracy_drop_pct": round(
+            rows["A8-W8"]["accuracy_pct"] - rows["Mixed"]["accuracy_pct"], 2),
+        "battery": {"adaptive": adaptive, "non_adaptive": fixed,
+                    "extra_classifications_pct": round(
+                        100 * (adaptive["classifications"]
+                               / max(1, fixed["classifications"]) - 1), 2)},
+    }
+    with open(os.path.join(ART, "repro", "fig4.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+def main(force: bool = False) -> None:
+    t1 = run_table1(force=force)
+    print(json.dumps({k: {kk: vv for kk, vv in v.items() if kk != "train_s"}
+                      for k, v in t1["rows"].items()}, indent=1))
+    f4 = run_fig4(t1)
+    print(json.dumps(f4, indent=1))
+
+
+if __name__ == "__main__":
+    main()

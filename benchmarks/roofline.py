@@ -1,0 +1,130 @@
+"""§Roofline: derive the three roofline terms per (arch × shape × mesh) from
+the dry-run artifacts (brief §ROOFLINE ANALYSIS).
+
+Conventions (documented in EXPERIMENTS.md):
+* ``cost_analysis``/HLO parsing operate on the *per-device* post-SPMD module,
+  so terms divide by per-chip peaks directly (global = per-device × chips).
+* FLOPs/bytes/collective-bytes come from the depth-unrolled L∈{1,2}
+  extrapolation (scan bodies are counted once by HloCostAnalysis — verified);
+  ``memory_analysis`` comes from the full-depth production compile.
+* MODEL_FLOPS = 6·N·D (train) / 2·N·D (prefill) / 2·N·B (decode), with
+  N_active for MoE. The ratio MODEL_FLOPS/HLO_FLOPS exposes remat/overhead.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from dataclasses import asdict
+
+import jax
+
+from repro.configs import ARCHS, SHAPES, get_config, shape_applicable
+from repro.core.energy import TPU_V5E, roofline_terms
+from repro.launch import specs as S
+from repro.models import transformer as T
+
+ART = os.environ.get("REPRO_ARTIFACTS", "artifacts")
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Analytic useful-FLOPs for the cell (global, per step)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    params = S.abstract_params(cfg)
+    n = T.param_count(params)
+    n_active = T.active_param_count(cfg, params)
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch  # decode: one token / sample
+
+
+def load_cells(mesh: str = "pod1", suffix: str = "") -> list[dict]:
+    out = []
+    for p in sorted(glob.glob(os.path.join(ART, "dryrun",
+                                           f"*__{mesh}{suffix}.json"))):
+        with open(p) as f:
+            out.append(json.load(f))
+    return out
+
+
+def roofline_row(rec: dict, hw=TPU_V5E) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    a = rec.get("analysis")
+    if not a:
+        return None
+    chips = rec["devices"]
+    f_dev = a["flops"]
+    b_dev = a["bytes_accessed"]
+    c_dev = a["collective_bytes"]["total"]
+    terms = roofline_terms(f_dev * chips, b_dev * chips, c_dev * chips,
+                           chips, hw)
+    mf = model_flops(rec["arch"], rec["shape"])
+    mem = rec.get("production", {}).get("memory", {}) or {}
+    # structural HBM lower bound: parameters/optimizer/caches + step outputs
+    # (``bytes_accessed`` on the unfused CPU HLO is the upper bound — on TPU,
+    # fusion lands between the two; both are reported, EXPERIMENTS §Roofline)
+    mem_lower_s = ((mem.get("argument_bytes", 0) + mem.get("output_bytes", 0))
+                   / hw.hbm_bw)
+    t_lower = max(terms["compute_s"], mem_lower_s, terms["collective_s"])
+    row = {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "chips": chips,
+        "flops_dev": f_dev, "bytes_dev": b_dev, "coll_dev": c_dev,
+        **{k: terms[k] for k in ("compute_s", "memory_s", "collective_s",
+                                 "dominant", "t_step_s")},
+        "memory_lower_s": mem_lower_s,
+        "t_step_lower_s": t_lower,
+        "model_flops": mf,
+        "useful_ratio": mf / (f_dev * chips) if f_dev else 0.0,
+        "roofline_fraction":
+            terms["compute_s"] / terms["t_step_s"] if terms["t_step_s"] else 0.0,
+        "roofline_fraction_struct":
+            terms["compute_s"] / t_lower if t_lower else 0.0,
+        "mem_bytes_per_dev": mem.get("argument_bytes"),
+    }
+    return row
+
+
+def table(mesh: str = "pod1", suffix: str = "") -> list[dict]:
+    rows = []
+    for rec in load_cells(mesh, suffix):
+        r = roofline_row(rec)
+        if r:
+            rows.append(r)
+    return rows
+
+
+def render_markdown(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | chips | compute_s | mem_s(ub) | mem_s(struct) | "
+           "coll_s | dominant | useful | frac(ub) | frac(struct) |\n|"
+           + "---|" * 11)
+    lines = [hdr]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['chips']} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['memory_lower_s']:.3e} "
+            f"| {r['collective_s']:.3e} | {r['dominant'].split('_')[0]} "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} "
+            f"| {r['roofline_fraction_struct']:.3f} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    rows = table("pod1")
+    os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, "roofline.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    print(render_markdown(rows))
+    # skipped cells, for the record
+    for rec in load_cells("pod1"):
+        if rec.get("status") == "skipped":
+            print(f"skipped: {rec['arch']} × {rec['shape']} — {rec['reason']}")
+
+
+if __name__ == "__main__":
+    main()

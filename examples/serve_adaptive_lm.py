@@ -1,0 +1,65 @@
+"""End-to-end serving driver (the paper is an inference paper, so the
+brief's end-to-end requirement is served inference with batched requests):
+a small LM behind the AdaptiveServer — batched prefill/decode, int8 KV cache
+option, Profile Manager switching precision as the energy budget drains.
+
+Run:  PYTHONPATH=src python examples/serve_adaptive_lm.py [--kv-bits 8]
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.core.energy import step_energy, activity_factor
+from repro.core.engine import AdaptiveEngine, QuantIndex
+from repro.core.manager import ProfileManager, ProfileStats
+from repro.core.profiles import paper_profiles
+from repro.models import transformer as T
+from repro.serving.engine import AdaptiveServer, Request, ServingConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--kv-bits", type=int, default=16, choices=[8, 16])
+    ap.add_argument("--requests", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = get_smoke("granite-3-2b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    names = T.quant_layer_names(cfg)
+    profs = paper_profiles(names, inner_layers=[])
+    engine = AdaptiveEngine(tuple(profs), QuantIndex(names),
+                            lambda p, br, b: T.train_loss(p, cfg, br, b))
+
+    # modeled per-inference energy per profile → manager policy inputs
+    t_est = 2.0 * T.param_count(params) / 197e12
+    stats = []
+    for p in profs:
+        a, w = next(iter(p.bits.values()))
+        acc = {8: 0.989, 4: 0.953}.get(w, 0.998)
+        stats.append(ProfileStats(
+            p.name, acc, step_energy(t_est, activity_factor(
+                min(a, 16), min(w, 16), min(w, 16) / 16)), t_est))
+    mgr = ProfileManager(stats, accuracy_target=0.985, accuracy_floor=0.95,
+                         budget_j=stats[0].energy_j * 80, low_energy=0.5)
+
+    srv = AdaptiveServer(cfg, params, engine,
+                         ServingConfig(slots=128, kv_bits=args.kv_bits,
+                                       max_batch=4), manager=mgr)
+    rng = np.random.default_rng(0)
+    reqs = [Request(tokens=rng.integers(0, cfg.vocab, int(n)).astype(np.int32),
+                    max_new=12, accuracy_critical=(i % 4 == 0))
+            for i, n in enumerate(rng.integers(4, 20, args.requests))]
+    results = srv.serve(reqs)
+    for i, r in enumerate(results):
+        print(f"req{i:02d}: {len(r['tokens'])} new tokens | "
+              f"profiles {sorted(set(r['profile_trace']))}")
+    print(f"\nkv_bits={args.kv_bits} (8 halves the decode memory-roofline term)"
+          f"\nenergy: {mgr.spent_j:.2e} J spent, "
+          f"{mgr.remaining_fraction()*100:.0f}% budget left, "
+          f"saver_mode={mgr._saver}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Fault-tolerant LM training driver: joint QAT over the merged profile
+family with checkpoint/restart. Kill it mid-run (Ctrl-C or SIGTERM) and
+re-launch — it resumes bit-exactly from the last committed checkpoint.
+
+Run:  PYTHONPATH=src python examples/train_restartable_lm.py \
+          --steps 60 --ckpt-dir /tmp/aqe_ckpt
+Scale note: the identical step function lowers on the 256/512-chip
+production mesh via ``python -m repro.launch.dryrun`` (deliverable e).
+"""
+import argparse
+import subprocess
+import sys
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    # thin veneer over the launcher so the example stays a single entry point
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--ckpt-dir", default="/tmp/aqe_ckpt")
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--grad-compression", action="store_true")
+    args = ap.parse_args()
+    argv = ["--arch", args.arch, "--steps", str(args.steps),
+            "--ckpt-dir", args.ckpt_dir]
+    if args.grad_compression:
+        argv.append("--grad-compression")
+    sys.argv = ["train"] + argv
+    train_main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""granite-3-2b — dense 40L d_model=2048 32H (GQA kv=8) d_ff=8192 vocab=49155,
+GQA, tied embeddings [hf:ibm-granite/granite-3.0-2b-base; hf]."""
+from .common import ModelConfig, smoke_of
+
+CONFIG = ModelConfig(
+    name="granite-3-2b", family="dense",
+    n_layers=40, d_model=2048, n_heads=32, n_kv=8, d_ff=8192, vocab=49155,
+    head_dim=64, rope_theta=1e4, tie_embeddings=True,
+)
+SMOKE = smoke_of(CONFIG)

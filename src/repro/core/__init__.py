@@ -1,0 +1,26 @@
+"""Core of the reproduction: the paper's contribution as composable JAX modules.
+
+- ``qtypes`` / ``quantizers`` — arbitrary-precision data approximation
+  (QONNX-style per-layer ``Ax-Wy``), QAT fake-quant + native int carriers.
+- ``profiles`` / ``merge`` / ``engine`` — computation approximation: execution
+  profiles merged into a single runtime-switchable engine (MDC analogue).
+- ``manager`` / ``energy`` — the self-adaptive Profile Manager on a documented
+  roofline-derived energy model.
+"""
+from .qtypes import QuantSpec, FLOAT_SPEC, qrange, compute_scale, pack_int4, unpack_int4
+from .quantizers import fake_quant, fake_quant_dynamic, quantize_native, dequantize, QTensor
+from .profiles import Profile, profile_table, parse_profile_string, paper_profiles, FLOAT_BITS
+from .merge import MergePlan, merge_plan
+from .engine import AdaptiveEngine, QuantIndex, switch_images
+from .manager import ProfileManager, ProfileStats, battery_simulation
+from .energy import HWSpec, TPU_V5E, roofline_terms, step_energy, activity_factor
+
+__all__ = [
+    "QuantSpec", "FLOAT_SPEC", "qrange", "compute_scale", "pack_int4", "unpack_int4",
+    "fake_quant", "fake_quant_dynamic", "quantize_native", "dequantize", "QTensor",
+    "Profile", "profile_table", "parse_profile_string", "paper_profiles", "FLOAT_BITS",
+    "MergePlan", "merge_plan",
+    "AdaptiveEngine", "QuantIndex", "switch_images",
+    "ProfileManager", "ProfileStats", "battery_simulation",
+    "HWSpec", "TPU_V5E", "roofline_terms", "step_energy", "activity_factor",
+]

@@ -1,0 +1,114 @@
+"""Adaptive inference engine — one compiled executable, many execution profiles.
+
+The FPGA flow's adaptive engine is a coarse-grained-reconfigurable datapath:
+all profiles are synthesized *once* into merged hardware, and a configuration
+word selects the active profile at runtime. The TPU analogue (DESIGN §8.1):
+
+* the full profile family is traced/compiled **once**;
+* the per-layer precision of the active profile is *data* — a row of the
+  ``[P, L, 2]`` bits table gathered with the traced scalar ``profile_id``;
+* layers whose precision coincides across profiles are automatically shared
+  (same code path, same weights); layers that differ see different bits values
+  (fake-quant path) or a ``lax.switch`` over pre-quantized weight images
+  (native serving path).
+
+Switching profiles therefore costs one scalar — no re-jit, no weight reload —
+mirroring MDC reconfiguration.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .merge import MergePlan, merge_plan
+from .profiles import Profile, profile_table
+
+__all__ = ["QuantIndex", "AdaptiveEngine", "switch_images"]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantIndex:
+    """Static layer-name → row-index map shared by a model and its engine.
+
+    Models capture this statically (closure/aux data) and use it to pull their
+    per-layer bits out of the traced bits row that the engine feeds them.
+    """
+
+    layer_names: tuple[str, ...]
+
+    def __post_init__(self):
+        object.__setattr__(self, "_idx", {n: i for i, n in enumerate(self.layer_names)})
+
+    def index(self, name: str) -> int:
+        return self._idx[name]
+
+    def a_bits(self, bits_row: jax.Array, name: str) -> jax.Array:
+        return bits_row[self._idx[name], 0]
+
+    def w_bits(self, bits_row: jax.Array, name: str) -> jax.Array:
+        return bits_row[self._idx[name], 1]
+
+    def gather(self, bits_row: jax.Array, names: Sequence[str]) -> jax.Array:
+        """Stack bits for ``names`` → ``[len(names), 2]`` (scan-over-layers leaf)."""
+        ids = jnp.asarray([self._idx[n] for n in names], jnp.int32)
+        return bits_row[ids]
+
+
+@dataclasses.dataclass(frozen=True, eq=False)  # eq=False: hash by identity (jit key)
+class AdaptiveEngine:
+    """Merged multi-profile executor around a quantization-aware ``apply_fn``.
+
+    ``apply_fn(params, bits_row, *inputs)`` must consume per-layer precision
+    exclusively through ``bits_row`` (shape ``[L, 2]``, int32) — typically via
+    :class:`QuantIndex` — so that the engine stays a single traceable program.
+    """
+
+    profiles: tuple[Profile, ...]
+    index: QuantIndex
+    apply_fn: Callable[..., Any]
+
+    def __post_init__(self):
+        object.__setattr__(self, "table", profile_table(self.profiles, self.index.layer_names))
+        object.__setattr__(self, "plan", merge_plan(self.profiles))
+
+    @property
+    def profile_names(self) -> tuple[str, ...]:
+        return tuple(p.name for p in self.profiles)
+
+    def profile_id(self, name: str) -> int:
+        return self.profile_names.index(name)
+
+    def bits_row(self, profile_id: jax.Array | int) -> jax.Array:
+        return jnp.asarray(self.table)[jnp.asarray(profile_id, jnp.int32)]
+
+    def __call__(self, params, profile_id: jax.Array | int, *inputs, **kw):
+        return self.apply_fn(params, self.bits_row(profile_id), *inputs, **kw)
+
+    def merge_report(self, weight_shapes: Mapping[str, tuple[int, ...]] | None = None) -> dict:
+        plan: MergePlan = self.plan
+        rep = {
+            "profiles": list(plan.profiles),
+            "n_layers": len(plan.layer_names),
+            "shared_layers": list(plan.shared_layers),
+            "switched_layers": list(plan.switched_layers),
+            "sharing_ratio": plan.sharing_ratio(),
+        }
+        if weight_shapes is not None:
+            rep["resources"] = plan.resource_bytes(weight_shapes)
+        return rep
+
+
+def switch_images(selector: jax.Array, images: Sequence[Any], fn: Callable[[Any], Any]):
+    """Native-path runtime selection among pre-quantized weight images.
+
+    ``images`` holds one entry per *distinct* spec of a switched layer (the
+    deduplicated "actors" of the MDC merge); ``selector`` is the traced index
+    produced from ``profile_id`` via the merge plan's selector row. For a
+    single image (shared layer) the switch disappears — mirroring MDC sharing.
+    """
+    if len(images) == 1:
+        return fn(images[0])
+    return jax.lax.switch(selector, [lambda im=im: fn(im) for im in images])

@@ -1,0 +1,114 @@
+"""Profile Manager — the paper's runtime self-adaptive controller (§4.4, Fig. 4).
+
+Monitors the remaining energy budget and the application accuracy constraint,
+and selects the execution profile for the next inference(s). Mirrors the
+CERBERO-style monitor→decide→act loop the paper references: the *engine*
+executes whatever ``profile_id`` the manager hands it (one scalar, no
+recompilation), the *manager* owns the policy.
+
+Also provides :func:`battery_simulation`, the Fig. 4 right-hand-side experiment
+(10 Ah budget → battery lifetime / number of classifications, adaptive vs
+non-adaptive).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+__all__ = ["ProfileStats", "ProfileManager", "battery_simulation"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ProfileStats:
+    """Calibrated characteristics of one profile (from QAT eval + energy model)."""
+
+    name: str
+    accuracy: float          # validation accuracy in [0,1]
+    energy_j: float          # modeled J / inference (core/energy.py)
+    latency_s: float         # modeled s / inference
+
+
+@dataclasses.dataclass
+class ProfileManager:
+    """Energy-aware profile selection with hysteresis.
+
+    Policy (paper §4.4): run the cheapest profile that satisfies the accuracy
+    requirement; when the remaining energy fraction drops below ``low_energy``,
+    relax the requirement to ``accuracy_floor`` (the "battery saver" regime)
+    unless the caller flags the request accuracy-critical. Hysteresis keeps the
+    selection from oscillating around the threshold.
+    """
+
+    profiles: Sequence[ProfileStats]
+    accuracy_target: float
+    accuracy_floor: float
+    budget_j: float
+    low_energy: float = 0.2
+    hysteresis: float = 0.05
+
+    spent_j: float = 0.0
+    _saver: bool = False
+
+    def remaining_fraction(self) -> float:
+        return max(0.0, 1.0 - self.spent_j / self.budget_j) if self.budget_j else 0.0
+
+    def _eligible(self, floor: float) -> list[tuple[int, ProfileStats]]:
+        ok = [(i, p) for i, p in enumerate(self.profiles) if p.accuracy >= floor]
+        # If nothing meets the floor, degrade gracefully to the most accurate.
+        return ok or [max(enumerate(self.profiles), key=lambda ip: ip[1].accuracy)]
+
+    def select(self, accuracy_critical: bool = False) -> int:
+        """Return the profile index to run next (the engine's ``profile_id``)."""
+        rem = self.remaining_fraction()
+        if self._saver and rem > self.low_energy + self.hysteresis:
+            self._saver = False
+        elif not self._saver and rem < self.low_energy:
+            self._saver = True
+        floor = self.accuracy_target if (accuracy_critical or not self._saver) \
+            else self.accuracy_floor
+        cand = self._eligible(floor)
+        idx, _ = min(cand, key=lambda ip: ip[1].energy_j)
+        return idx
+
+    def account(self, profile_idx: int, n_inferences: int = 1) -> None:
+        self.spent_j += self.profiles[profile_idx].energy_j * n_inferences
+
+    def exhausted(self) -> bool:
+        return self.spent_j >= self.budget_j
+
+
+def battery_simulation(profiles: Sequence[ProfileStats], budget_j: float,
+                       accuracy_target: float, accuracy_floor: float,
+                       fixed_profile: int | None = None,
+                       critical_every: int = 0,
+                       max_steps: int = 100_000_000) -> dict:
+    """Run inferences until the budget is gone (paper Fig. 4, right).
+
+    ``fixed_profile`` simulates the non-adaptive engine (always that profile);
+    otherwise the :class:`ProfileManager` policy runs. ``critical_every`` marks
+    every k-th classification accuracy-critical (the paper's "critical
+    circumstances"). Returns classifications executed, mean accuracy, and the
+    battery lifetime in engine-seconds.
+    """
+    mgr = ProfileManager(profiles, accuracy_target, accuracy_floor, budget_j)
+    n = 0
+    acc_sum = 0.0
+    lifetime_s = 0.0
+    usage = [0] * len(profiles)
+    while not mgr.exhausted() and n < max_steps:
+        if fixed_profile is not None:
+            idx = fixed_profile
+        else:
+            critical = critical_every > 0 and (n % critical_every == 0)
+            idx = mgr.select(accuracy_critical=critical)
+        mgr.account(idx)
+        usage[idx] += 1
+        acc_sum += profiles[idx].accuracy
+        lifetime_s += profiles[idx].latency_s
+        n += 1
+    return {
+        "classifications": n,
+        "mean_accuracy": acc_sum / max(1, n),
+        "lifetime_s": lifetime_s,
+        "profile_usage": {p.name: u for p, u in zip(profiles, usage)},
+    }

@@ -1,0 +1,177 @@
+"""Quantization types — the framework analogue of QONNX arbitrary-precision datatypes.
+
+The paper expresses per-layer precision as Vitis-HLS ``ap_fixed<W,I>`` fixed-point
+types carried in a QONNX graph.  On TPU the hardware-aligned carriers are int8 /
+int4 (+ bf16 compute), so we express an arbitrary bit-width ``b`` as an integer
+grid of ``2**b`` levels held inside the narrowest carrier that fits, with either
+
+* a **power-of-two scale** (``po2_scale=True``) — bit-exact with fixed point,
+  the paper-faithful mode, or
+* a float (optionally per-channel) scale — the TPU-native extension used by the
+  beyond-paper optimized paths.
+
+``QuantSpec`` is hashable and static (pytree-aux data); the tensors derived from
+it (scales, packed weights) are ordinary pytree leaves.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "QuantSpec",
+    "qrange",
+    "compute_scale",
+    "pack_int4",
+    "unpack_int4",
+    "carrier_dtype",
+    "FLOAT_SPEC",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Static description of one quantized datatype (the ``Ax``/``Wy`` of the paper).
+
+    Attributes:
+      bits: total bit width (1..16). ``bits >= 17`` (or ``bits is None``) means
+        "not quantized" (float passthrough).
+      signed: two's-complement signed grid if True.
+      symmetric: if True the grid is ±(2**(b-1)-1) (no asymmetric zero-point);
+        if False, the full two's-complement range [-2**(b-1), 2**(b-1)-1] is
+        used — this is the exact value set of ``ap_fixed`` and is the default
+        for the paper-faithful po2 mode.
+      po2_scale: constrain the scale to a power of two (fixed-point faithful).
+      per_channel: one scale per output channel (weights only).
+      channel_axis: axis holding channels when ``per_channel``.
+      stochastic: use stochastic rounding when (fake-)quantizing — used by the
+        int8 gradient-compression path, never by inference.
+    """
+
+    bits: Optional[int] = 8
+    signed: bool = True
+    symmetric: bool = False
+    po2_scale: bool = True
+    per_channel: bool = False
+    channel_axis: int = -1
+    stochastic: bool = False
+
+    @property
+    def is_float(self) -> bool:
+        return self.bits is None or self.bits >= 17
+
+    def __str__(self) -> str:  # e.g. "i8(po2)" / "i4/ch" / "f"
+        if self.is_float:
+            return "f"
+        tags = []
+        if self.po2_scale:
+            tags.append("po2")
+        if self.per_channel:
+            tags.append("ch")
+        if self.symmetric:
+            tags.append("sym")
+        t = ",".join(tags)
+        return f"{'i' if self.signed else 'u'}{self.bits}" + (f"({t})" if t else "")
+
+    def with_(self, **kw) -> "QuantSpec":
+        return dataclasses.replace(self, **kw)
+
+
+FLOAT_SPEC = QuantSpec(bits=None)
+
+
+def qrange(spec: QuantSpec) -> tuple[int, int]:
+    """(qmin, qmax) integer grid bounds for a spec."""
+    assert not spec.is_float
+    b = spec.bits
+    if spec.signed:
+        if spec.symmetric:
+            return -(2 ** (b - 1) - 1), 2 ** (b - 1) - 1
+        return -(2 ** (b - 1)), 2 ** (b - 1) - 1
+    return 0, 2**b - 1
+
+
+def qrange_dynamic(bits: jax.Array, signed: bool = True, symmetric: bool = False):
+    """qmin/qmax when ``bits`` is a *traced* array (spec-as-data, see DESIGN §8.2).
+
+    Enables per-layer bit-widths inside ``lax.scan`` over stacked layers: the
+    bits value rides along as a scanned leaf instead of switching code paths.
+    """
+    bits = bits.astype(jnp.float32)
+    if signed:
+        qmax = jnp.exp2(bits - 1.0) - 1.0
+        qmin = -(qmax + (0.0 if symmetric else 1.0))
+    else:
+        qmax = jnp.exp2(bits) - 1.0
+        qmin = jnp.zeros_like(qmax)
+    return qmin, qmax
+
+
+def _reduce_axes(x: jax.Array, spec: QuantSpec) -> tuple[int, ...]:
+    if not spec.per_channel:
+        return tuple(range(x.ndim))
+    ax = spec.channel_axis % x.ndim
+    return tuple(a for a in range(x.ndim) if a != ax)
+
+
+def compute_scale(x: jax.Array, spec: QuantSpec, eps: float = 1e-9) -> jax.Array:
+    """Calibrate a scale from the max-abs of ``x`` (per-tensor or per-channel).
+
+    po2 mode rounds the scale *up* to the next power of two so the grid always
+    covers the observed range (fixed-point semantics: widen the integer part).
+    """
+    assert not spec.is_float
+    qmin, qmax = qrange(spec)
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=_reduce_axes(x, spec), keepdims=spec.per_channel)
+    amax = jnp.maximum(amax, eps)
+    denom = float(max(qmax, -qmin))
+    scale = amax / denom
+    if spec.po2_scale:
+        scale = jnp.exp2(jnp.ceil(jnp.log2(scale)))
+    return scale
+
+
+def carrier_dtype(bits: int) -> jnp.dtype:
+    """Narrowest storage dtype for a native-quantized tensor of width ``bits``."""
+    if bits <= 8:
+        return jnp.int8  # int4 values are stored packed 2-per-int8 (see pack_int4)
+    return jnp.int16
+
+
+def pack_int4(q: jax.Array) -> jax.Array:
+    """Pack signed int4 values (int8-carried, in [-8, 7]) two-per-byte.
+
+    The last axis must be even. Low nibble = even index, high nibble = odd.
+    This is the storage layout the Pallas kernel unpacks in VMEM.
+    """
+    assert q.shape[-1] % 2 == 0, "pack_int4 needs an even trailing axis"
+    q = q.astype(jnp.int8)
+    lo = q[..., 0::2] & 0x0F
+    hi = q[..., 1::2] & 0x0F
+    return (lo | (hi << 4)).astype(jnp.int8)
+
+
+def unpack_int4(p: jax.Array) -> jax.Array:
+    """Inverse of :func:`pack_int4` — returns int8-carried int4 values."""
+    p = p.astype(jnp.int8)
+    lo = (p << 4) >> 4          # arithmetic shift sign-extends the low nibble
+    hi = p >> 4                 # arithmetic shift sign-extends the high nibble
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*p.shape[:-1], p.shape[-1] * 2)
+
+
+def nbytes_of(shape: tuple[int, ...], spec: QuantSpec) -> int:
+    """Storage bytes for a native-quantized tensor (int4 counts 0.5 B/elt)."""
+    n = int(np.prod(shape))
+    if spec.is_float:
+        return n * 2  # bf16 reference storage
+    if spec.bits <= 4:
+        return (n + 1) // 2
+    if spec.bits <= 8:
+        return n
+    return n * 2

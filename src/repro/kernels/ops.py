@@ -1,0 +1,101 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``qmatmul`` is the deployment entry point used by ``models.layers.QLinear`` in
+native mode: it consumes a :class:`repro.core.quantizers.QTensor`, handles
+padding to MXU-aligned block multiples, broadcasts scalar scales, auto-selects
+``interpret=True`` off-TPU (this container), and exposes a ``custom_vjp`` so a
+frozen-quantized model can still be fine-tuned (gradient flows to activations
+only — weights are integer carriers).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantizers import QTensor
+from . import ref
+from .qmatmul import DEFAULT_BLOCKS, qmatmul_pallas
+
+__all__ = ["qmatmul", "qmatmul_qt"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _round_up(v: int, m: int) -> int:
+    return -(-v // m) * m
+
+
+def _pick_blocks(m: int, k: int, n: int) -> tuple[int, int, int]:
+    """Shrink default blocks for small problems; keep MXU alignment when big."""
+    bm, bk, bn = DEFAULT_BLOCKS
+    bm = min(bm, _round_up(m, 8))
+    bk = min(bk, _round_up(k, 128))
+    bn = min(bn, _round_up(n, 128))
+    return bm, bk, bn
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def qmatmul(x: jax.Array, w_q: jax.Array, scale: jax.Array,
+            bits: int = 8,
+            out_bits: int | None = None,
+            out_scale: float | None = None,
+            interpret: bool | None = None) -> jax.Array:
+    """``x[..., K] @ dequant(w_q)[K, N]`` via the Pallas kernel.
+
+    Leading dims of ``x`` are flattened to M. ``w_q`` int8 ``[K, N]`` (bits 5–8)
+    or packed int4 ``[K, N//2]`` (bits ≤ 4). ``scale`` scalar or ``[N]``.
+    """
+    return _qmatmul_impl(x, w_q, scale, bits, out_bits, out_scale, interpret)
+
+
+def _qmatmul_impl(x, w_q, scale, bits, out_bits, out_scale, interpret):
+    interp = (not _on_tpu()) if interpret is None else interpret
+    *lead, k = x.shape
+    m = int(np.prod(lead)) if lead else 1
+    n = w_q.shape[-1] * (2 if bits <= 4 else 1)
+    x2 = x.reshape(m, k)
+    scale_v = jnp.broadcast_to(jnp.asarray(scale, jnp.float32).reshape(-1), (n,))
+
+    bm, bk, bn = _pick_blocks(m, k, n)
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    x2 = jnp.pad(x2, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w_q, ((0, kp - k), (0, (np_ - n) // (2 if bits <= 4 else 1))))
+    sp = jnp.pad(scale_v, (0, np_ - n), constant_values=1.0)
+
+    y = qmatmul_pallas(x2, wp, sp, bits=bits, blocks=(bm, bk, bn),
+                       out_bits=out_bits, out_scale=out_scale,
+                       interpret=interp)
+    return y[:m, :n].reshape(*lead, n)
+
+
+def _qmatmul_fwd(x, w_q, scale, bits, out_bits, out_scale, interpret):
+    y = _qmatmul_impl(x, w_q, scale, bits, out_bits, out_scale, interpret)
+    return y, (x, w_q, scale)
+
+
+def _qmatmul_bwd(bits, out_bits, out_scale, interpret, res, g):
+    x, w_q, scale = res
+    w = ref.dequant_ref(w_q, jnp.broadcast_to(
+        jnp.asarray(scale, jnp.float32).reshape(-1),
+        (w_q.shape[-1] * (2 if bits <= 4 else 1),)), bits)
+    dx = jnp.einsum("...n,kn->...k", g.astype(jnp.float32), w).astype(x.dtype)
+    # Integer carriers / calibrated scales take no gradient (frozen weights).
+    dw = np.zeros(w_q.shape, jax.dtypes.float0)
+    ds = jnp.zeros_like(jnp.asarray(scale, jnp.float32))
+    return dx, dw, ds
+
+
+qmatmul.defvjp(_qmatmul_fwd, _qmatmul_bwd)
+
+
+def qmatmul_qt(x: jax.Array, qt: QTensor, *,
+               out_bits: int | None = None, out_scale: float | None = None,
+               interpret: bool | None = None) -> jax.Array:
+    """Convenience overload taking the :class:`QTensor` from ``quantize_native``."""
+    return qmatmul(x, qt.data, jnp.asarray(qt.scale, jnp.float32).reshape(-1),
+                   qt.bits, out_bits, out_scale, interpret)

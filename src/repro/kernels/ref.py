@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness contract).
+
+Every kernel in this package must match its oracle here to float tolerance
+across the shape/dtype sweeps in ``tests/test_kernels.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qtypes import unpack_int4
+
+__all__ = ["qmatmul_ref", "dequant_ref", "requant_ref", "qkv_attention_ref"]
+
+
+def dequant_ref(w_q: jax.Array, scale: jax.Array, bits: int) -> jax.Array:
+    """Dequantize an int8 carrier (packed two-per-byte when bits<=4) to f32.
+
+    ``scale`` broadcasts against the dequantized ``[K, N]``: scalar, ``[N]``
+    per-output-channel, or anything jnp-broadcastable.
+    """
+    q = unpack_int4(w_q) if bits <= 4 else w_q
+    return q.astype(jnp.float32) * jnp.asarray(scale, jnp.float32)
+
+
+def qmatmul_ref(x: jax.Array, w_q: jax.Array, scale: jax.Array, bits: int,
+                out_scale: jax.Array | None = None,
+                out_bits: int | None = None) -> jax.Array:
+    """Oracle for the fused dequant-matmul: ``x @ dequant(w)`` (+ fused requant).
+
+    Matches the kernel's numerics: x is cast to bf16 (MXU input precision),
+    the product accumulates in f32, optional static fixed-point requant of the
+    output (the paper's inter-layer activation-precision boundary).
+    """
+    w = dequant_ref(w_q, scale, bits).astype(jnp.bfloat16)
+    acc = jnp.dot(x.astype(jnp.bfloat16), w, preferred_element_type=jnp.float32)
+    if out_scale is not None:
+        assert out_bits is not None
+        acc = requant_ref(acc, out_scale, out_bits)
+    return acc
+
+
+def requant_ref(acc: jax.Array, out_scale: jax.Array, out_bits: int) -> jax.Array:
+    """Static fixed-point requant: clip(round(acc/s)) * s at ``out_bits``."""
+    qmax = 2.0 ** (out_bits - 1) - 1.0
+    qmin = -(2.0 ** (out_bits - 1))
+    s = jnp.asarray(out_scale, jnp.float32)
+    r = acc / s
+    q = jnp.clip(jnp.sign(r) * jnp.floor(jnp.abs(r) + 0.5), qmin, qmax)
+    return q * s
+
+
+def qkv_attention_ref(q: jax.Array, k_q: jax.Array, v_q: jax.Array,
+                      k_scale: jax.Array, v_scale: jax.Array) -> jax.Array:
+    """Oracle for int8-KV-cache attention (decode): softmax(q kᵀ)·v with
+    int8-quantized K/V dequantized on the fly.
+
+    Shapes: q ``[B, H, 1, D]``; k_q/v_q ``[B, H, S, D]`` int8; scales broadcast
+    (per-head ``[B, H, 1, 1]`` or scalar). Returns ``[B, H, 1, D]`` f32.
+    """
+    kf = k_q.astype(jnp.float32) * jnp.asarray(k_scale, jnp.float32)
+    vf = v_q.astype(jnp.float32) * jnp.asarray(v_scale, jnp.float32)
+    scores = jnp.einsum("bhqd,bhsd->bhqs", q.astype(jnp.float32), kf)
+    scores = scores / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqs,bhsd->bhqd", p, vf)
+
+
+def aquant_ref(x: jax.Array, bits: int = 8, po2: bool = True) -> jax.Array:
+    """Oracle for the fused activation-quantization kernel: dynamic max-abs
+    scale, po2 rounding, signed non-symmetric grid — fake_quant numerics."""
+    from repro.core.qtypes import QuantSpec
+    from repro.core.quantizers import fake_quant
+    return fake_quant(x, QuantSpec(bits=bits, po2_scale=po2))

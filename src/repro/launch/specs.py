@@ -1,0 +1,140 @@
+"""Abstract input/parameter specs for the dry-run (ShapeDtypeStruct only).
+
+Everything here is allocation-free: parameter trees come from
+``jax.eval_shape`` over the real initializers, batches are SDS stand-ins with
+the exact shapes/dtypes of the data pipeline, and the step functions are the
+*same* functions the real launcher jits (no dry-run-only forks).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.common import Shape
+from repro.core.engine import AdaptiveEngine, QuantIndex
+from repro.core.profiles import paper_profiles
+from repro.models import transformer as T
+from repro.models.native import to_native
+from repro.optim.adam import AdamConfig, adam_init, adam_update
+
+__all__ = ["build_engine", "adapt_config", "input_specs", "abstract_params",
+           "abstract_opt", "abstract_caches", "make_train_step_fn",
+           "make_prefill_fn", "make_decode_fn", "KV_SLOTS"]
+
+KV_SLOTS = {"decode_32k": 32_768, "long_500k": 524_288, "prefill_32k": 32_768}
+
+
+def adapt_config(cfg: T.ModelConfig, shape: Shape, dp: int) -> T.ModelConfig:
+    """Shape-dependent static knobs: align MoE dispatch groups with the DP
+    degree, bound the loss chunk by the sequence."""
+    upd: dict[str, Any] = {}
+    if cfg.moe is not None:
+        tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+        g = dp if tokens % dp == 0 else math.gcd(cfg.moe.groups, tokens)
+        upd["moe"] = dataclasses.replace(cfg.moe, groups=max(1, g))
+    if shape.seq_len < cfg.loss_chunk:
+        upd["loss_chunk"] = shape.seq_len
+    return dataclasses.replace(cfg, **upd) if upd else cfg
+
+
+def build_engine(cfg: T.ModelConfig) -> AdaptiveEngine:
+    """Merged adaptive engine over the paper's profile family for this arch.
+
+    ``Mixed`` drops the middle third of the layers to A4-W4 — the LM analogue
+    of the paper's 'inner convolutional layer at A4-W4' (§4.3)."""
+    names = T.quant_layer_names(cfg)
+    lo, hi = cfg.n_layers // 3, 2 * cfg.n_layers // 3
+    inner = [n for n in names
+             if n.startswith("L") and lo <= int(n[1:].split(".")[0]) < hi]
+    profs = paper_profiles(names, inner_layers=inner)
+    idx = QuantIndex(names)
+    return AdaptiveEngine(tuple(profs), idx,
+                          lambda p, br, b: T.train_loss(p, cfg, br, b))
+
+
+def input_specs(cfg: T.ModelConfig, shape: Shape) -> dict:
+    """SDS stand-ins for the step inputs of this (arch × shape) cell."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        if cfg.frontend == "audio":
+            batch = {"features": jax.ShapeDtypeStruct((b, s, cfg.feature_dim),
+                                                      jnp.float32),
+                     "labels": jax.ShapeDtypeStruct((b, s), i32)}
+        elif cfg.frontend == "vision":
+            batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+                     "patch_embeds": jax.ShapeDtypeStruct(
+                         (b, cfg.n_patches, cfg.d_model), jnp.float32),
+                     "labels": jax.ShapeDtypeStruct((b, s), i32)}
+        else:
+            batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+                     "labels": jax.ShapeDtypeStruct((b, s), i32)}
+        if shape.kind == "prefill":
+            batch.pop("labels")
+        return batch
+    # decode: one new token against a seq_len-deep cache
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), i32),
+            "pos": jax.ShapeDtypeStruct((b,), i32)}
+
+
+def abstract_params(cfg: T.ModelConfig, *, native_bits: int | None = None):
+    def build():
+        p = T.init_params(cfg, jax.random.PRNGKey(0))
+        if native_bits is not None:
+            p = to_native(p, native_bits)
+        return p
+    return jax.eval_shape(build)
+
+
+def abstract_opt(params_sds):
+    return jax.eval_shape(adam_init, params_sds)
+
+
+def abstract_caches(cfg: T.ModelConfig, shape: Shape, *, kv_bits: int = 16):
+    slots = KV_SLOTS.get(shape.name, shape.seq_len)
+    return jax.eval_shape(
+        lambda: T.init_caches(cfg, shape.global_batch, slots, kv_bits=kv_bits))
+
+
+# ---------------------------------------------------------------------------
+# step functions (shared by dry-run and real launchers)
+# ---------------------------------------------------------------------------
+
+def make_train_step_fn(cfg: T.ModelConfig, engine: AdaptiveEngine,
+                       adam_cfg: AdamConfig = AdamConfig()) -> Callable:
+    """(params, opt, profile_id, batch) → (params, opt, metrics)."""
+
+    def step(params, opt, profile_id, batch):
+        def loss_fn(p):
+            return engine(p, profile_id, batch)
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt, opt_m = adam_update(adam_cfg, grads, opt, params)
+        return params, opt, {"loss": loss, **metrics, **opt_m}
+
+    return step
+
+
+def make_prefill_fn(cfg: T.ModelConfig, engine: AdaptiveEngine) -> Callable:
+    table = engine.table
+
+    def step(params, profile_id, batch):
+        bits = jnp.asarray(table)[profile_id]
+        hidden, _, _ = T.forward(params, cfg, bits, batch)
+        return T._logits(cfg, params, bits, hidden[:, -1:])[:, 0]
+
+    return step
+
+
+def make_decode_fn(cfg: T.ModelConfig, engine: AdaptiveEngine) -> Callable:
+    table = engine.table
+
+    def step(params, profile_id, tokens, pos, caches):
+        bits = jnp.asarray(table)[profile_id]
+        return T.decode_step(params, cfg, bits, tokens, pos, caches)
+
+    return step

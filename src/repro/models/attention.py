@@ -1,0 +1,290 @@
+"""Attention: GQA with blockwise online-softmax (train/prefill) and cached decode.
+
+Design notes (DESIGN §5):
+
+* **Blockwise train/prefill** — ``lax.scan`` over KV blocks with an online
+  softmax; the full ``[S, S]`` score matrix never materializes, so 32k-token
+  prefill fits the per-device memory budget and the HLO stays compact for the
+  multi-pod dry-run.
+* **Window-as-data** — the causal window rides in as a traced int32 (`>= S`
+  means full attention), so hybrid stacks (Hymba) mix SWA/global layers inside
+  one ``lax.scan`` over layers, and the merged adaptive engine stays
+  branch-free.
+* **Decode** — one-token attention against a (optionally int8-quantized) KV
+  cache; ring buffer for SWA. The Pallas ``qkv_attention`` kernel is the TPU
+  deployment path for the int8 cache; the jnp path here has identical
+  numerics/roofline and is what the dry-run lowers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .pshard import constrain
+
+__all__ = ["gqa_attention", "swa_attention", "decode_attention", "KVCache",
+           "init_kv_cache", "update_kv_cache"]
+
+NEG_INF = -1e30
+
+
+def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True,
+                  window: jax.Array | int | None = None,
+                  q_offset: jax.Array | int = 0,
+                  block_k: int = 512,
+                  unroll: bool = False) -> jax.Array:
+    """Blockwise GQA attention.
+
+    q ``[B, S, H, D]``; k/v ``[B, Skv, Hkv, D]``; returns ``[B, S, H, D]``.
+    ``window``: traced or static int; positions further back than ``window``
+    are masked (full attention when ``window >= Skv``). ``q_offset`` shifts
+    query positions (prefill continuation).
+    """
+    b, s, h, d = q.shape
+    _, skv, hkv, _ = k.shape
+    assert h % hkv == 0
+    hg = h // hkv
+    bk = min(block_k, skv)
+    # pad kv to a block multiple; padded keys are masked by the index check
+    pad = (-skv) % bk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_blk = (skv + pad) // bk
+
+    # bf16 until the score einsum (f32 accumulation preserved via
+    # preferred_element_type): the S-resharding permutes then move half the
+    # bytes (§Perf iteration 3)
+    qh = (q * (d ** -0.5)).astype(q.dtype).reshape(b, s, hkv, hg, d)
+    qh = qh.transpose(0, 2, 3, 1, 4)                     # [B, Hkv, Hg, S, D]
+    # sequence-sharded attention compute: S over "tp" (GQA head counts rarely
+    # divide the model axis); KV replicated across the s-shards (§Perf iter 1)
+    qh = constrain(qh, "dp", None, None, "tp", None)
+    kb = k.transpose(0, 2, 1, 3).reshape(b, hkv, n_blk, bk, d)
+    vb = v.transpose(0, 2, 1, 3).reshape(b, hkv, n_blk, bk, d)
+    kb = constrain(kb, "dp", None, None, None, None)
+    vb = constrain(vb, "dp", None, None, None, None)
+
+    win = jnp.asarray(skv + s if window is None else window, jnp.int32)
+    qpos = jnp.asarray(q_offset, jnp.int32) + jnp.arange(s, dtype=jnp.int32)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kblk, vblk, j0 = blk                              # [B,Hkv,bk,D], scalar
+        scores = jnp.einsum("bkgsd,bkud->bkgsu", qh, kblk.astype(qh.dtype),
+                            preferred_element_type=jnp.float32)
+        jpos = j0 + jnp.arange(bk, dtype=jnp.int32)       # global kv indices
+        valid = jpos[None, :] < skv                       # [1, bk] (pad mask)
+        if causal:
+            keep = (jpos[None, :] <= qpos[:, None]) & \
+                   (qpos[:, None] - jpos[None, :] < win) & valid
+        else:
+            keep = jnp.broadcast_to(valid, (s, bk))
+        scores = jnp.where(keep[None, None, None], scores, NEG_INF)
+        m_new = jnp.maximum(m, scores.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(scores - m_new)
+        l_new = l * alpha + p.sum(axis=-1, keepdims=True)
+        acc_new = acc * alpha + jnp.einsum("bkgsu,bkud->bkgsd", p,
+                                           vblk.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = constrain(jnp.full((b, hkv, hg, s, 1), NEG_INF, jnp.float32),
+                   "dp", None, None, "tp", None)
+    l0 = constrain(jnp.zeros((b, hkv, hg, s, 1), jnp.float32),
+                   "dp", None, None, "tp", None)
+    a0 = constrain(jnp.zeros((b, hkv, hg, s, d), jnp.float32),
+                   "dp", None, None, "tp", None)
+    j0s = jnp.arange(n_blk, dtype=jnp.int32) * bk
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (kb.transpose(2, 0, 1, 3, 4), vb.transpose(2, 0, 1, 3, 4), j0s),
+        unroll=n_blk if unroll else 1)
+    # cast before the transpose/reshape so the S→residual reshard moves bf16
+    out = (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, s, h, d)
+
+
+def swa_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  window: int, block_q: int = 512,
+                  q_offset: int = 0) -> jax.Array:
+    """Sliding-window attention with **block skipping** (§Perf iteration):
+    each q block only touches the ``window + block_q`` keys it can see, so
+    FLOPs scale with ``S·(window+bq)`` instead of ``S²`` (21× at S=32k,
+    w=1024). Requires a *static* window (architectural, not profile-driven).
+
+    q ``[B, S, H, D]``, k/v ``[B, S, Hkv, D]`` (self-attention lengths equal).
+    """
+    b, s, h, d = q.shape
+    _, skv, hkv, _ = k.shape
+    assert s == skv and q_offset == 0, "swa path is self-attention prefill"
+    hg = h // hkv
+    bq = min(block_q, s)
+    pad_q = (-s) % bq
+    nq = (s + pad_q) // bq
+    w = window
+    width = w + bq                     # static kv slice per q block
+
+    qh = (q.astype(jnp.float32) * d ** -0.5)
+    if pad_q:
+        qh = jnp.pad(qh, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    qh = qh.reshape(b, nq, bq, hkv, hg, d).transpose(1, 0, 3, 4, 2, 5)
+    # [nq, B, Hkv, Hg, bq, D]
+    qh = constrain(qh, None, "dp", None, None, "tp", None)
+
+    # left-pad keys by `w` so block i's visible range starts at index i·bq
+    kp = jnp.pad(k.astype(jnp.float32), ((0, 0), (w, pad_q), (0, 0), (0, 0)))
+    vp = jnp.pad(v.astype(jnp.float32), ((0, 0), (w, pad_q), (0, 0), (0, 0)))
+    kp = constrain(kp, "dp", None, None, None)
+    vp = constrain(vp, "dp", None, None, None)
+
+    def one_block(i, q_blk):
+        ks = jax.lax.dynamic_slice_in_dim(kp, i * bq, width, axis=1)
+        vs = jax.lax.dynamic_slice_in_dim(vp, i * bq, width, axis=1)
+        ks = ks.transpose(0, 2, 1, 3)                    # [B, Hkv, W, D]
+        vs = vs.transpose(0, 2, 1, 3)
+        scores = jnp.einsum("bkgsd,bkud->bkgsu", q_blk, ks)
+        qpos = i * bq + jnp.arange(bq, dtype=jnp.int32)  # global q indices
+        jpos = i * bq - w + jnp.arange(width, dtype=jnp.int32)
+        keep = ((jpos[None, :] >= 0) & (jpos[None, :] <= qpos[:, None])
+                & (qpos[:, None] - jpos[None, :] < w)
+                & (qpos[:, None] < s) & (jpos[None, :] < s))
+        scores = jnp.where(keep[None, None, None], scores, NEG_INF)
+        p = jax.nn.softmax(scores, axis=-1)
+        return jnp.einsum("bkgsu,bkud->bkgsd", p, vs)
+
+    out = jax.lax.map(lambda iq: one_block(iq[0], iq[1]),
+                      (jnp.arange(nq, dtype=jnp.int32), qh))
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(b, (s + pad_q), h, d)
+    return out[:, :s].astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode path with KV cache (ring buffer for SWA, optional int8 storage)
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    """Per-layer-stacked KV cache.
+
+    ``k``/``v``: ``[B, S_slots, Hkv, D]`` — bf16; int8 when 8-bit quantized;
+    int4 packs two values per byte along D (``[B, S_slots, Hkv, D/2]``,
+    ``bits`` static field = 4). ``k_scale``/``v_scale`` are per ``[B, Hkv]``
+    dequant scales. ``token_idx``: ``[B, S_slots]`` absolute token index per
+    slot, −1 = empty (doubles as the ring-buffer validity mask).
+    """
+
+    k: jax.Array
+    v: jax.Array
+    k_scale: jax.Array
+    v_scale: jax.Array
+    token_idx: jax.Array
+    bits: int = 16  # static (pytree aux)
+
+
+# `bits` must be aux data (static), not a traced leaf; keyed registration
+# keeps the "kv/k"-style paths the sharding rules match on.
+jax.tree_util.register_pytree_with_keys(
+    KVCache,
+    lambda c: ([(jax.tree_util.GetAttrKey(n), getattr(c, n))
+                for n in ("k", "v", "k_scale", "v_scale", "token_idx")],
+               (c.bits,)),
+    lambda aux, ch: KVCache(*ch, bits=aux[0]),
+)
+
+
+def init_kv_cache(batch: int, slots: int, hkv: int, d: int, *,
+                  bits: int = 16, dtype=jnp.bfloat16) -> KVCache:
+    if bits == 4:
+        assert d % 2 == 0
+        shape = (batch, slots, hkv, d // 2)
+        cdt = jnp.int8
+    else:
+        shape = (batch, slots, hkv, d)
+        cdt = jnp.int8 if bits == 8 else dtype
+    return KVCache(
+        k=jnp.zeros(shape, cdt),
+        v=jnp.zeros(shape, cdt),
+        k_scale=jnp.ones((batch, hkv), jnp.float32),
+        v_scale=jnp.ones((batch, hkv), jnp.float32),
+        token_idx=jnp.full((batch, slots), -1, jnp.int32),
+        bits=bits,
+    )
+
+
+def _quantize_kv(x: jax.Array, scale: jax.Array, bits: int) -> jax.Array:
+    """Quantize new K/V rows onto the cache's running per-(B,Hkv) int grid
+    (int4 packed two-per-byte along D)."""
+    from repro.core.qtypes import pack_int4
+    s = scale[:, None, :, None]
+    qmax = 127 if bits == 8 else 7
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s), -qmax, qmax)
+    if bits == 4:
+        return pack_int4(q.astype(jnp.int8))
+    return q.astype(jnp.int8)
+
+
+def _dequantize_kv(data: jax.Array, scale: jax.Array, bits: int) -> jax.Array:
+    from repro.core.qtypes import unpack_int4
+    q = unpack_int4(data) if bits == 4 else data
+    return q.astype(jnp.float32) * scale[:, None, :, None]
+
+
+def update_kv_cache(cache: KVCache, k_new: jax.Array, v_new: jax.Array,
+                    pos: jax.Array) -> KVCache:
+    """Write one decode step (``k_new [B, 1, Hkv, D]``) at ring slot
+    ``pos % slots``; updates running scales for int caches on the fly."""
+    b, slots = cache.token_idx.shape
+    slot = (pos % slots).astype(jnp.int32)                 # [B]
+    if cache.bits in (4, 8):
+        qmax = 127.0 if cache.bits == 8 else 7.0
+        # running max-abs scale (monotone → previously written rows stay valid)
+        k_amax = jnp.max(jnp.abs(k_new.astype(jnp.float32)), axis=(1, 3))
+        v_amax = jnp.max(jnp.abs(v_new.astype(jnp.float32)), axis=(1, 3))
+        k_scale = jnp.maximum(cache.k_scale, k_amax / qmax + 1e-9)
+        v_scale = jnp.maximum(cache.v_scale, v_amax / qmax + 1e-9)
+        k_row = _quantize_kv(k_new, k_scale, cache.bits)[:, 0]
+        v_row = _quantize_kv(v_new, v_scale, cache.bits)[:, 0]
+    else:
+        k_scale, v_scale = cache.k_scale, cache.v_scale
+        k_row = k_new[:, 0].astype(cache.k.dtype)
+        v_row = v_new[:, 0].astype(cache.v.dtype)
+    bidx = jnp.arange(b)
+    return KVCache(
+        k=cache.k.at[bidx, slot].set(k_row),
+        v=cache.v.at[bidx, slot].set(v_row),
+        k_scale=k_scale,
+        v_scale=v_scale,
+        token_idx=cache.token_idx.at[bidx, slot].set(pos.astype(jnp.int32)),
+        bits=cache.bits,
+    )
+
+
+def decode_attention(q: jax.Array, cache: KVCache, pos: jax.Array, *,
+                     window: jax.Array | int | None = None) -> jax.Array:
+    """One-token attention vs the cache. q ``[B, 1, H, D]`` → ``[B, 1, H, D]``.
+
+    ``pos [B]`` is the current absolute position (the new token's index);
+    masking uses the per-slot ``token_idx`` so ring-buffer wraparound is safe.
+    """
+    b, _, h, d = q.shape
+    _, slots, hkv, _ = cache.k.shape
+    hg = h // hkv
+    if cache.bits in (4, 8):
+        kf = _dequantize_kv(cache.k, cache.k_scale, cache.bits)
+        vf = _dequantize_kv(cache.v, cache.v_scale, cache.bits)
+    else:
+        kf = cache.k.astype(jnp.float32)
+        vf = cache.v.astype(jnp.float32)
+    qh = (q.astype(jnp.float32) * d ** -0.5).reshape(b, hkv, hg, d)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qh, kf)         # [B,Hkv,Hg,slots]
+    win = jnp.asarray(slots + 1 if window is None else window, jnp.int32)
+    tidx = cache.token_idx                                  # [B, slots]
+    keep = (tidx >= 0) & (tidx <= pos[:, None]) & (pos[:, None] - tidx < win)
+    scores = jnp.where(keep[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, vf)
+    return out.reshape(b, 1, h, d).astype(q.dtype)

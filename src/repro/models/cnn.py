@@ -1,0 +1,171 @@
+"""The paper's tiny CNN (§4): 2 × [conv3×3·64 + ReLU + BN + maxpool] + FC.
+
+This is the exact evaluation workload of the paper, with the exact layer
+granularity used for its profiles: three quantizable layers ``conv0``,
+``conv1`` (the *inner* convolutional layer of the ``Mixed`` profile), and
+``fc``. Convolutions run as fake-quantized ``lax.conv_general_dilated``
+(QAT path) or as pre-quantized integer images selected via ``lax.switch``
+(native merged-engine path — the MDC reconfigurable datapath analogue, with
+one weight image per *distinct* spec, shared across profiles).
+
+BN uses batch statistics in both train and eval (the synthetic-digit batches
+are large; noted as a deviation from folded-BN FPGA inference in DESIGN §9).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import QuantIndex, switch_images
+from repro.core.merge import MergePlan
+from repro.core.qtypes import QuantSpec
+from repro.core.quantizers import QTensor, dequantize, fake_quant_dynamic, quantize_native
+from .layers import SIGNED_SYM
+
+__all__ = ["CNNConfig", "CNN_LAYERS", "init_cnn", "cnn_forward", "cnn_loss",
+           "cnn_accuracy", "quantize_cnn_images", "cnn_forward_native",
+           "cnn_weight_shapes"]
+
+CNN_LAYERS = ("conv0", "conv1", "fc")
+CNN_INDEX = QuantIndex(CNN_LAYERS)
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    size: int = 28
+    in_ch: int = 1
+    channels: int = 64
+    kernel: int = 3
+    n_classes: int = 10
+
+    @property
+    def fc_in(self) -> int:
+        return (self.size // 4) * (self.size // 4) * self.channels
+
+
+def init_cnn(cfg: CNNConfig, key: jax.Array) -> dict:
+    k0, k1, k2 = jax.random.split(key, 3)
+    kk, c = cfg.kernel, cfg.channels
+
+    def conv_init(k, cin, cout):
+        fan = kk * kk * cin
+        return {"w": jax.random.normal(k, (kk, kk, cin, cout), jnp.float32)
+                     / np.sqrt(fan),
+                "b": jnp.zeros((cout,), jnp.float32),
+                "bn_g": jnp.ones((cout,), jnp.float32),
+                "bn_b": jnp.zeros((cout,), jnp.float32)}
+
+    return {
+        "conv0": conv_init(k0, cfg.in_ch, c),
+        "conv1": conv_init(k1, c, c),
+        "fc": {"w": jax.random.normal(k2, (cfg.fc_in, cfg.n_classes),
+                                      jnp.float32) * 0.02,
+               "b": jnp.zeros((cfg.n_classes,), jnp.float32)},
+    }
+
+
+def cnn_weight_shapes(cfg: CNNConfig) -> dict:
+    kk, c = cfg.kernel, cfg.channels
+    return {"conv0": (kk, kk, cfg.in_ch, c), "conv1": (kk, kk, c, c),
+            "fc": (cfg.fc_in, cfg.n_classes)}
+
+
+def _conv_block(p: dict, x: jax.Array, bits_aw: jax.Array,
+                w_override: jax.Array | None = None) -> jax.Array:
+    """conv → ReLU → BN → maxpool, quantizing input activations and weights."""
+    xq = fake_quant_dynamic(x, bits_aw[0], SIGNED_SYM)
+    w = w_override if w_override is not None else \
+        fake_quant_dynamic(p["w"], bits_aw[1], SIGNED_SYM)
+    y = jax.lax.conv_general_dilated(
+        xq, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + p["b"]
+    y = jax.nn.relu(y)
+    # batch-norm (batch statistics)
+    mu = jnp.mean(y, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(y, axis=(0, 1, 2), keepdims=True)
+    y = (y - mu) * jax.lax.rsqrt(var + 1e-5) * p["bn_g"] + p["bn_b"]
+    # 2×2 maxpool
+    return jax.lax.reduce_window(y, -jnp.inf, jax.lax.max,
+                                 (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def cnn_forward(params: dict, bits_row: jax.Array, images: jax.Array) -> jax.Array:
+    """QAT/fake path. images [B, H, W, C] → logits [B, n_classes]."""
+    x = _conv_block(params["conv0"], images, CNN_INDEX.gather(bits_row, ["conv0"])[0])
+    x = _conv_block(params["conv1"], x, CNN_INDEX.gather(bits_row, ["conv1"])[0])
+    b = x.shape[0]
+    x = x.reshape(b, -1)
+    fb = CNN_INDEX.gather(bits_row, ["fc"])[0]
+    xq = fake_quant_dynamic(x, fb[0], SIGNED_SYM)
+    wq = fake_quant_dynamic(params["fc"]["w"], fb[1], SIGNED_SYM)
+    return xq @ wq + params["fc"]["b"]
+
+
+def cnn_loss(params: dict, bits_row: jax.Array, batch: dict):
+    logits = cnn_forward(params, bits_row, batch["images"])
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, batch["labels"][:, None], axis=-1).mean()
+    acc = (jnp.argmax(logits, -1) == batch["labels"]).mean()
+    return nll, {"acc": acc}
+
+
+def cnn_accuracy(params: dict, bits_row: jax.Array, images, labels,
+                 batch: int = 512) -> float:
+    hits = 0
+    fwd = jax.jit(cnn_forward)
+    for i in range(0, len(labels) - batch + 1, batch):
+        lg = fwd(params, bits_row, jnp.asarray(images[i:i + batch]))
+        hits += int((np.argmax(np.asarray(lg), -1) == labels[i:i + batch]).sum())
+    n = (len(labels) // batch) * batch
+    return hits / max(1, n)
+
+
+# ---------------------------------------------------------------------------
+# native merged engine (MDC datapath analogue)
+# ---------------------------------------------------------------------------
+
+def quantize_cnn_images(params: dict, plan: MergePlan) -> dict:
+    """One integer weight image per *distinct* (a,w) spec per layer — the
+    deduplicated 'actors' of the merged datapath. Float specs keep the master."""
+    images: dict[str, list] = {}
+    for ln in plan.layer_names:
+        w = params[ln]["w"]
+        imgs = []
+        for (_, wb) in plan.distinct_specs[ln]:
+            if wb >= 17:
+                imgs.append(w)
+            else:
+                # per-tensor po2 scale: bit-exact with the QAT fake-quant grid
+                imgs.append(quantize_native(w, QuantSpec(bits=wb, po2_scale=True)))
+        images[ln] = imgs
+    return images
+
+
+def cnn_forward_native(params: dict, images: dict, plan: MergePlan,
+                       selectors: jax.Array, bits_row: jax.Array,
+                       x: jax.Array) -> jax.Array:
+    """Runtime-switched native engine: ``selectors[i]`` picks the weight image
+    of layer i (from the merge plan), activations still follow ``bits_row``.
+
+    Shared layers (1 image) compile with no switch at all — the HLO-visible
+    resource sharing the tests assert."""
+
+    def deq(im):
+        return dequantize(im, jnp.float32) if isinstance(im, QTensor) else im
+
+    def pick(i: int, ln: str):
+        return switch_images(selectors[i], images[ln], deq)
+
+    x = _conv_block(params["conv0"], x, CNN_INDEX.gather(bits_row, ["conv0"])[0],
+                    w_override=pick(0, "conv0"))
+    x = _conv_block(params["conv1"], x, CNN_INDEX.gather(bits_row, ["conv1"])[0],
+                    w_override=pick(1, "conv1"))
+    b = x.shape[0]
+    x = x.reshape(b, -1)
+    fb = CNN_INDEX.gather(bits_row, ["fc"])[0]
+    xq = fake_quant_dynamic(x, fb[0], SIGNED_SYM)
+    return xq @ pick(2, "fc") + params["fc"]["b"]

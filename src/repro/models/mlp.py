@@ -1,0 +1,44 @@
+"""Feed-forward blocks: gated (SwiGLU) dense MLP, through quantized linears."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import init_linear, qlinear
+from .pshard import constrain
+
+__all__ = ["init_mlp", "mlp"]
+
+
+def init_mlp(key: jax.Array, d_model: int, d_ff: int, *, gated: bool = True,
+             act: str = "silu") -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_in": init_linear(k1, d_model, d_ff * (2 if gated else 1)),
+        "w_out": init_linear(k2, d_ff, d_model),
+    }
+    return p
+
+
+def _act(name: str, x: jax.Array) -> jax.Array:
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(name)
+
+
+def mlp(params: dict, x: jax.Array, bits_in: jax.Array, bits_out: jax.Array, *,
+        gated: bool = True, act: str = "silu") -> jax.Array:
+    """``bits_in``/``bits_out`` are the (a,w) int32 pairs of the two quant sites
+    (``mlp_in``, ``mlp_out``) — gate and up projections share one site, like
+    the paper's per-layer (not per-tensor) precision."""
+    h = qlinear(params["w_in"], x, bits_in)
+    if gated:
+        g, u = jnp.split(h, 2, axis=-1)
+        h = _act(act, g) * u
+    else:
+        h = _act(act, h)
+    if h.ndim == 3:  # keep d_ff on the TP axis (Megatron col→row)
+        h = constrain(h, "dp", None, "tp")
+    return qlinear(params["w_out"], h, bits_out)

@@ -1,0 +1,150 @@
+"""Fine-grained Mixture-of-Experts (DeepSeekMoE / Qwen2-MoE style).
+
+Shared experts (always-on dense FFNs) + routed experts with top-k gating and
+**grouped capacity dispatch**:
+
+* tokens are reshaped into ``G`` groups (aligned with the data-parallel axis)
+  so routing/cumsum/scatter stay group-local — vmapped, no cross-shard prefix
+  sums (GShard's grouping, DESIGN §8.4);
+* each (group, expert) has capacity ``C = ceil(T_g·k/E · cf)``; assignments are
+  scatter/gathered through an ``[G, E, C, d]`` buffer — compute is
+  ``E·C``-bounded (≈ active-FLOPs), never the ``O(T·E·C)`` one-hot einsum;
+* expert weights are stacked ``[E, d, f]`` so expert parallelism is one
+  sharding rule (E over the ``model`` axis).
+
+Router: softmax gating with top-k renormalization + GShard load-balance aux
+loss (+ z-loss). All expert matmuls run through the quantized path with the
+``expert_in``/``expert_out``/``shared_*``/``router`` quant sites.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantizers import fake_quant_dynamic
+from repro.runtime import compute_dtype
+from .layers import SIGNED_SYM, init_linear, qlinear
+from .pshard import constrain
+
+__all__ = ["MoEConfig", "init_moe", "moe_ffn"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_routed: int
+    top_k: int
+    n_shared: int
+    d_expert: int              # per-expert FFN width (fine-grained)
+    capacity_factor: float = 1.25
+    groups: int = 16           # dispatch groups; align with the data axis
+    aux_coef: float = 0.01
+    z_coef: float = 1e-3
+
+
+def init_moe(key: jax.Array, d_model: int, cfg: MoEConfig) -> dict:
+    kr, ke1, ke2, ks1, ks2 = jax.random.split(key, 5)
+    E, f = cfg.n_routed, cfg.d_expert
+    s = 1.0 / np.sqrt(d_model)
+    p = {
+        "router": init_linear(kr, d_model, E, scale=0.02),
+        # stacked routed experts, gated FFN: w_in [E, d, 2f], w_out [E, f, d]
+        "w_in": jax.random.normal(ke1, (E, d_model, 2 * f), jnp.float32) * s,
+        "w_out": jax.random.normal(ke2, (E, f, d_model), jnp.float32) / np.sqrt(f),
+    }
+    if cfg.n_shared:
+        fs = f * cfg.n_shared
+        p["shared_in"] = init_linear(ks1, d_model, 2 * fs)
+        p["shared_out"] = init_linear(ks2, fs, d_model)
+    return p
+
+
+def _qmat(w, bits_aw: jax.Array) -> jax.Array:
+    from repro.core.quantizers import QTensor, dequantize
+    if isinstance(w, QTensor):  # native deployment path
+        return dequantize(w, compute_dtype())
+    return fake_quant_dynamic(w, bits_aw[1], SIGNED_SYM).astype(compute_dtype())
+
+
+def moe_ffn(params: dict, x: jax.Array, bits: dict, cfg: MoEConfig):
+    """x ``[B, S, d]`` → (y ``[B, S, d]``, aux_losses dict).
+
+    ``bits`` maps site → int32[2]: ``router``, ``expert_in``, ``expert_out``,
+    ``shared_in``, ``shared_out``.
+    """
+    b, s, d = x.shape
+    E, k, G = cfg.n_routed, cfg.top_k, cfg.groups
+    t = b * s
+    assert t % G == 0, f"tokens {t} must divide groups {G}"
+    tg = t // G
+    cap = int(np.ceil(tg * k / E * cfg.capacity_factor))
+
+    xg = x.reshape(G, tg, d)
+
+    # ---- router (quantized like any other site) ----
+    logits = qlinear(params["router"], xg, bits["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                  # [G, tg, E]
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)            # [G, tg, k]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # GShard aux: mean prob per expert × fraction of tokens routed per expert
+    me = probs.mean(axis=(0, 1))                             # [E]
+    ce = jnp.zeros((E,), jnp.float32).at[gate_idx.reshape(-1)].add(
+        1.0 / (t * k))
+    aux = {"load_balance": E * jnp.sum(me * ce) * cfg.aux_coef,
+           "router_z": cfg.z_coef * jnp.mean(
+               jax.nn.logsumexp(logits, axis=-1) ** 2)}
+
+    # ---- group-local capacity dispatch (vmapped over G) ----
+    def dispatch(xg_, idx_, val_):
+        flat_e = idx_.reshape(-1)                            # [tg*k]
+        onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # [tg*k, E]
+        pos = jnp.cumsum(onehot, axis=0) - 1                 # rank within expert
+        pos_in_e = jnp.sum(pos * onehot, axis=-1)            # [tg*k]
+        keep = pos_in_e < cap
+        buf_idx = jnp.where(keep, flat_e * cap + pos_in_e, E * cap)  # overflow row
+        x_rep = jnp.repeat(xg_, k, axis=0)                   # [tg*k, d]
+        buf = jnp.zeros((E * cap + 1, d), xg_.dtype).at[buf_idx].set(x_rep)
+        return buf[:-1].reshape(E, cap, d), buf_idx, keep
+
+    buf, buf_idx, keep = jax.vmap(dispatch)(xg, gate_idx, gate_vals)
+    # buf: [G, E, cap, d] — groups on dp, experts on tp (EP); falls back to
+    # capacity-sharding when E doesn't divide the model axis (e.g. 60 experts)
+    buf = constrain(buf, "dp", "tp", None, None)
+
+    # ---- expert compute (batched matmul; E shards over the model axis) ----
+    cdt = compute_dtype()
+    a_bits_in = bits["expert_in"][0]
+    h = fake_quant_dynamic(buf, a_bits_in, SIGNED_SYM).astype(cdt)
+    w_in = _qmat(params["w_in"], bits["expert_in"])          # [E, d, 2f]
+    h = jnp.einsum("gecd,edf->gecf", h, w_in, preferred_element_type=jnp.float32)
+    g_, u_ = jnp.split(h, 2, axis=-1)
+    h = (jax.nn.silu(g_) * u_).astype(cdt)
+    h = fake_quant_dynamic(h, bits["expert_out"][0], SIGNED_SYM).astype(cdt)
+    h = constrain(h, "dp", "tp", None, None)
+    w_out = _qmat(params["w_out"], bits["expert_out"])       # [E, f, d]
+    out_buf = jnp.einsum("gecf,efd->gecd", h, w_out,
+                         preferred_element_type=jnp.float32)  # [G, E, cap, d]
+    out_buf = constrain(out_buf, "dp", "tp", None, None)
+
+    # ---- combine ----
+    def combine(out_buf_, buf_idx_, keep_, val_):
+        flat = out_buf_.reshape(E * cap, d)
+        flat = jnp.concatenate([flat, jnp.zeros((1, d), flat.dtype)], axis=0)
+        y_rep = flat[jnp.minimum(buf_idx_, E * cap)] * keep_[:, None]
+        return (y_rep.reshape(tg, k, d) *
+                val_[..., None].astype(flat.dtype)).sum(axis=1)
+
+    y = jax.vmap(combine)(out_buf, buf_idx, keep, gate_vals)  # [G, tg, d]
+    y = y.reshape(b, s, d).astype(x.dtype)
+
+    # ---- shared experts (dense path) ----
+    if "shared_in" in params:
+        hsh = qlinear(params["shared_in"], x, bits["shared_in"])
+        gsh, ush = jnp.split(hsh, 2, axis=-1)
+        y = y + qlinear(params["shared_out"],
+                        jax.nn.silu(gsh) * ush, bits["shared_out"])
+    return y, aux

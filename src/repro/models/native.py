@@ -1,0 +1,57 @@
+"""Fake-mode → native-mode parameter conversion (deployment quantization).
+
+Walks a parameter tree and replaces every quantizable weight with its integer
+carrier (:class:`QTensor`): linears become ``{"wq": QTensor, ...}``, stacked
+MoE expert tensors become QTensors directly. Works under ``jax.eval_shape``,
+which is how the dry-run builds abstract native parameter trees without ever
+allocating the full model.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qtypes import QuantSpec
+from repro.core.quantizers import QTensor, quantize_native
+
+__all__ = ["to_native", "NATIVE_SITES"]
+
+# dict-valued linear sites (hold {"w": ..}) and raw-array MoE sites
+_LINEAR_KEYS = {"qkv", "attn_out", "w_in", "w_out", "shared_in", "shared_out",
+                "router", "in_proj", "out_proj", "lm_head", "embed", "mlp"}
+_RAW_KEYS = {"w_in", "w_out"}  # inside "moe": stacked [L, E, ...] arrays
+NATIVE_SITES = tuple(sorted(_LINEAR_KEYS))
+
+
+def _quant(w: jax.Array, w_bits: int, stacked: bool) -> QTensor:
+    spec = QuantSpec(bits=w_bits, per_channel=True, channel_axis=-1,
+                     po2_scale=False)
+    if stacked:  # layer-stacked [L, ...]: per-layer scales (scan leaf dims!)
+        return jax.vmap(lambda wl: quantize_native(wl, spec))(w)
+    return quantize_native(w, spec)
+
+
+def to_native(params: Any, w_bits: int = 8, *, quant_embed: bool = True) -> Any:
+    """Convert recursively; norms/biases/conv/SSM-scalars stay float."""
+
+    def walk(node, name: str, stacked: bool):
+        if isinstance(node, dict):
+            if "w" in node and name in _LINEAR_KEYS:
+                if name == "embed" and not quant_embed:
+                    return node
+                out = {k: v for k, v in node.items() if k != "w"}
+                out["wq"] = _quant(node["w"], w_bits, stacked)
+                return out
+            out = {}
+            for k, v in node.items():
+                st = stacked or k == "layers"
+                if name == "moe" and k in _RAW_KEYS and not isinstance(v, dict):
+                    out[k] = _quant(v, w_bits, stacked)
+                else:
+                    out[k] = walk(v, k, st)
+            return out
+        return node
+
+    return walk(params, "", False)

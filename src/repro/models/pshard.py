@@ -1,0 +1,62 @@
+"""Logical activation-sharding constraints (hillclimb §Perf iteration 1).
+
+GSPMD propagates shardings from weights/inputs, but the reshapes inside
+attention / SSD / MoE give it too much freedom: the dry-run baseline shows
+multi-TB per-device resharding collectives and partially *replicated* compute
+(flops/device ≫ flops/devices). ``constrain`` pins the batch ("dp") and
+head/feature ("tp") dims of the hot intermediates.
+
+Model code stays mesh-agnostic: it names logical axes only. The launcher
+calls :func:`enable` with the physical mesh (dp = pod+data axes), and
+constraints silently no-op when disabled (unit tests, single-device runs) or
+when a dim doesn't divide its axis (e.g. 50 Hymba heads on 16-way TP — the
+P-dim shards instead where the call site says so).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = ["enable", "disable", "constrain", "enabled"]
+
+_STATE: dict = {"mesh": None, "dp": None, "tp": None}
+
+
+def enable(mesh, dp_axes, tp_axis: str = "model") -> None:
+    _STATE.update(mesh=mesh, dp=dp_axes, tp=tp_axis)
+
+
+def disable() -> None:
+    _STATE.update(mesh=None, dp=None, tp=None)
+
+
+def enabled() -> bool:
+    return _STATE["mesh"] is not None
+
+
+def _axis_size(mesh, axes) -> int:
+    n = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        n *= mesh.shape[a]
+    return n
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """``logical`` entries: "dp" | "tp" | None, one per dim of ``x``."""
+    mesh = _STATE["mesh"]
+    if mesh is None:
+        return x
+    assert len(logical) == x.ndim, (logical, x.shape)
+    entries = []
+    for dim, name in zip(x.shape, logical):
+        ax = _STATE.get(name) if name else None
+        if ax is not None and dim % _axis_size(mesh, ax) == 0 and dim > 1:
+            entries.append(ax)
+        else:
+            entries.append(None)
+    if not any(e is not None for e in entries):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries)))

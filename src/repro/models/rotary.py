@@ -1,0 +1,62 @@
+"""Rotary position embeddings: standard RoPE and multimodal M-RoPE (Qwen2-VL).
+
+M-RoPE splits the head dimension into (temporal, height, width) sections, each
+rotated by its own position stream; for pure-text positions (all three streams
+equal) it reduces exactly to RoPE — the property the tests assert.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rope_freqs", "apply_rope", "apply_mrope", "text_mrope_positions"]
+
+
+def rope_freqs(head_dim: int, theta: float = 1e4) -> jax.Array:
+    """Inverse frequencies ``[head_dim/2]``."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def _rotate(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 1e4) -> jax.Array:
+    """``x [B, S, H, D]``, ``positions [B, S]`` int32 → rotated x (half-split layout)."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                               # [D/2]
+    ang = positions.astype(jnp.float32)[..., None] * inv     # [B, S, D/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, sections: tuple[int, ...],
+                theta: float = 1e4) -> jax.Array:
+    """M-RoPE. ``positions [B, 3, S]`` (t/h/w streams); ``sections`` gives the
+    number of *frequency pairs* per stream, summing to head_dim/2."""
+    d = x.shape[-1]
+    assert sum(sections) == d // 2, (sections, d)
+    inv = rope_freqs(d, theta)                               # [D/2]
+    # Select, per frequency index, which position stream drives it, then gather
+    # the per-stream angles accordingly.
+    stream_of = jnp.repeat(jnp.arange(len(sections)), jnp.asarray(sections),
+                           total_repeat_length=d // 2)       # [D/2] in {0,1,2}
+    ang_streams = positions.astype(jnp.float32)[:, :, :, None] * inv[None, None, None, :]  # [B,3,S,D/2]
+    ang = jnp.take_along_axis(
+        ang_streams,
+        jnp.broadcast_to(stream_of[None, None, None, :],
+                         (x.shape[0], 1, x.shape[1], d // 2)).astype(jnp.int32),
+        axis=1,
+    )[:, 0]                                                  # [B, S, D/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+def text_mrope_positions(positions: jax.Array) -> jax.Array:
+    """Text-only M-RoPE positions: the three streams coincide. ``[B,S]→[B,3,S]``."""
+    return jnp.broadcast_to(positions[:, None, :], (positions.shape[0], 3, positions.shape[1]))

@@ -1,0 +1,580 @@
+"""LM-family model assembly: dense / MoE / SSM / hybrid / VLM / audio.
+
+One configurable stack covers all ten assigned architectures. Invariants:
+
+* every matmul runs through the quantized path (the paper's technique applies
+  uniformly; per-layer precision arrives as the traced ``bits_row`` of the
+  adaptive engine);
+* layers are stacked and executed with ``lax.scan`` (+ optional remat) so the
+  HLO is depth-independent — an 80-layer 110B config lowers as fast as a 2-layer
+  smoke config (DESIGN §8.2);
+* attention windows and per-layer bit-widths are *data*, so one traced program
+  serves every profile of the merged engine.
+
+Public entry points:
+  ``init_params``        — parameter pytree (stacked layers)
+  ``quant_layer_names``  — names for building profiles / the bits table
+  ``forward``            — hidden states over a full sequence (train/prefill)
+  ``train_loss``         — chunked-vocab xent + MoE aux losses
+  ``init_caches`` / ``decode_step`` / ``prefill`` — serving path
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .attention import (KVCache, decode_attention, gqa_attention,
+                        init_kv_cache, swa_attention, update_kv_cache)
+from .pshard import constrain
+from .layers import (embed_lookup, init_embed, init_linear, init_norm,
+                     layer_norm, qlinear, rms_norm)
+from .mlp import init_mlp, mlp
+from .moe import MoEConfig, init_moe, moe_ffn
+from .rotary import apply_mrope, apply_rope, text_mrope_positions
+from .ssm import (SSMConfig, SSMState, init_ssm, init_ssm_state,
+                  ssd_forward, ssm_decode_step)
+
+__all__ = ["ModelConfig", "init_params", "quant_layer_names", "forward",
+           "train_loss", "init_caches", "decode_step", "prefill",
+           "param_count", "active_param_count"]
+
+
+# ---------------------------------------------------------------------------
+# config
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+    rope_theta: float = 1e6
+    qkv_bias: bool = False
+    mrope: bool = False
+    mrope_sections: tuple[int, ...] = (16, 24, 24)
+    sliding_window: int = 0          # 0 = full attention
+    causal: bool = True              # False → encoder-only (audio)
+    act: str = "silu"
+    norm: str = "rms"                # rms | ln
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    frontend: Optional[str] = None   # audio | vision (stub, DESIGN §4)
+    n_patches: int = 0               # VLM vision-prefix length
+    feature_dim: int = 512           # audio stub frame-embedding dim
+    tie_embeddings: bool = False
+    remat: bool = True
+    loss_chunk: int = 1024           # seq positions per logits chunk
+    attn_block_k: int = 512
+    # analysis knobs (dry-run roofline extrapolation; DESIGN §7):
+    scan_layers: bool = True         # False → python loop (depth-unrolled HLO)
+    unroll_inner: bool = False       # unroll attention/SSD/loss scans
+    # §Perf hillclimb knobs (defaults = optimized; dryrun flags restore baseline)
+    remat_policy: str = "nothing"    # nothing | dots (save matmul outputs)
+    swa_block_skip: bool = True      # block-skipping sliding-window attention
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def has_attn(self) -> bool:
+        return self.family in ("dense", "moe", "hybrid", "vlm", "audio")
+
+    @property
+    def has_ssm(self) -> bool:
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def has_mlp(self) -> bool:
+        return self.family in ("dense", "hybrid", "vlm", "audio")
+
+    def window(self, skv: int) -> int:
+        return self.sliding_window if self.sliding_window else skv + 1
+
+
+# quantization sites per family (paper granularity: per layer, per block kind)
+_SITES = {
+    "dense": ("qkv", "attn_out", "mlp_in", "mlp_out"),
+    "vlm": ("qkv", "attn_out", "mlp_in", "mlp_out"),
+    "audio": ("qkv", "attn_out", "mlp_in", "mlp_out"),
+    "moe": ("qkv", "attn_out", "router", "expert_in", "expert_out",
+            "shared_in", "shared_out"),
+    "ssm": ("ssm_in", "ssm_out"),
+    "hybrid": ("qkv", "attn_out", "ssm_in", "ssm_out", "mlp_in", "mlp_out"),
+}
+_GLOBAL_SITES = ("embed", "lm_head")
+
+
+def sites(cfg: ModelConfig) -> tuple[str, ...]:
+    return _SITES[cfg.family]
+
+
+def quant_layer_names(cfg: ModelConfig) -> tuple[str, ...]:
+    """Names for Profile construction: globals + per-depth per-site."""
+    return _GLOBAL_SITES + tuple(
+        f"L{i}.{s}" for i in range(cfg.n_layers) for s in sites(cfg))
+
+
+def split_bits(cfg: ModelConfig, bits_row: jax.Array):
+    """bits_row [2 + L*S, 2] → (embed [2], lm_head [2], layers [L, S, 2])."""
+    ns = len(sites(cfg))
+    return (bits_row[0], bits_row[1],
+            bits_row[2:].reshape(cfg.n_layers, ns, 2))
+
+
+def _site_idx(cfg: ModelConfig, name: str) -> int:
+    return sites(cfg).index(name)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_layer(cfg: ModelConfig, key: jax.Array) -> dict:
+    ks = jax.random.split(key, 8)
+    p: dict[str, Any] = {}
+    d, hd = cfg.d_model, cfg.hd
+    if cfg.has_attn:
+        qkv_out = (cfg.n_heads + 2 * cfg.n_kv) * hd
+        p["qkv"] = init_linear(ks[0], d, qkv_out, bias=cfg.qkv_bias)
+        p["attn_out"] = init_linear(ks[1], cfg.n_heads * hd, d)
+        p["norm_attn"] = init_norm(d, bias=cfg.norm == "ln")
+    if cfg.has_ssm:
+        p["ssm"] = init_ssm(ks[2], d, cfg.ssm)
+        if cfg.family == "ssm":
+            p["norm_ssm"] = init_norm(d, bias=False)
+    if cfg.family == "hybrid":
+        # parallel-head fusion norms (Hymba): per-path output norms
+        p["norm_attn_out"] = init_norm(d)
+        p["norm_ssm_out"] = init_norm(d)
+    if cfg.has_mlp:
+        p["mlp"] = init_mlp(ks[3], d, cfg.d_ff, gated=cfg.act == "silu", act=cfg.act)
+        p["norm_mlp"] = init_norm(d, bias=cfg.norm == "ln")
+    if cfg.family == "moe":
+        p["moe"] = init_moe(ks[4], d, cfg.moe)
+        p["norm_mlp"] = init_norm(d)
+    return p
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: _init_layer(cfg, k))(layer_keys)
+    p = {
+        "layers": layers,
+        "norm_f": init_norm(cfg.d_model, bias=cfg.norm == "ln"),
+    }
+    if cfg.frontend == "audio":
+        p["embed"] = init_linear(k_emb, cfg.feature_dim, cfg.d_model)
+    else:
+        p["embed"] = init_embed(k_emb, cfg.vocab, cfg.d_model)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = init_linear(k_head, cfg.d_model, cfg.vocab, scale=0.02)
+    return p
+
+
+def param_count(params) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(params))
+
+
+def active_param_count(cfg: ModelConfig, params) -> int:
+    """MoE-aware: routed experts count at top_k/E (for MODEL_FLOPS = 6·N_active·D)."""
+    total = param_count(params)
+    if cfg.family != "moe":
+        return total
+    e, k = cfg.moe.n_routed, cfg.moe.top_k
+    routed = cfg.n_layers * e * 3 * cfg.moe.d_expert * cfg.d_model
+    return total - routed + int(routed * k / e)
+
+
+# ---------------------------------------------------------------------------
+# layer body
+# ---------------------------------------------------------------------------
+
+def _norm(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    return layer_norm(p, x) if cfg.norm == "ln" else rms_norm(p, x)
+
+
+def _attn_qkv(cfg: ModelConfig, lp: dict, x: jax.Array, lb: jax.Array,
+              positions: jax.Array):
+    """Project + rope. Returns q [B,S,H,hd], k/v [B,S,Hkv,hd]."""
+    b, s, _ = x.shape
+    hd = cfg.hd
+    qkv = qlinear(lp["qkv"], x, lb[_site_idx(cfg, "qkv")])
+    q, k, v = jnp.split(
+        qkv, [cfg.n_heads * hd, (cfg.n_heads + cfg.n_kv) * hd], axis=-1)
+    q = q.reshape(b, s, cfg.n_heads, hd)
+    k = k.reshape(b, s, cfg.n_kv, hd)
+    v = v.reshape(b, s, cfg.n_kv, hd)
+    if cfg.mrope:
+        pos3 = text_mrope_positions(positions)
+        q = apply_mrope(q, pos3, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, pos3, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    # NB: no head-axis constraint here — attention internals are S-sharded
+    # (see gqa_attention); a conflicting H→tp pin forces SPMD full remat.
+    return q, k, v
+
+
+def _attend(cfg: ModelConfig, q, k, v, s: int):
+    """Dispatch: block-skipping SWA (exact, S·window FLOPs) vs masked blockwise."""
+    if (cfg.sliding_window and cfg.causal and cfg.swa_block_skip
+            and s > cfg.sliding_window and q.shape[1] == k.shape[1]):
+        return swa_attention(q, k, v, window=cfg.sliding_window,
+                             block_q=cfg.attn_block_k)
+    return gqa_attention(q, k, v, causal=cfg.causal, window=cfg.window(s),
+                         block_k=cfg.attn_block_k, unroll=cfg.unroll_inner)
+
+
+def _layer_forward(cfg: ModelConfig, lp: dict, lb: jax.Array, x: jax.Array,
+                   positions: jax.Array, collect_kv: bool,
+                   collect_ssm: bool):
+    """One layer over a full sequence. Returns (x, aux, collected)."""
+    b, s, d = x.shape
+    aux = jnp.zeros((), jnp.float32)
+    collected = ()
+
+    if cfg.family == "hybrid":
+        xin = _norm(cfg, lp["norm_attn"], x)
+        q, k, v = _attn_qkv(cfg, lp, xin, lb, positions)
+        attn = _attend(cfg, q, k, v, s)
+        attn = qlinear(lp["attn_out"], attn.reshape(b, s, -1),
+                       lb[_site_idx(cfg, "attn_out")])
+        ssm_call = partial(ssd_forward, lp["ssm"], xin,
+                           lb[_site_idx(cfg, "ssm_in")],
+                           lb[_site_idx(cfg, "ssm_out")], cfg.ssm,
+                           unroll=cfg.unroll_inner)
+        if collect_ssm:
+            ssm_out, fin = ssm_call(return_final_state=True)
+        else:
+            ssm_out, fin = ssm_call(), None
+        y = 0.5 * (rms_norm(lp["norm_attn_out"], attn)
+                   + rms_norm(lp["norm_ssm_out"], ssm_out))
+        x = x + y
+        x = x + mlp(lp["mlp"], _norm(cfg, lp["norm_mlp"], x),
+                    lb[_site_idx(cfg, "mlp_in")], lb[_site_idx(cfg, "mlp_out")],
+                    gated=cfg.act == "silu", act=cfg.act)
+        if collect_kv or collect_ssm:
+            collected = ((k, v) if collect_kv else None,
+                         fin if collect_ssm else None)
+        return x, aux, collected
+
+    if cfg.family == "ssm":
+        xin = _norm(cfg, lp["norm_ssm"], x)
+        call = partial(ssd_forward, lp["ssm"], xin,
+                       lb[_site_idx(cfg, "ssm_in")],
+                       lb[_site_idx(cfg, "ssm_out")], cfg.ssm,
+                       unroll=cfg.unroll_inner)
+        if collect_ssm:
+            y, fin = call(return_final_state=True)
+            collected = (None, fin)
+        else:
+            y = call()
+        return x + y, aux, collected
+
+    # attention families: dense / moe / vlm / audio
+    xin = _norm(cfg, lp["norm_attn"], x)
+    q, k, v = _attn_qkv(cfg, lp, xin, lb, positions)
+    attn = _attend(cfg, q, k, v, s)
+    x = x + qlinear(lp["attn_out"], attn.reshape(b, s, -1),
+                    lb[_site_idx(cfg, "attn_out")])
+    x = constrain(x, "dp", None, None)
+    xm = _norm(cfg, lp["norm_mlp"], x)
+    if cfg.family == "moe":
+        bits = {name: lb[_site_idx(cfg, name)]
+                for name in ("router", "expert_in", "expert_out",
+                             "shared_in", "shared_out")}
+        y, moe_aux = moe_ffn(lp["moe"], xm, bits, cfg.moe)
+        aux = aux + moe_aux["load_balance"] + moe_aux["router_z"]
+    else:
+        y = mlp(lp["mlp"], xm, lb[_site_idx(cfg, "mlp_in")],
+                lb[_site_idx(cfg, "mlp_out")],
+                gated=cfg.act == "silu", act=cfg.act)
+    x = x + y
+    if collect_kv:
+        collected = ((k, v), None)
+    return x, aux, collected
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(cfg: ModelConfig, params: dict, bits_row: jax.Array,
+                  batch: dict) -> tuple[jax.Array, jax.Array]:
+    """Tokens/features/patches → initial hidden states + positions."""
+    eb, _, _ = split_bits(cfg, bits_row)
+    if cfg.frontend == "audio":
+        x = qlinear(params["embed"], batch["features"], eb)
+        b, s = x.shape[:2]
+    else:
+        x = embed_lookup(params["embed"], batch["tokens"], eb)
+        b, s = batch["tokens"].shape
+        if cfg.frontend == "vision" and cfg.n_patches:
+            # vision prefix: precomputed patch embeddings replace the first
+            # n_patches positions (frontend stub per the brief)
+            patches = batch["patch_embeds"].astype(x.dtype)
+            x = jnp.concatenate([patches, x[:, cfg.n_patches:]], axis=1)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    return constrain(x, "dp", None, None), positions
+
+
+def forward(params: dict, cfg: ModelConfig, bits_row: jax.Array, batch: dict,
+            collect: bool = False):
+    """Backbone over a full sequence.
+
+    Returns (hidden [B,S,d], aux_loss, collected) where ``collected`` stacks
+    per-layer (kv, ssm_final) when ``collect`` (prefill → cache handoff).
+    """
+    x, positions = _embed_inputs(cfg, params, bits_row, batch)
+    _, _, layer_bits = split_bits(cfg, bits_row)
+
+    def body(carry, xs):
+        x, aux = carry
+        lp, lb = xs
+        x, a, col = _layer_forward(cfg, lp, lb, x, positions,
+                                   collect_kv=collect and cfg.has_attn,
+                                   collect_ssm=collect and cfg.has_ssm)
+        return (x, aux + a), col
+
+    body_fn = body
+    if cfg.remat:
+        body_fn = jax.checkpoint(body, policy=_remat_policy(cfg))
+    carry0 = (x, jnp.zeros((), jnp.float32))
+    if cfg.scan_layers:
+        (x, aux), collected = jax.lax.scan(body_fn, carry0,
+                                           (params["layers"], layer_bits))
+    else:  # depth-unrolled variant (roofline analysis lowering)
+        carry = carry0
+        cols = []
+        for l in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[l], params["layers"])
+            carry, col = body_fn(carry, (lp, layer_bits[l]))
+            cols.append(col)
+        (x, aux) = carry
+        collected = jax.tree.map(lambda *xs: jnp.stack(xs), *cols) if cols and cols[0] else ()
+    x = _norm(cfg, params["norm_f"], x)
+    return x, aux, collected
+
+
+def _remat_policy(cfg: ModelConfig):
+    """'nothing' = recompute everything in bwd (min memory, +fwd FLOPs);
+    'dots' = save matmul outputs (−recompute FLOPs, +memory) — §Perf knob."""
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def _lm_head_params(cfg: ModelConfig, params: dict) -> dict:
+    if cfg.tie_embeddings:
+        emb = params["embed"]
+        if "wq" in emb:  # native deployment: dequantize the tied table
+            from repro.core.quantizers import dequantize
+            return {"w": dequantize(emb["wq"], jnp.float32).T}
+        return {"w": emb["w"].T}
+    return params["lm_head"]
+
+
+def _logits(cfg: ModelConfig, params: dict, bits_row: jax.Array,
+            h: jax.Array) -> jax.Array:
+    _, hb, _ = split_bits(cfg, bits_row)
+    return qlinear(_lm_head_params(cfg, params), h, hb).astype(jnp.float32)
+
+
+def chunked_xent(cfg: ModelConfig, params: dict, bits_row: jax.Array,
+                 hidden: jax.Array, labels: jax.Array) -> jax.Array:
+    """Cross-entropy with seq-chunked logits — the full [B,S,V] tensor never
+    materializes (DESIGN §5; V up to 152k makes it ~300 TB otherwise)."""
+    b, s, d = hidden.shape
+    c = min(cfg.loss_chunk, s)
+    assert s % c == 0
+    hc = hidden.reshape(b, s // c, c, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, s // c, c).transpose(1, 0, 2)
+
+    def chunk_loss(carry, xs):
+        h_, l_ = xs
+        logits = constrain(_logits(cfg, params, bits_row, h_),
+                           "dp", None, "tp")
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(l_, 0)[..., None], axis=-1)[..., 0]
+        mask = (l_ >= 0).astype(jnp.float32)
+        nll = (logz - gold) * mask
+        tot, cnt = carry
+        return (tot + nll.sum(), cnt + mask.sum()), None
+
+    fn = chunk_loss
+    if cfg.remat:
+        fn = jax.checkpoint(chunk_loss, policy=_remat_policy(cfg))
+    (tot, cnt), _ = jax.lax.scan(fn, (jnp.zeros(()), jnp.zeros(())), (hc, lc),
+                                 unroll=(s // c) if cfg.unroll_inner else 1)
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def train_loss(params: dict, cfg: ModelConfig, bits_row: jax.Array,
+               batch: dict):
+    """Next-token (or frame-classification) loss + MoE aux. Returns (loss, metrics)."""
+    hidden, aux, _ = forward(params, cfg, bits_row, batch)
+    if cfg.causal:
+        labels = batch["labels"]          # already shifted by the data pipeline
+    else:
+        labels = batch["labels"]          # frame targets (audio)
+    loss = chunked_xent(cfg, params, bits_row, hidden, labels)
+    total = loss + aux
+    return total, {"xent": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: caches, prefill, decode
+# ---------------------------------------------------------------------------
+
+def _stack_layerwise(fn, n_layers: int):
+    """init helper: build per-layer cache pytrees stacked on axis 0."""
+    one = fn()
+    return jax.tree.map(lambda l: jnp.broadcast_to(l[None], (n_layers, *l.shape)).copy(), one)
+
+
+def init_caches(cfg: ModelConfig, batch: int, slots: int, *,
+                kv_bits: int = 16) -> dict:
+    """Decode caches, stacked [L, ...]. ``slots`` bounds the attention window
+    (SWA archs allocate only their window — what makes hymba long_500k O(W))."""
+    caches: dict[str, Any] = {}
+    if cfg.has_attn:
+        eff = min(slots, cfg.sliding_window) if cfg.sliding_window else slots
+        dt = jnp.float32 if kv_bits == 32 else jnp.bfloat16
+        caches["kv"] = _stack_layerwise(
+            lambda: init_kv_cache(batch, eff, cfg.n_kv, cfg.hd, bits=kv_bits,
+                                  dtype=dt),
+            cfg.n_layers)
+    if cfg.has_ssm:
+        caches["ssm"] = _stack_layerwise(
+            lambda: init_ssm_state(batch, cfg.d_model, cfg.ssm), cfg.n_layers)
+    return caches
+
+
+def decode_step(params: dict, cfg: ModelConfig, bits_row: jax.Array,
+                tokens: jax.Array, pos: jax.Array, caches: dict):
+    """One decode step. tokens ``[B,1]``, pos ``[B]`` → (logits [B,V], caches)."""
+    eb, _, layer_bits = split_bits(cfg, bits_row)
+    x = embed_lookup(params["embed"], tokens, eb)
+    positions = pos[:, None].astype(jnp.int32)
+    b = tokens.shape[0]
+
+    def body(x, xs):
+        lp, lb, cache = xs
+        new_cache = dict(cache)
+        if cfg.has_attn:
+            xin = _norm(cfg, lp["norm_attn"], x)
+            q, k, v = _attn_qkv(cfg, lp, xin, lb, positions)
+            kvc = update_kv_cache(cache["kv"], k, v, pos)
+            attn = decode_attention(
+                q, kvc, pos,
+                window=cfg.window(kvc.token_idx.shape[1]))
+            attn = qlinear(lp["attn_out"], attn.reshape(b, 1, -1),
+                           lb[_site_idx(cfg, "attn_out")])
+            new_cache["kv"] = kvc
+        if cfg.family == "hybrid":
+            ssm_out, st = ssm_decode_step(lp["ssm"], xin, cache["ssm"],
+                                          lb[_site_idx(cfg, "ssm_in")],
+                                          lb[_site_idx(cfg, "ssm_out")], cfg.ssm)
+            y = 0.5 * (rms_norm(lp["norm_attn_out"], attn)
+                       + rms_norm(lp["norm_ssm_out"], ssm_out))
+            x = x + y
+            x = x + mlp(lp["mlp"], _norm(cfg, lp["norm_mlp"], x),
+                        lb[_site_idx(cfg, "mlp_in")],
+                        lb[_site_idx(cfg, "mlp_out")])
+            new_cache["ssm"] = st
+        elif cfg.family == "ssm":
+            xin = _norm(cfg, lp["norm_ssm"], x)
+            y, st = ssm_decode_step(lp["ssm"], xin, cache["ssm"],
+                                    lb[_site_idx(cfg, "ssm_in")],
+                                    lb[_site_idx(cfg, "ssm_out")], cfg.ssm)
+            x = x + y
+            new_cache["ssm"] = st
+        else:
+            x = x + attn
+            xm = _norm(cfg, lp["norm_mlp"], x)
+            if cfg.family == "moe":
+                bits = {name: lb[_site_idx(cfg, name)]
+                        for name in ("router", "expert_in", "expert_out",
+                                     "shared_in", "shared_out")}
+                y, _ = moe_ffn(lp["moe"], xm, bits,
+                               dataclasses.replace(
+                                   cfg.moe, groups=math.gcd(cfg.moe.groups, b)))
+                x = x + y
+            else:
+                x = x + mlp(lp["mlp"], xm, lb[_site_idx(cfg, "mlp_in")],
+                            lb[_site_idx(cfg, "mlp_out")],
+                            gated=cfg.act == "silu", act=cfg.act)
+        return x, new_cache
+
+    layers_and_caches = (params["layers"], layer_bits, caches)
+    if cfg.scan_layers:
+        x, new_caches = jax.lax.scan(body, x, layers_and_caches)
+    else:  # depth-unrolled analysis variant
+        new_list = []
+        for l in range(cfg.n_layers):
+            xs_l = jax.tree.map(lambda a: a[l], layers_and_caches)
+            x, nc_ = body(x, xs_l)
+            new_list.append(nc_)
+        new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *new_list)
+    x = _norm(cfg, params["norm_f"], x)
+    logits = _logits(cfg, params, bits_row, x)[:, 0]
+    return logits, new_caches
+
+
+def prefill(params: dict, cfg: ModelConfig, bits_row: jax.Array, batch: dict,
+            slots: int, *, kv_bits: int = 16):
+    """Full-sequence prefill → (last-token logits [B,V], decode-ready caches)."""
+    hidden, _, collected = forward(params, cfg, bits_row, batch, collect=True)
+    b, s, _ = hidden.shape
+    caches = init_caches(cfg, b, slots, kv_bits=kv_bits)
+    kv_col, ssm_col = (collected if isinstance(collected, tuple) and collected
+                       else (None, None))
+    if cfg.has_attn and kv_col is not None:
+        k_all, v_all = kv_col                   # [L, B, S, Hkv, hd]
+        eff = caches["kv"].token_idx.shape[-1]
+        take = min(eff, s)
+        idx = jnp.arange(s - take, s, dtype=jnp.int32)
+        slot = idx % eff
+
+        def fill(kvc, k_l, v_l):
+            if kvc.bits in (4, 8):
+                from repro.models.attention import _quantize_kv
+                qmax = 127.0 if kvc.bits == 8 else 7.0
+                ks = jnp.max(jnp.abs(k_l.astype(jnp.float32)), axis=(1, 3)) / qmax + 1e-9
+                vs = jnp.max(jnp.abs(v_l.astype(jnp.float32)), axis=(1, 3)) / qmax + 1e-9
+                kq = _quantize_kv(k_l, ks, kvc.bits)
+                vq = _quantize_kv(v_l, vs, kvc.bits)
+            else:
+                ks, vs = kvc.k_scale, kvc.v_scale
+                kq, vq = k_l.astype(kvc.k.dtype), v_l.astype(kvc.v.dtype)
+            return KVCache(
+                k=kvc.k.at[:, slot].set(kq[:, idx]),
+                v=kvc.v.at[:, slot].set(vq[:, idx]),
+                k_scale=ks, v_scale=vs,
+                token_idx=kvc.token_idx.at[:, slot].set(
+                    jnp.broadcast_to(idx[None], (b, take))),
+                bits=kvc.bits,
+            )
+
+        caches["kv"] = jax.vmap(fill)(caches["kv"], k_all, v_all)
+    if cfg.has_ssm and ssm_col is not None:
+        h_fin, conv_tail = ssm_col              # [L, B, H, P, N], [L, B, K-1, cd]
+        caches["ssm"] = SSMState(h=h_fin, conv=conv_tail.astype(jnp.float32))
+    logits = _logits(cfg, params, bits_row, hidden[:, -1:])[:, 0]
+    return logits, caches

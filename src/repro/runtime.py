@@ -1,0 +1,39 @@
+"""Runtime execution settings.
+
+``compute_dtype`` is bf16 on TPU (MXU-native) but f32 on CPU, where XLA's
+DotThunk cannot *execute* bf16×bf16→f32 (lowering works — the dry-run forces
+bf16 via :func:`set_compute_dtype` so the compiled HLO matches the TPU target's
+byte counts, but never runs the executable).
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compute_dtype", "set_compute_dtype", "use_compute_dtype"]
+
+_OVERRIDE = None
+
+
+def compute_dtype():
+    if _OVERRIDE is not None:
+        return _OVERRIDE
+    return jnp.bfloat16 if jax.default_backend() == "tpu" else jnp.float32
+
+
+def set_compute_dtype(dt) -> None:
+    global _OVERRIDE
+    _OVERRIDE = dt
+
+
+@contextlib.contextmanager
+def use_compute_dtype(dt):
+    global _OVERRIDE
+    prev = _OVERRIDE
+    _OVERRIDE = dt
+    try:
+        yield
+    finally:
+        _OVERRIDE = prev

@@ -1,0 +1,117 @@
+"""Adaptive serving engine: batched prefill + decode under the Profile Manager.
+
+The FPGA paper's runtime (Fig. 4 left) = Adaptive Inference Engine + Profile
+Manager. Here the engine is a pair of jitted functions closed over the merged
+profile family (profile_id is a traced scalar → switching never recompiles),
+and the manager picks the profile per decode step from the energy budget.
+
+KV cache precision is a deployment knob (``kv_bits``: 16 = bf16 baseline,
+8 = int8 — the beyond-paper memory-roofline win; the Pallas
+``qkv_attention`` kernel is the TPU path for the int8 layout).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import AdaptiveEngine
+from repro.core.manager import ProfileManager, ProfileStats
+from repro.models import transformer as T
+
+__all__ = ["ServingConfig", "AdaptiveServer", "Request"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingConfig:
+    slots: int = 4096           # KV slots (≥ prompt + generation budget)
+    kv_bits: int = 16           # 16 (bf16) | 8 (int8 cache)
+    max_batch: int = 8
+    greedy: bool = True
+
+
+@dataclasses.dataclass
+class Request:
+    tokens: np.ndarray          # [S] prompt
+    max_new: int = 32
+    accuracy_critical: bool = False
+
+
+class AdaptiveServer:
+    def __init__(self, cfg: T.ModelConfig, params, engine: AdaptiveEngine,
+                 serving: ServingConfig,
+                 manager: Optional[ProfileManager] = None):
+        self.cfg = cfg
+        self.params = params
+        self.engine = engine
+        self.scfg = serving
+        self.manager = manager
+        table = engine.table
+
+        def prefill_fn(params, profile_id, batch):
+            bits = jnp.asarray(table)[profile_id]
+            return T.prefill(params, cfg, bits, batch, serving.slots,
+                             kv_bits=serving.kv_bits)
+
+        def decode_fn(params, profile_id, tokens, pos, caches):
+            bits = jnp.asarray(table)[profile_id]
+            return T.decode_step(params, cfg, bits, tokens, pos, caches)
+
+        self._prefill = jax.jit(prefill_fn)
+        self._decode = jax.jit(decode_fn)
+
+    def _select_profile(self, critical: bool) -> int:
+        if self.manager is None:
+            return 0
+        return self.manager.select(accuracy_critical=critical)
+
+    def generate(self, prompts: np.ndarray, max_new: int,
+                 accuracy_critical: bool = False) -> dict:
+        """Batched greedy generation. prompts ``[B, S]`` int32 (same length —
+        the request queue pads). Returns tokens + the per-step profile trace."""
+        b, s = prompts.shape
+        pid = self._select_profile(accuracy_critical)
+        logits, caches = self._prefill(self.params, pid,
+                                       {"tokens": jnp.asarray(prompts)})
+        if self.manager is not None:
+            self.manager.account(pid, b)    # prefill billed like an inference
+        out = [int(np.argmax(np.asarray(logits)[i])) for i in range(b)]
+        tokens = [list(row) for row in prompts.tolist()]
+        trace = [self.engine.profile_names[pid]]
+        next_tok = jnp.asarray(np.asarray(out, np.int32)[:, None])
+        for step in range(max_new - 1):
+            pid = self._select_profile(accuracy_critical)
+            pos = jnp.full((b,), s + step, jnp.int32)
+            logits, caches = self._decode(self.params, pid, next_tok, pos, caches)
+            if self.manager is not None:
+                self.manager.account(pid, b)
+            nxt = np.argmax(np.asarray(logits), axis=-1).astype(np.int32)
+            for i in range(b):
+                tokens[i].append(int(next_tok[i, 0]))
+            next_tok = jnp.asarray(nxt[:, None])
+            trace.append(self.engine.profile_names[pid])
+        for i in range(b):
+            tokens[i].append(int(next_tok[i, 0]))
+        return {"tokens": [t[s:] for t in tokens], "profile_trace": trace}
+
+    def serve(self, requests: Sequence[Request]) -> list[dict]:
+        """Naive request batching: group by padded length up to max_batch."""
+        results: list[dict] = [None] * len(requests)  # type: ignore
+        order = sorted(range(len(requests)), key=lambda i: len(requests[i].tokens))
+        for i0 in range(0, len(order), self.scfg.max_batch):
+            group = order[i0:i0 + self.scfg.max_batch]
+            maxlen = max(len(requests[i].tokens) for i in group)
+            prompts = np.zeros((len(group), maxlen), np.int32)
+            for row, i in enumerate(group):
+                t = requests[i].tokens
+                prompts[row, maxlen - len(t):] = t   # left-pad
+            max_new = max(requests[i].max_new for i in group)
+            critical = any(requests[i].accuracy_critical for i in group)
+            out = self.generate(prompts, max_new, accuracy_critical=critical)
+            for row, i in enumerate(group):
+                results[i] = {"tokens": out["tokens"][row][:requests[i].max_new],
+                              "profile_trace": out["profile_trace"]}
+        return results

@@ -1,0 +1,86 @@
+"""Fault tolerance: injected failure → restart resumes bit-exactly; straggler
+monitor flags injected latencies; preemption checkpoints cleanly."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim.adam import AdamConfig
+from repro.train.loop import StragglerMonitor, TrainConfig, train
+
+
+def _setup():
+    key = jax.random.PRNGKey(0)
+    w_true = jax.random.normal(key, (8, 4))
+    params = {"w": jnp.zeros((8, 4))}
+
+    def loss_fn(params, batch):
+        pred = batch["x"] @ params["w"]
+        l = jnp.mean((pred - batch["y"]) ** 2)
+        return l, {"mse": l}
+
+    def data_at(step):
+        k = jax.random.PRNGKey(1000 + step)
+        x = jax.random.normal(k, (32, 8))
+        return {"x": x, "y": x @ w_true}
+
+    return params, loss_fn, data_at
+
+
+def test_restart_bit_exact(tmp_path):
+    params, loss_fn, data_at = _setup()
+    acfg = AdamConfig(lr=1e-2, total_steps=20, warmup_steps=2)
+
+    # uninterrupted reference run
+    ref = train(params, loss_fn, data_at,
+                TrainConfig(steps=20, ckpt_dir=str(tmp_path / "ref"),
+                            ckpt_every=5, log_every=100), acfg,
+                log=lambda s: None)
+
+    # failing run: dies at step 12, then restarts from checkpoint
+    ckpt = str(tmp_path / "fail")
+    with pytest.raises(RuntimeError, match="injected failure"):
+        train(params, loss_fn, data_at,
+              TrainConfig(steps=20, ckpt_dir=ckpt, ckpt_every=5,
+                          fail_at_step=12, log_every=100), acfg,
+              log=lambda s: None)
+    resumed = train(params, loss_fn, data_at,
+                    TrainConfig(steps=20, ckpt_dir=ckpt, ckpt_every=5,
+                                log_every=100), acfg, log=lambda s: None)
+
+    np.testing.assert_array_equal(np.asarray(ref["params"]["w"]),
+                                  np.asarray(resumed["params"]["w"]))
+    assert float(ref["history"][-1]) < float(ref["history"][0])  # it learns
+
+
+def test_straggler_monitor_flags_outliers():
+    mon = StragglerMonitor(window=10, k_sigma=3.0, min_steps=5)
+    for i in range(10):
+        assert not mon.record(i, 0.10 + 0.001 * (i % 3))
+    assert mon.record(10, 0.5)          # 5× the mean → flagged
+    assert mon.flagged and mon.flagged[0][0] == 10
+    assert not mon.record(11, 0.101)    # back to normal
+
+
+def test_preemption_checkpoints(tmp_path):
+    import os
+    import signal
+    params, loss_fn, data_at = _setup()
+    acfg = AdamConfig(lr=1e-2, total_steps=50, warmup_steps=2)
+    ckpt = str(tmp_path / "pre")
+
+    calls = {"n": 0}
+    orig = data_at
+
+    def data_with_sigterm(step):
+        calls["n"] += 1
+        if step == 7:
+            os.kill(os.getpid(), signal.SIGTERM)  # simulated preemption
+        return orig(step)
+
+    out = train(params, loss_fn, data_with_sigterm,
+                TrainConfig(steps=50, ckpt_dir=ckpt, ckpt_every=100,
+                            log_every=100), acfg, log=lambda s: None)
+    assert out["last_step"] < 49            # exited early
+    from repro.checkpoint.manager import latest_step
+    assert latest_step(ckpt) is not None    # checkpointed on the way out

@@ -1,0 +1,116 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode; shape/dtype sweeps)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import QuantSpec, quantize_native
+from repro.kernels import ref
+from repro.kernels.ops import qmatmul, qmatmul_qt
+from repro.kernels.qkv_attention import qkv_attention_pallas
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 128, 128), (64, 256, 384),
+                                   (5, 100, 70), (1, 512, 256), (33, 96, 40)])
+@pytest.mark.parametrize("bits", [8, 4])
+def test_qmatmul_matches_oracle(m, k, n, bits):
+    key = jax.random.PRNGKey(m * 1000 + n + bits)
+    kx, kw = jax.random.split(key)
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    w = jax.random.normal(kw, (k, n), jnp.float32) * 0.1
+    qt = quantize_native(w, QuantSpec(bits=bits, per_channel=True,
+                                      channel_axis=-1, po2_scale=False))
+    scale = jnp.asarray(qt.scale, jnp.float32).reshape(-1)
+    y_ref = ref.qmatmul_ref(x, qt.data, scale, bits)
+    y = qmatmul_qt(x, qt)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-4)
+
+
+@pytest.mark.parametrize("xdtype", [jnp.float32, jnp.bfloat16])
+def test_qmatmul_dtypes(xdtype):
+    key = jax.random.PRNGKey(7)
+    x = jax.random.normal(key, (16, 128), jnp.float32).astype(xdtype)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (128, 128)) * 0.1
+    qt = quantize_native(w, QuantSpec(bits=8))
+    y = qmatmul_qt(x, qt)
+    y_ref = ref.qmatmul_ref(x.astype(jnp.float32), qt.data,
+                            jnp.asarray(qt.scale).reshape(-1), 8)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=3e-2 if xdtype == jnp.bfloat16 else 1e-4)
+
+
+def test_qmatmul_fused_requant():
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (16, 128))
+    w = jax.random.normal(jax.random.fold_in(key, 2), (128, 128)) * 0.1
+    qt = quantize_native(w, QuantSpec(bits=8))
+    scale = jnp.asarray(qt.scale).reshape(-1)
+    for out_bits, out_scale in [(8, 0.25), (4, 0.5)]:
+        y = qmatmul_qt(x, qt, out_bits=out_bits, out_scale=out_scale)
+        y_ref = ref.qmatmul_ref(x, qt.data, scale, 8,
+                                out_scale=out_scale, out_bits=out_bits)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-5)
+        # output lands on the fixed-point grid
+        q = np.asarray(y) / out_scale
+        np.testing.assert_allclose(q, np.round(q), atol=1e-4)
+
+
+def test_qmatmul_batched_and_grad():
+    key = jax.random.PRNGKey(5)
+    x = jax.random.normal(key, (2, 3, 128))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (128, 64)) * 0.1
+    qt = quantize_native(w, QuantSpec(bits=8))
+    y = qmatmul_qt(x, qt)
+    assert y.shape == (2, 3, 64)
+    g = jax.grad(lambda x_: qmatmul_qt(x_, qt).sum())(x)
+    # dx == dy @ dequant(w).T with dy = 1
+    wd = np.asarray(ref.dequant_ref(qt.data, jnp.asarray(qt.scale).reshape(-1), 8))
+    np.testing.assert_allclose(np.asarray(g), np.broadcast_to(
+        wd.sum(-1), x.shape), rtol=2e-2, atol=1e-3)
+
+
+@pytest.mark.parametrize("s,block", [(128, 64), (256, 256), (192, 64)])
+def test_qkv_attention_matches_oracle(s, block):
+    key = jax.random.PRNGKey(s)
+    g, hg, d = 3, 2, 32
+    q = jax.random.normal(key, (g, hg, d), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (g, s, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (g, s, d))
+    ks = jnp.abs(k).max(axis=(1, 2)) / 127.0
+    vs = jnp.abs(v).max(axis=(1, 2)) / 127.0
+    kq = jnp.clip(jnp.round(k / ks[:, None, None]), -127, 127).astype(jnp.int8)
+    vq = jnp.clip(jnp.round(v / vs[:, None, None]), -127, 127).astype(jnp.int8)
+    lengths = jnp.asarray([s, s // 2, 3], jnp.int32)
+    out = qkv_attention_pallas(q, kq, vq, ks, vs, lengths, block_s=block,
+                               interpret=True)
+    for gi in range(g):
+        L = int(lengths[gi])
+        kf = jnp.broadcast_to((kq[gi, :L].astype(jnp.float32)
+                               * ks[gi])[None, None], (1, hg, L, d))
+        vf = jnp.broadcast_to((vq[gi, :L].astype(jnp.float32)
+                               * vs[gi])[None, None], (1, hg, L, d))
+        o_ref = ref.qkv_attention_ref(q[gi][None, :, None, :], kf, vf,
+                                      1.0, 1.0)[0, :, 0, :]
+        np.testing.assert_allclose(np.asarray(out[gi]), np.asarray(o_ref),
+                                   atol=1e-4)
+
+
+@pytest.mark.parametrize("m,n,bits,po2", [(64, 128, 8, True), (100, 64, 4, True),
+                                          (257, 96, 8, False), (8, 32, 2, True)])
+def test_aquant_matches_fake_quant(m, n, bits, po2):
+    """Fused activation-quant kernel == fake_quant numerics (bit-exact)."""
+    from repro.kernels.aquant import aquant_pallas
+    x = jax.random.normal(jax.random.PRNGKey(m + n), (m, n), jnp.float32) * 3.7
+    y = aquant_pallas(x, bits=bits, po2=po2, block_rows=64, interpret=True)
+    y_ref = ref.aquant_ref(x, bits=bits, po2=po2)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-6)
+
+
+def test_aquant_idempotent_and_grid():
+    from repro.kernels.aquant import aquant_pallas
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 64))
+    y = aquant_pallas(x, bits=6, interpret=True)
+    y2 = aquant_pallas(y, bits=6, interpret=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y2), atol=1e-6)
+    # output values land on at most 2^bits distinct levels
+    assert len(np.unique(np.asarray(y))) <= 2 ** 6

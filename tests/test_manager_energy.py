@@ -1,0 +1,71 @@
+"""Profile Manager policy + energy/roofline model."""
+import numpy as np
+import pytest
+
+from repro.core.energy import TPU_V5E, activity_factor, roofline_terms, step_energy
+from repro.core.manager import ProfileManager, ProfileStats, battery_simulation
+
+STATS = [
+    ProfileStats("hi", accuracy=0.99, energy_j=2.0, latency_s=1e-3),
+    ProfileStats("lo", accuracy=0.95, energy_j=1.0, latency_s=1e-3),
+]
+
+
+def test_roofline_terms_dominance():
+    t = roofline_terms(flops=1e15, hbm_bytes=1e9, coll_bytes=1e6, chips=1)
+    assert t["dominant"] == "compute_s"
+    t = roofline_terms(flops=1e9, hbm_bytes=1e13, coll_bytes=1e6, chips=1)
+    assert t["dominant"] == "memory_s"
+    t = roofline_terms(flops=1e9, hbm_bytes=1e6, coll_bytes=1e13, chips=1)
+    assert t["dominant"] == "collective_s"
+    assert t["t_step_s"] == max(t["compute_s"], t["memory_s"], t["collective_s"])
+
+
+def test_activity_monotone_in_bits():
+    a44 = activity_factor(4, 4)
+    a88 = activity_factor(8, 8)
+    a168 = activity_factor(16, 8)
+    assert a44 < a88 < a168 <= 1.0
+    assert step_energy(1.0, a44) < step_energy(1.0, a88)
+
+
+def test_manager_prefers_cheapest_meeting_target():
+    mgr = ProfileManager(STATS, accuracy_target=0.98, accuracy_floor=0.90,
+                         budget_j=1e9)
+    assert mgr.select() == 0  # only "hi" meets 0.98
+
+
+def test_manager_saver_mode_and_hysteresis():
+    mgr = ProfileManager(STATS, accuracy_target=0.98, accuracy_floor=0.90,
+                         budget_j=100.0, low_energy=0.2, hysteresis=0.05)
+    mgr.spent_j = 85.0  # 15% remaining < low_energy → saver
+    assert mgr.select() == 1                      # cheapest above floor
+    assert mgr.select(accuracy_critical=True) == 0  # critical overrides
+    mgr.spent_j = 79.0  # 21% — inside hysteresis band, stays saver
+    assert mgr.select() == 1
+    mgr.spent_j = 70.0  # 30% — exits saver
+    assert mgr.select() == 0
+
+
+def test_manager_graceful_when_floor_unreachable():
+    mgr = ProfileManager(STATS, accuracy_target=0.999, accuracy_floor=0.999,
+                         budget_j=10.0)
+    assert mgr.select() == 0  # degrades to most accurate, never crashes
+
+
+def test_battery_adaptive_beats_fixed():
+    budget = 1000.0
+    adaptive = battery_simulation(STATS, budget, accuracy_target=0.98,
+                                  accuracy_floor=0.90, critical_every=10)
+    fixed = battery_simulation(STATS, budget, accuracy_target=0.98,
+                               accuracy_floor=0.90, fixed_profile=0)
+    # Fig. 4 claim: adaptive executes more classifications on the same budget
+    assert adaptive["classifications"] > fixed["classifications"]
+    # at a bounded accuracy cost
+    assert adaptive["mean_accuracy"] > 0.95
+    assert fixed["mean_accuracy"] == pytest.approx(0.99)
+
+
+def test_battery_budget_exhaustion_exact():
+    out = battery_simulation(STATS[:1], 10.0, 0.9, 0.9)
+    assert out["classifications"] == 5  # 10 J / 2 J each

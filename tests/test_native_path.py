@@ -1,0 +1,80 @@
+"""Native integer-carrier deployment path (serving): structure + numerics."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core.profiles import Profile, profile_table
+from repro.core.quantizers import QTensor
+from repro.models import transformer as T
+from repro.models.native import to_native
+
+
+@pytest.mark.parametrize("arch", ["granite-3-2b", "deepseek-moe-16b"])
+@pytest.mark.parametrize("w_bits", [8, 4])
+def test_to_native_structure(arch, w_bits):
+    cfg = get_smoke(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    nat = to_native(params, w_bits)
+    # linears converted, norms untouched
+    assert isinstance(nat["layers"]["qkv"]["wq"], QTensor)
+    assert "w" not in nat["layers"]["qkv"]
+    assert "g" in nat["layers"]["norm_attn"]
+    # stacked leaves keep the layer dim (scan compatibility)
+    L = cfg.n_layers
+    assert nat["layers"]["qkv"]["wq"].data.shape[0] == L
+    assert nat["layers"]["qkv"]["wq"].scale.shape[0] == L
+    if cfg.moe is not None:
+        assert isinstance(nat["layers"]["moe"]["w_in"], QTensor)
+    # int4 packs two per byte on the last dim
+    if w_bits == 4:
+        w = params["layers"]["qkv"]["w"]
+        assert nat["layers"]["qkv"]["wq"].data.shape[-1] == w.shape[-1] // 2
+
+
+@pytest.mark.parametrize("arch", ["granite-3-2b", "mamba2-130m"])
+def test_native_decode_close_to_fake(arch):
+    """W8 native decode ≈ the fake-quant path (different scale granularity:
+    per-channel float vs per-tensor po2 → loose tolerance, same argmax)."""
+    cfg = get_smoke(arch)
+    key = jax.random.PRNGKey(1)
+    params = T.init_params(cfg, key)
+    names = T.quant_layer_names(cfg)
+    # activations float, weights 8-bit → isolates the weight path
+    prof = Profile("A32-W8", {n: (32, 8) for n in names})
+    br = profile_table([prof], names)[0]
+    nat = to_native(params, 8)
+    B = 2
+    caches_f = T.init_caches(cfg, B, 16, kv_bits=32)
+    caches_n = T.init_caches(cfg, B, 16, kv_bits=32)
+    toks = jax.random.randint(key, (B, 1), 0, cfg.vocab)
+    pos = jnp.zeros((B,), jnp.int32)
+    lg_f, _ = T.decode_step(params, cfg, br, toks, pos, caches_f)
+    lg_n, _ = T.decode_step(nat, cfg, br, toks, pos, caches_n)
+    rel = (float(jnp.max(jnp.abs(lg_n - lg_f)))
+           / max(1e-9, float(jnp.max(jnp.abs(lg_f)))))
+    assert rel < 0.15, rel
+    assert (np.argmax(np.asarray(lg_n), -1) == np.argmax(np.asarray(lg_f), -1)).mean() >= 0.5
+
+
+def test_native_forward_runs_all_families():
+    for arch in ["qwen2-vl-2b", "hymba-1.5b", "hubert-xlarge"]:
+        cfg = get_smoke(arch)
+        key = jax.random.PRNGKey(2)
+        params = to_native(T.init_params(cfg, key), 8)
+        names = T.quant_layer_names(cfg)
+        br = profile_table([Profile.float32(names)], names)[0]
+        B, S = 2, 32
+        if cfg.frontend == "audio":
+            batch = {"features": jax.random.normal(key, (B, S, cfg.feature_dim))}
+        elif cfg.frontend == "vision":
+            batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab),
+                     "patch_embeds": jax.random.normal(
+                         key, (B, cfg.n_patches, cfg.d_model))}
+        else:
+            batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab)}
+        h, _, _ = T.forward(params, cfg, br, batch)
+        assert np.isfinite(np.asarray(h)).all(), arch

@@ -1,0 +1,112 @@
+"""Profiles, MDC-analogue merging, and the adaptive engine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (AdaptiveEngine, Profile, QuantIndex, fake_quant_dynamic,
+                        merge_plan, profile_table, switch_images)
+from repro.core.profiles import paper_profiles, parse_profile_string
+
+LAYERS = ("conv0", "conv1", "fc")
+
+
+def test_parse_profile_string():
+    assert parse_profile_string("A16-W8") == (16, 8)
+    with pytest.raises(ValueError):
+        parse_profile_string("B16-W8")
+
+
+def test_paper_profiles_family():
+    profs = paper_profiles(LAYERS, inner_layers=["conv1"])
+    names = [p.name for p in profs]
+    assert names == ["A16-W8", "A16-W4", "A8-W8", "A8-W4", "A4-W4", "Mixed"]
+    mixed = profs[-1]
+    assert mixed.bits["conv1"] == (4, 4) and mixed.bits["conv0"] == (8, 8)
+
+
+def test_paper_merge_structure():
+    """The paper's pair (A8-W8 + Mixed) shares all layers but the inner conv."""
+    profs = {p.name: p for p in paper_profiles(LAYERS, inner_layers=["conv1"])}
+    plan = merge_plan([profs["A8-W8"], profs["Mixed"]])
+    assert plan.shared_layers == ("conv0", "fc")
+    assert plan.switched_layers == ("conv1",)
+    res = plan.resource_bytes({"conv0": (3, 3, 1, 64), "conv1": (3, 3, 64, 64),
+                               "fc": (3136, 10)})
+    # merged engine ≤ sum of standalones (resource sharing), ≥ largest single
+    assert res["merged_bytes"] <= res["sum_standalone_bytes"]
+    assert res["merged_bytes"] >= max(res["standalone_bytes"].values())
+
+
+@given(st.lists(st.tuples(st.sampled_from([4, 8, 16]),
+                          st.sampled_from([4, 8])), min_size=1, max_size=4))
+@settings(max_examples=30, deadline=None)
+def test_merge_plan_invariants(bit_choices):
+    profs = [Profile(f"p{i}", {ln: bits for ln in LAYERS})
+             for i, bits in enumerate(bit_choices)]
+    plan = merge_plan(profs)
+    # partition property
+    assert set(plan.shared_layers) | set(plan.switched_layers) == set(LAYERS)
+    assert not set(plan.shared_layers) & set(plan.switched_layers)
+    # selector indexes into distinct specs and reproduces each profile
+    for ln in LAYERS:
+        for pi, p in enumerate(profs):
+            assert plan.distinct_specs[ln][plan.selector[ln][pi]] == p.bits[ln]
+    # distinct specs are unique
+    for ln in LAYERS:
+        assert len(set(plan.distinct_specs[ln])) == len(plan.distinct_specs[ln])
+
+
+def test_profile_table_and_engine_switching():
+    profs = paper_profiles(LAYERS, inner_layers=["conv1"])
+    idx = QuantIndex(LAYERS)
+    x = jnp.linspace(-2, 2, 101)
+    ss = jnp.asarray(np.array([1, 0], np.int32))
+
+    def apply_fn(params, bits_row, x):
+        a = fake_quant_dynamic(x, idx.a_bits(bits_row, "conv0"), ss)
+        b = fake_quant_dynamic(x, idx.a_bits(bits_row, "conv1"), ss)
+        return a, b
+
+    eng = AdaptiveEngine(tuple(profs), idx, apply_fn)
+    f = jax.jit(eng)
+    a8, b8 = f(None, eng.profile_id("A8-W8"), x)
+    am, bm = f(None, eng.profile_id("Mixed"), x)
+    # shared layer conv0: identical; switched layer conv1: differs
+    np.testing.assert_array_equal(np.asarray(a8), np.asarray(am))
+    assert float(jnp.max(jnp.abs(b8 - bm))) > 0
+
+
+def test_engine_one_compilation_for_all_profiles():
+    profs = paper_profiles(LAYERS, inner_layers=["conv1"])
+    idx = QuantIndex(LAYERS)
+    calls = {"n": 0}
+
+    def apply_fn(params, bits_row, x):
+        calls["n"] += 1
+        return fake_quant_dynamic(x, idx.a_bits(bits_row, "conv1"),
+                                  jnp.asarray(np.array([1, 0], np.int32)))
+
+    eng = AdaptiveEngine(tuple(profs), idx, apply_fn)
+    f = jax.jit(eng)
+    x = jnp.ones(8)
+    for pid in range(len(profs)):
+        f(None, pid, x)
+    assert calls["n"] == 1  # traced once → profile switch is data, not recompile
+
+
+def test_switch_images_selects():
+    imgs = [jnp.zeros(3), jnp.ones(3), jnp.full(3, 2.0)]
+    for i in range(3):
+        out = switch_images(jnp.int32(i), imgs, lambda t: t)
+        np.testing.assert_array_equal(np.asarray(out), np.full(3, float(i)))
+
+
+def test_merge_report():
+    profs = paper_profiles(LAYERS, inner_layers=["conv1"])
+    idx = QuantIndex(LAYERS)
+    eng = AdaptiveEngine(tuple(profs), idx, lambda p, br, x: x)
+    rep = eng.merge_report({"conv0": (3, 3, 1, 64), "conv1": (3, 3, 64, 64),
+                            "fc": (3136, 10)})
+    assert rep["n_layers"] == 3 and "resources" in rep

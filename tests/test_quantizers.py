@@ -1,0 +1,115 @@
+"""Property tests for the quantization core (hypothesis + targeted cases)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (QuantSpec, compute_scale, fake_quant,
+                        fake_quant_dynamic, pack_int4, qrange,
+                        quantize_native, dequantize, unpack_int4)
+
+SS = jnp.asarray(np.array([1, 0], np.int32))
+
+
+@st.composite
+def arrays(draw, max_size=64):
+    n = draw(st.integers(2, max_size))
+    vals = draw(st.lists(st.floats(-100, 100, allow_nan=False, width=32),
+                         min_size=n, max_size=n))
+    return np.asarray(vals, np.float32)
+
+
+@given(arrays(), st.integers(2, 16), st.booleans())
+@settings(max_examples=40, deadline=None)
+def test_fake_quant_bounded_error(x, bits, po2):
+    """|fq(x) − x| ≤ scale/2 inside the representable range (round-to-nearest)."""
+    spec = QuantSpec(bits=bits, po2_scale=po2)
+    xj = jnp.asarray(x)
+    y = np.asarray(fake_quant(xj, spec))
+    scale = float(compute_scale(xj, spec))
+    qmin, qmax = qrange(spec)
+    inside = (x >= qmin * scale) & (x <= qmax * scale)
+    assert np.all(np.abs(y[inside] - x[inside]) <= scale / 2 + 1e-6)
+
+
+@given(arrays(), st.integers(2, 12))
+@settings(max_examples=30, deadline=None)
+def test_fake_quant_idempotent(x, bits):
+    spec = QuantSpec(bits=bits, po2_scale=True)
+    xj = jnp.asarray(x)
+    s = compute_scale(xj, spec)
+    y1 = fake_quant(xj, spec, s)
+    y2 = fake_quant(y1, spec, s)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-6)
+
+
+@given(arrays(), st.integers(2, 12))
+@settings(max_examples=30, deadline=None)
+def test_fake_quant_monotone(x, bits):
+    """Quantization preserves order (monotone non-decreasing)."""
+    spec = QuantSpec(bits=bits)
+    xs = np.sort(x)
+    y = np.asarray(fake_quant(jnp.asarray(xs), spec))
+    assert np.all(np.diff(y) >= -1e-6)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 8))
+@settings(max_examples=25, deadline=None)
+def test_pack_unpack_roundtrip(seed, rows):
+    rng = np.random.default_rng(seed)
+    q = rng.integers(-8, 8, (rows, 16)).astype(np.int8)
+    out = np.asarray(unpack_int4(pack_int4(jnp.asarray(q))))
+    np.testing.assert_array_equal(out, q)
+
+
+@given(arrays(max_size=32), st.sampled_from([4, 8]))
+@settings(max_examples=25, deadline=None)
+def test_native_matches_fake(x, bits):
+    """quantize_native→dequantize == fake_quant on the same grid/scale."""
+    if len(x) % 2:
+        x = x[:-1]
+    spec = QuantSpec(bits=bits, po2_scale=True)
+    xj = jnp.asarray(x)
+    s = compute_scale(xj, spec)
+    fake = np.asarray(fake_quant(xj, spec, s))
+    nat = np.asarray(dequantize(quantize_native(xj, spec, s), jnp.float32))
+    np.testing.assert_allclose(nat, fake, atol=1e-5)
+
+
+def test_dynamic_matches_static():
+    x = jnp.linspace(-3, 3, 257)
+    for bits in (2, 4, 8, 16):
+        y_static = fake_quant(x, QuantSpec(bits=bits, po2_scale=True))
+        y_dyn = fake_quant_dynamic(x, jnp.int32(bits), SS)
+        np.testing.assert_allclose(np.asarray(y_static), np.asarray(y_dyn),
+                                   atol=1e-6)
+
+
+def test_dynamic_float_passthrough():
+    x = jnp.linspace(-3, 3, 64)
+    np.testing.assert_array_equal(
+        np.asarray(fake_quant_dynamic(x, jnp.int32(32), SS)), np.asarray(x))
+
+
+def test_ste_gradient_mask():
+    x = jnp.asarray([-100.0, -0.5, 0.0, 0.5, 100.0])
+    spec = QuantSpec(bits=8)
+    g = jax.grad(lambda v: fake_quant(v, spec, jnp.asarray(0.01)).sum())(x)
+    # inside clip range → 1, outside → 0
+    np.testing.assert_allclose(np.asarray(g), [0, 1, 1, 1, 0], atol=1e-6)
+
+
+def test_per_channel_scale_shape():
+    w = jnp.ones((4, 6))
+    spec = QuantSpec(bits=8, per_channel=True, channel_axis=-1)
+    s = compute_scale(w, spec)
+    assert s.shape == (1, 6)
+
+
+def test_stochastic_rounding_unbiased():
+    spec = QuantSpec(bits=8, stochastic=True)
+    x = jnp.full((20000,), 0.3)
+    s = jnp.asarray(1.0)
+    y = fake_quant(x, spec, s, key=jax.random.PRNGKey(0))
+    assert abs(float(y.mean()) - 0.3) < 0.02  # E[q] = x

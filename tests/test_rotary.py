@@ -1,0 +1,47 @@
+"""Rotary embeddings: RoPE properties and M-RoPE text-degeneracy."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.rotary import apply_mrope, apply_rope, text_mrope_positions
+
+
+def test_rope_preserves_norm():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 4, 32))
+    pos = jnp.broadcast_to(jnp.arange(8)[None], (2, 8))
+    y = apply_rope(x, pos)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                               np.linalg.norm(np.asarray(y), axis=-1),
+                               rtol=1e-5)
+
+
+def test_rope_relative_property():
+    """<rope(q,i), rope(k,j)> depends only on i-j."""
+    d = 32
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, d))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, d))
+    def dot_at(i, j):
+        qi = apply_rope(q, jnp.asarray([[i]]))
+        kj = apply_rope(k, jnp.asarray([[j]]))
+        return float(jnp.sum(qi * kj))
+    assert abs(dot_at(5, 3) - dot_at(10, 8)) < 1e-3
+    assert abs(dot_at(5, 3) - dot_at(5, 4)) > 1e-5
+
+
+def test_mrope_text_equals_rope():
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 8, 4, 16))
+    pos = jnp.broadcast_to(jnp.arange(8)[None], (2, 8))
+    y_rope = apply_rope(x, pos, theta=1e4)
+    y_mrope = apply_mrope(x, text_mrope_positions(pos), (2, 3, 3), theta=1e4)
+    np.testing.assert_allclose(np.asarray(y_rope), np.asarray(y_mrope),
+                               atol=1e-5)
+
+
+def test_mrope_streams_differ():
+    x = jax.random.normal(jax.random.PRNGKey(4), (1, 4, 2, 16))
+    pos = jnp.broadcast_to(jnp.arange(4)[None], (1, 4))
+    p3 = text_mrope_positions(pos)
+    p3_shift = p3.at[:, 1].add(7)  # shift the height stream only
+    y0 = apply_mrope(x, p3, (2, 3, 3))
+    y1 = apply_mrope(x, p3_shift, (2, 3, 3))
+    assert float(jnp.max(jnp.abs(y0 - y1))) > 1e-4

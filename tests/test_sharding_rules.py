@@ -1,0 +1,96 @@
+"""Sharding-rule unit tests (pure spec computation — no multi-device runtime;
+the real 256/512-device lowering is exercised by the dry-run)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+
+class FakeMesh:
+    """Duck-typed mesh exposing .shape / .axis_names for the rule table."""
+
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+from repro.launch.sharding import batch_specs, cache_specs, param_specs
+
+MESH1 = FakeMesh({"data": 16, "model": 16})
+MESH2 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def _sds(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def test_embed_and_head_specs():
+    tree = {"embed": {"w": _sds(152064, 8192)}, "lm_head": {"w": _sds(8192, 152064)}}
+    specs = param_specs(tree, MESH1)
+    assert specs["embed"]["w"] == P("model", "data")
+    assert specs["lm_head"]["w"] == P("data", "model")
+
+
+def test_column_row_pairs():
+    tree = {"layers": {"qkv": {"w": _sds(80, 8192, 10240)},
+                       "attn_out": {"w": _sds(80, 8192, 8192)},
+                       "mlp": {"w_in": {"w": _sds(80, 8192, 59136)},
+                               "w_out": {"w": _sds(80, 29568, 8192)}}}}
+    specs = param_specs(tree, MESH1)
+    assert specs["layers"]["qkv"]["w"] == P(None, "data", "model")
+    assert specs["layers"]["attn_out"]["w"] == P(None, "model", "data")
+    assert specs["layers"]["mlp"]["w_in"]["w"] == P(None, "data", "model")
+    assert specs["layers"]["mlp"]["w_out"]["w"] == P(None, "model", "data")
+
+
+def test_multipod_fsdp_uses_pod_and_data():
+    tree = {"layers": {"qkv": {"w": _sds(80, 8192, 10240)}}}
+    specs = param_specs(tree, MESH2)
+    assert specs["layers"]["qkv"]["w"] == P(None, ("pod", "data"), "model")
+
+
+def test_moe_expert_parallel():
+    tree = {"layers": {"moe": {"w_in": _sds(28, 64, 2048, 2816),
+                               "w_out": _sds(28, 64, 1408, 2048),
+                               "router": {"w": _sds(28, 2048, 64)}}}}
+    specs = param_specs(tree, MESH1)
+    assert specs["layers"]["moe"]["w_in"] == P(None, "model", "data")
+    assert specs["layers"]["moe"]["w_out"][1] == "model"
+    assert specs["layers"]["moe"]["router"]["w"] == P(None, "data")
+
+
+def test_norms_replicated():
+    specs = param_specs({"layers": {"norm_attn": {"g": _sds(80, 8192)}}}, MESH1)
+    assert specs["layers"]["norm_attn"]["g"] == P()
+
+
+def test_divisibility_fallback():
+    """Dims that don't divide the axis are silently replicated, not errors."""
+    tree = {"layers": {"qkv": {"w": _sds(2, 100, 999)}}}  # 999 % 16 != 0
+    specs = param_specs(tree, MESH1)
+    assert specs["layers"]["qkv"]["w"] == P()  # both dims dropped (100 too)
+
+
+def test_batch_specs_and_long500k_fallback():
+    b = {"tokens": _sds(256, 4096), "labels": _sds(256, 4096)}
+    specs = batch_specs(b, MESH1)
+    assert specs["tokens"] == P("data")
+    one = batch_specs({"tokens": _sds(1, 524288)}, MESH1)
+    assert one["tokens"] == P()  # batch=1 can't shard → replicate, don't fail
+
+
+def test_cache_specs():
+    from repro.models.attention import KVCache
+    kv = KVCache(k=_sds(80, 128, 32768, 8, 128), v=_sds(80, 128, 32768, 8, 128),
+                 k_scale=_sds(80, 128, 8), v_scale=_sds(80, 128, 8),
+                 token_idx=jax.ShapeDtypeStruct((80, 128, 32768), jnp.int32))
+    specs = cache_specs({"kv": kv}, MESH1)
+    assert specs["kv"].k[1] == "data"          # batch over data
+    assert specs["kv"].k[2] == "model"         # Hkv=8 % 16 → slots sharded
+    assert specs["kv"].token_idx == P(None, "data", "model")
+    # divisible Hkv → heads sharded instead
+    kv16 = KVCache(k=_sds(28, 128, 32768, 16, 128), v=_sds(28, 128, 32768, 16, 128),
+                   k_scale=_sds(28, 128, 16), v_scale=_sds(28, 128, 16),
+                   token_idx=jax.ShapeDtypeStruct((28, 128, 32768), jnp.int32))
+    specs16 = cache_specs({"kv": kv16}, MESH1)
+    assert specs16["kv"].k[3] == "model"
