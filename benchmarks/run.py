@@ -44,6 +44,10 @@ def main() -> None:
     rows.extend(kernel_bench.bench_qmatmul())
     rows.extend(kernel_bench.bench_qkv_attention())
 
+    # --- serving decode loop (fused scan vs per-token host loop) ---
+    from benchmarks import serving_bench
+    rows.extend(serving_bench.run(serving_bench.QUICK_POINTS, iters=2))
+
     # --- roofline (from dry-run artifacts when present) ---
     try:
         from benchmarks import roofline

@@ -1,0 +1,111 @@
+"""Serving decode-loop benchmark: fused scan generate vs seed per-token loop.
+
+Emits ``name,us_per_call,derived`` rows (harness contract). Each point runs
+the same greedy generation twice — ``serve_fused_*`` (single jitted
+``lax.scan`` dispatch, donated caches) and ``serve_stepwise_*`` (the seed
+loop: one dispatch + ``np.asarray`` host sync + host argmax per token) — and
+reports tokens/sec plus the fused/stepwise speedup in ``derived``.
+
+CPU interpret-path numbers: what they measure is the *runtime overhead around
+the kernels* (dispatch count, host syncs, cache copies), which is exactly the
+adaptive-inference tax the paper says must be negligible. TPU numbers come
+from deployment.
+
+  PYTHONPATH=src python benchmarks/serving_bench.py [--quick] [--iters N]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.core.engine import AdaptiveEngine, QuantIndex
+from repro.core.profiles import paper_profiles
+from repro.models import transformer as T
+from repro.serving.engine import AdaptiveServer, ServingConfig
+
+# (batch, prompt_len, max_new, kv_bits) — batch ≥ 4 / new ≥ 32 are the
+# acceptance points for the fused-loop speedup
+POINTS = [
+    (1, 16, 32, 16),
+    (4, 16, 32, 16),
+    (4, 16, 32, 8),
+    (4, 64, 64, 16),
+    (8, 32, 64, 16),
+    (8, 32, 64, 8),
+]
+QUICK_POINTS = [(4, 16, 32, 16), (4, 16, 32, 8)]
+
+
+def _build(arch: str = "granite-3-2b"):
+    cfg = get_smoke(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    names = T.quant_layer_names(cfg)
+    profs = paper_profiles(names, inner_layers=[])
+    eng = AdaptiveEngine(tuple(profs), QuantIndex(names),
+                         lambda p, br, b: T.train_loss(p, cfg, br, b))
+    return cfg, params, eng
+
+
+def _time(fn, iters: int) -> float:
+    fn()                                  # warmup: compile outside the clock
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters
+
+
+def bench_point(cfg, params, eng, b, s, new, kv_bits, iters: int):
+    scfg = ServingConfig(slots=s + new + 8, kv_bits=kv_bits, max_batch=b)
+    srv = AdaptiveServer(cfg, params, eng, scfg)
+    prompts = np.random.default_rng(0).integers(
+        0, cfg.vocab, (b, s)).astype(np.int32)
+
+    t_fused = _time(lambda: srv.generate(prompts, new), iters)
+    t_step = _time(lambda: srv.generate_stepwise(prompts, new), iters)
+
+    tag = f"b{b}_p{s}_n{new}_kv{kv_bits}"
+    toks = b * new
+    tok_s_fused = toks / t_fused
+    tok_s_step = toks / t_step
+    speedup = t_step / t_fused
+    rows = [
+        (f"serve_fused_{tag}", t_fused * 1e6,
+         f"tok_s={tok_s_fused:.0f};speedup_vs_stepwise={speedup:.2f}x"),
+        (f"serve_stepwise_{tag}", t_step * 1e6,
+         f"tok_s={tok_s_step:.0f};dispatches_per_call={new}"),
+    ]
+    return rows, speedup
+
+
+def run(points=None, iters: int = 3) -> list[tuple]:
+    cfg, params, eng = _build()
+    rows: list[tuple] = []
+    for b, s, new, kv in (points or POINTS):
+        point_rows, _ = bench_point(cfg, params, eng, b, s, new, kv, iters)
+        rows.extend(point_rows)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="two acceptance points only")
+    ap.add_argument("--iters", type=int, default=3)
+    args = ap.parse_args()
+    rows = run(QUICK_POINTS if args.quick else POINTS, iters=args.iters)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Tier-1 CI gate (mirrors ROADMAP.md): the full suite must pass.
+#
+#   ./scripts/ci.sh            # tier-1: pytest -x -q
+#   ./scripts/ci.sh --bench    # additionally run the serving benchmark
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q
+
+if [[ "${1:-}" == "--bench" ]]; then
+    python benchmarks/serving_bench.py --quick
+fi

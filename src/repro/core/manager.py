@@ -15,6 +15,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Sequence
 
+import numpy as np
+
 __all__ = ["ProfileStats", "ProfileManager", "battery_simulation"]
 
 
@@ -72,6 +74,23 @@ class ProfileManager:
 
     def account(self, profile_idx: int, n_inferences: int = 1) -> None:
         self.spent_j += self.profiles[profile_idx].energy_j * n_inferences
+
+    def plan_schedule(self, steps: int, n_per_step: int = 1,
+                      accuracy_critical: bool = False) -> np.ndarray:
+        """Select-and-account ``steps`` inferences ahead → ``int32[steps]``.
+
+        The policy is deterministic given the energy ledger, so the per-step
+        profile ids of a multi-token generate call can be precomputed and fed
+        to the engine as *data* (the schedule array rides through the jitted
+        decode scan without retracing — the bits-as-data analogue of the
+        paper's runtime configuration word). Identical ledger evolution to
+        calling ``select``/``account`` once per step.
+        """
+        sched = np.empty((steps,), np.int32)
+        for i in range(steps):
+            sched[i] = self.select(accuracy_critical=accuracy_critical)
+            self.account(int(sched[i]), n_per_step)
+        return sched
 
     def exhausted(self) -> bool:
         return self.spent_j >= self.budget_j

@@ -168,6 +168,9 @@ def _lower_step(cfg, shape, mesh, *, native_bits, kv_bits, serve_layout=False):
 def _measure(compiled) -> dict:
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    # jax <= 0.4.x returns a one-element list of dicts; newer returns the dict
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     coll = collective_bytes(hlo)
 
@@ -290,9 +293,10 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, *,
     )
     if verbose:
         a = rec.get("analysis", {})
+        flops = a.get("flops", prod["flops"]) or 0.0
         print(f"[dryrun] {arch} × {shape_name} × {mesh_name}: OK "
               f"(lower {t_lower:.1f}s, compile {t_compile:.1f}s, "
-              f"flops/dev {a.get('flops', prod['flops']):.3e}, "
+              f"flops/dev {flops:.3e}, "
               f"coll/dev {a.get('collective_bytes', prod['collectives'])['total']/2**30:.2f} GiB)")
         print("  memory_analysis:", prod["memory"])
     return rec

@@ -68,10 +68,16 @@ def main() -> None:
                     max_new=args.max_new,
                     accuracy_critical=(i % 3 == 0))
             for i, n in enumerate(rng.integers(4, 24, args.requests))]
+    import time
+    t0 = time.perf_counter()
     results = srv.serve(reqs)
+    wall = time.perf_counter() - t0
+    n_tok = sum(len(r["tokens"]) for r in results)
     for i, r in enumerate(results):
         print(f"[serve] req{i}: {len(r['tokens'])} tokens, "
               f"profiles used: {sorted(set(r['profile_trace']))}")
+    print(f"[serve] {n_tok} tokens in {wall:.2f}s "
+          f"({n_tok / wall:.0f} tok/s incl. compile; fused decode loop)")
     print(f"[serve] energy spent: {mgr.spent_j:.2e} J "
           f"({100*(1-mgr.remaining_fraction()):.0f}% of budget), "
           f"saver_mode={mgr._saver}")

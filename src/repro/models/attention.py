@@ -273,18 +273,30 @@ def decode_attention(q: jax.Array, cache: KVCache, pos: jax.Array, *,
     b, _, h, d = q.shape
     _, slots, hkv, _ = cache.k.shape
     hg = h // hkv
-    if cache.bits in (4, 8):
-        kf = _dequantize_kv(cache.k, cache.k_scale, cache.bits)
-        vf = _dequantize_kv(cache.v, cache.v_scale, cache.bits)
-    else:
-        kf = cache.k.astype(jnp.float32)
-        vf = cache.v.astype(jnp.float32)
     qh = (q.astype(jnp.float32) * d ** -0.5).reshape(b, hkv, hg, d)
-    scores = jnp.einsum("bkgd,bskd->bkgs", qh, kf)         # [B,Hkv,Hg,slots]
+    if cache.bits == 8:
+        # int8 fast path: contract on the int grid and fold the per-(B,Hkv)
+        # dequant scale into the result — the same layout/order the Pallas
+        # ``qkv_attention`` kernel uses, and no cache-sized scaled temporary
+        # inside the decode scan.
+        scores = jnp.einsum("bkgd,bskd->bkgs", qh, cache.k.astype(jnp.float32))
+        scores = scores * cache.k_scale[:, :, None, None]
+    else:
+        if cache.bits == 4:
+            kf = _dequantize_kv(cache.k, cache.k_scale, cache.bits)
+        else:
+            kf = cache.k.astype(jnp.float32)
+        scores = jnp.einsum("bkgd,bskd->bkgs", qh, kf)     # [B,Hkv,Hg,slots]
     win = jnp.asarray(slots + 1 if window is None else window, jnp.int32)
     tidx = cache.token_idx                                  # [B, slots]
     keep = (tidx >= 0) & (tidx <= pos[:, None]) & (pos[:, None] - tidx < win)
     scores = jnp.where(keep[:, None, None, :], scores, NEG_INF)
     p = jax.nn.softmax(scores, axis=-1)
-    out = jnp.einsum("bkgs,bskd->bkgd", p, vf)
+    if cache.bits == 8:
+        out = jnp.einsum("bkgs,bskd->bkgd", p, cache.v.astype(jnp.float32))
+        out = out * cache.v_scale[:, :, None, None]
+    else:
+        vf = (_dequantize_kv(cache.v, cache.v_scale, cache.bits)
+              if cache.bits == 4 else cache.v.astype(jnp.float32))
+        out = jnp.einsum("bkgs,bskd->bkgd", p, vf)
     return out.reshape(b, 1, h, d).astype(q.dtype)

@@ -59,7 +59,15 @@ def qlinear(params: dict, x: jax.Array, bits_aw: jax.Array, *,
     """
     if compute_dtype is None:
         compute_dtype = _default_compute_dtype()
-    if "w" in params:
+    if "wfq" in params:
+        # Decode-scan fast path: the weight image was fake-quanted *once*
+        # ahead of the loop (per profile — transformer.prequant_decode_weights)
+        # instead of every step. Activations still quantize in-loop (their
+        # scale depends on runtime data).
+        xq = fake_quant_dynamic(x, bits_aw[0], SIGNED_SYM)
+        y = jnp.dot(xq.astype(compute_dtype), params["wfq"].astype(compute_dtype),
+                    preferred_element_type=jnp.float32)
+    elif "w" in params:
         a_bits, w_bits = bits_aw[0], bits_aw[1]
         xq = fake_quant_dynamic(x, a_bits, SIGNED_SYM)
         wq = fake_quant_dynamic(params["w"], w_bits, SIGNED_SYM)
@@ -133,5 +141,7 @@ def embed_lookup(params: dict, ids: jax.Array, bits_aw: jax.Array,
         if qt.bits <= 4:
             rows = unpack_int4(rows)
         return (rows.astype(jnp.float32) * qt.scale).astype(compute_dtype)
+    if "wfq" in params:  # decode scan: table fake-quanted ahead of the loop
+        return jnp.take(params["wfq"].astype(compute_dtype), ids, axis=0)
     w = fake_quant_dynamic(params["w"], bits_aw[1], SIGNED_SYM)
     return jnp.take(w.astype(compute_dtype), ids, axis=0)

@@ -110,6 +110,12 @@ def ssd_forward(params: dict, x: jax.Array, bits_in: jax.Array,
     proj = qlinear(params["in_proj"], x, bits_in)
     z, xbc, dt = _split_proj(proj, d_model, cfg)
     conv_tail = xbc[:, max(0, s_real - (cfg.d_conv - 1)):s_real, :]
+    if s_real < cfg.d_conv - 1:
+        # short-prompt prefill: left-pad to the fixed [B, K-1, convdim] window
+        # so the handed-off SSMState matches init_ssm_state's aval (decode
+        # scans carry the state — shapes must be static across steps)
+        conv_tail = jnp.pad(conv_tail,
+                            ((0, 0), (cfg.d_conv - 1 - s_real, 0), (0, 0)))
     xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"])
     if pad:  # pad to a chunk multiple; dt is zero-masked there, so the
         # recurrent state passes through padded steps unchanged.

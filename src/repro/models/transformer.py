@@ -41,7 +41,8 @@ from .ssm import (SSMConfig, SSMState, init_ssm, init_ssm_state,
                   ssd_forward, ssm_decode_step)
 
 __all__ = ["ModelConfig", "init_params", "quant_layer_names", "forward",
-           "train_loss", "init_caches", "decode_step", "prefill",
+           "train_loss", "init_caches", "decode_step", "decode_many", "prefill",
+           "prequant_decode_weights", "overlay_params",
            "param_count", "active_param_count"]
 
 
@@ -535,6 +536,149 @@ def decode_step(params: dict, cfg: ModelConfig, bits_row: jax.Array,
     x = _norm(cfg, params["norm_f"], x)
     logits = _logits(cfg, params, bits_row, x)[:, 0]
     return logits, new_caches
+
+
+def prequant_decode_weights(params: dict, cfg: ModelConfig,
+                            table: jax.Array) -> dict:
+    """Hoist weight fake-quant out of the decode loop.
+
+    The seed decode path re-fake-quanted every weight matrix (embedding table
+    and lm_head included) on *every step* — pure overhead around the
+    approximate kernels. Since weights are step-invariant, quantize them once
+    per profile up front: returns a sparse overlay pytree, parallel to
+    ``params``, whose ``wfq`` leaves carry a leading profile dim ``P`` (the
+    in-memory analogue of the MDC merge's per-profile actors). The decode scan
+    gathers slice ``pid`` per step and grafts it on with :func:`overlay_params`
+    — ``qlinear``/``embed_lookup`` prefer ``wfq`` and skip in-loop weight
+    quantization. Activation quant stays in-loop (runtime-data dependent).
+
+    Sites not covered (MoE routed-expert stacks, tied lm_head) keep the
+    in-loop path — fake-quant is idempotent on its own po2 grid, so numerics
+    match either way. Native (``wq``) layouts pass through untouched.
+    """
+    def one_profile(bits_row):
+        eb, hb, layer_bits = split_bits(cfg, bits_row)
+        from .layers import SIGNED_SYM
+        from repro.core.quantizers import fake_quant_dynamic
+
+        def fq(w, wb):
+            return fake_quant_dynamic(w, wb, SIGNED_SYM)
+
+        def fq_stacked(w, name):          # w [L, ...] with per-layer bits
+            wb = layer_bits[:, _site_idx(cfg, name), 1]
+            return jax.vmap(fq)(w, wb)
+
+        ov: dict[str, Any] = {}
+        if "w" in params["embed"] and cfg.frontend != "audio":
+            ov["embed"] = {"wfq": fq(params["embed"]["w"], eb[1])}
+        if not cfg.tie_embeddings and "w" in params.get("lm_head", {}):
+            ov["lm_head"] = {"wfq": fq(params["lm_head"]["w"], hb[1])}
+        lp = params["layers"]
+        lov: dict[str, Any] = {}
+        if cfg.has_attn and "w" in lp["qkv"]:
+            lov["qkv"] = {"wfq": fq_stacked(lp["qkv"]["w"], "qkv")}
+            lov["attn_out"] = {"wfq": fq_stacked(lp["attn_out"]["w"], "attn_out")}
+        if cfg.has_mlp and "w" in lp["mlp"]["w_in"]:
+            lov["mlp"] = {
+                "w_in": {"wfq": fq_stacked(lp["mlp"]["w_in"]["w"], "mlp_in")},
+                "w_out": {"wfq": fq_stacked(lp["mlp"]["w_out"]["w"], "mlp_out")},
+            }
+        if cfg.has_ssm and "w" in lp["ssm"]["in_proj"]:
+            lov["ssm"] = {
+                "in_proj": {"wfq": fq_stacked(lp["ssm"]["in_proj"]["w"], "ssm_in")},
+                "out_proj": {"wfq": fq_stacked(lp["ssm"]["out_proj"]["w"], "ssm_out")},
+            }
+        if cfg.family == "moe" and "w" in lp["moe"]["router"]:
+            moev: dict[str, Any] = {
+                "router": {"wfq": fq_stacked(lp["moe"]["router"]["w"], "router")}}
+            if "shared_in" in lp["moe"]:
+                moev["shared_in"] = {
+                    "wfq": fq_stacked(lp["moe"]["shared_in"]["w"], "shared_in")}
+                moev["shared_out"] = {
+                    "wfq": fq_stacked(lp["moe"]["shared_out"]["w"], "shared_out")}
+            lov["moe"] = moev
+        if lov:
+            ov["layers"] = lov
+        return ov
+
+    return jax.vmap(one_profile)(jnp.asarray(table))
+
+
+def overlay_params(base: dict, overlay: dict) -> dict:
+    """Graft a (sliced) prequant overlay onto the base params pytree. ``wfq``
+    leaves land next to the float masters; the quantized consumers prefer
+    them, and the untouched ``w`` twins are dead-code-eliminated from the
+    compiled scan."""
+    out = dict(base)
+    for k, v in overlay.items():
+        if isinstance(v, dict) and isinstance(base.get(k), dict):
+            out[k] = overlay_params(base[k], v)
+        else:
+            out[k] = v
+    return out
+
+
+def decode_many(params: dict, cfg: ModelConfig, table: jax.Array,
+                schedule: jax.Array, logits0: jax.Array, pos0: jax.Array,
+                caches: dict, row_budget: Optional[jax.Array] = None,
+                prequant: Optional[dict] = None):
+    """Fused multi-token greedy decode: one ``lax.scan`` over generation steps.
+
+    The whole decode loop stays on device — per-step argmax sampling, KV/SSM
+    cache updates, and profile switching all happen inside a single scan, so a
+    generate call is one dispatch instead of one per token.
+
+    * ``table`` ``[P, L, 2]`` — the merged engine's bits table; the active
+      profile per step is ``schedule[i]`` (``int32[steps]``, *data*: a new
+      schedule never retraces — the paper's runtime configuration word).
+    * ``logits0`` ``[B, V]`` — prefill logits; ``tokens[:, 0]`` is their argmax
+      (the profile that produced them is ``schedule[0]``).
+    * ``pos0`` ``[B]`` — absolute position of the first decode step (prompt
+      length for left-padded batches).
+    * ``caches`` — decode caches from :func:`prefill`; threaded through the
+      scan carry (donate them at the ``jit`` boundary for in-place updates).
+    * ``row_budget`` ``[B]`` — optional per-row token budget (early stop):
+      tokens at index ≥ budget are emitted as −1 and frozen rows feed a
+      constant 0 token (their junk never reaches live rows — batch rows are
+      independent).
+    * ``prequant`` — per-profile weight images from
+      :func:`prequant_decode_weights`; pass them in when params/table are
+      fixed across calls (a server computes them once), else they are built
+      here per call.
+
+    Returns ``(tokens [B, steps] int32, pids [steps] int32, caches)`` where
+    ``pids`` is the realized per-step profile trace for accounting.
+    """
+    steps = schedule.shape[0]
+    b = logits0.shape[0]
+    budget = (jnp.full((b,), steps, jnp.int32) if row_budget is None
+              else jnp.asarray(row_budget, jnp.int32))
+    tok0 = jnp.argmax(logits0, axis=-1).astype(jnp.int32)
+    live0 = 0 < budget
+    out0 = jnp.where(live0, tok0, -1)
+    # weight images per profile: caller-supplied (once per server) or built
+    # once per call — never once per token
+    if prequant is None:
+        prequant = prequant_decode_weights(params, cfg, table)
+
+    def step(carry, pid):
+        tok, pos, cch, idx = carry          # idx = index of the token emitted
+        bits_row = table[pid]
+        p_step = overlay_params(params,
+                                jax.tree.map(lambda a: a[pid], prequant))
+        logits, cch = decode_step(p_step, cfg, bits_row, tok[:, None], pos, cch)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        live = idx < budget                  # done-mask: row still generating?
+        out = jnp.where(live, nxt, -1)
+        feed = jnp.where(live, nxt, 0)
+        return (feed, pos + 1, cch, idx + 1), (out, pid)
+
+    carry0 = (jnp.where(live0, tok0, 0), pos0.astype(jnp.int32), caches,
+              jnp.ones((), jnp.int32))
+    (_, _, caches, _), (ys, pids) = jax.lax.scan(step, carry0, schedule[1:])
+    tokens = jnp.concatenate([out0[:, None], ys.T], axis=1)
+    pids = jnp.concatenate([schedule[:1], pids])
+    return tokens, pids, caches
 
 
 def prefill(params: dict, cfg: ModelConfig, bits_row: jax.Array, batch: dict,

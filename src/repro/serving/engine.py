@@ -1,13 +1,34 @@
-"""Adaptive serving engine: batched prefill + decode under the Profile Manager.
+"""Adaptive serving engine: batched prefill + fused on-device decode loop.
 
 The FPGA paper's runtime (Fig. 4 left) = Adaptive Inference Engine + Profile
 Manager. Here the engine is a pair of jitted functions closed over the merged
 profile family (profile_id is a traced scalar → switching never recompiles),
 and the manager picks the profile per decode step from the energy budget.
 
+**Scan/donation design.** Decode runs as a single jitted ``jax.lax.scan`` over
+the generation length (:func:`repro.models.transformer.decode_many`):
+
+* one dispatch per ``generate`` call — greedy argmax sampling, KV/SSM cache
+  updates, and profile switching all stay on device; the only host sync is
+  one ``np.asarray`` of the final ``[B, steps]`` token block (the seed
+  engine synced + re-dispatched per token);
+* the KV caches are threaded through the scan carry and **donated** at the
+  ``jit`` boundary (``donate_argnums``), so XLA updates the cache buffers in
+  place instead of copying them every step;
+* profile adaptivity survives fusion: the :class:`ProfileManager` budget
+  policy is deterministic given its energy ledger, so the per-step profile
+  ids are precomputed as an ``int32[steps]`` schedule
+  (``ProfileManager.plan_schedule``) and fed to the scan as *data* — the
+  merged engine stays branch-free and a new schedule never retraces. The
+  realized per-step trace comes back from the device for accounting.
+
+``generate_stepwise`` keeps the seed per-token host loop as the benchmark
+baseline (``benchmarks/serving_bench.py`` measures the tokens/sec win).
+
 KV cache precision is a deployment knob (``kv_bits``: 16 = bf16 baseline,
 8 = int8 — the beyond-paper memory-roofline win; the Pallas
-``qkv_attention`` kernel is the TPU path for the int8 layout).
+``qkv_attention`` kernel is the TPU path for the int8 layout, and the jnp
+decode path contracts on the same int8 grid).
 """
 from __future__ import annotations
 
@@ -60,18 +81,69 @@ class AdaptiveServer:
             bits = jnp.asarray(table)[profile_id]
             return T.decode_step(params, cfg, bits, tokens, pos, caches)
 
+        def generate_fn(params, prequant, schedule, logits0, pos0, caches,
+                        row_budget):
+            return T.decode_many(params, cfg, jnp.asarray(table), schedule,
+                                 logits0, pos0, caches, row_budget=row_budget,
+                                 prequant=prequant)
+
         self._prefill = jax.jit(prefill_fn)
-        self._decode = jax.jit(decode_fn)
+        self._decode = jax.jit(decode_fn)                  # stepwise baseline
+        # per-profile weight images, materialized once per server (params and
+        # the profile table are fixed for its lifetime)
+        self._prequant = jax.jit(
+            lambda p: T.prequant_decode_weights(p, cfg, jnp.asarray(table))
+        )(params)
+        # donate the caches: the scan threads them through its carry and XLA
+        # aliases input → output buffers (in-place ring-buffer writes, no
+        # per-step cache copy)
+        self._generate = jax.jit(generate_fn, donate_argnums=(5,))
 
     def _select_profile(self, critical: bool) -> int:
         if self.manager is None:
             return 0
         return self.manager.select(accuracy_critical=critical)
 
+    def _plan_schedule(self, steps: int, n_rows: int,
+                       critical: bool) -> np.ndarray:
+        """Per-step profile ids (bits-as-data). Accounts the energy ledger
+        exactly like the seed per-step select/account loop."""
+        if self.manager is None:
+            return np.zeros((steps,), np.int32)
+        return self.manager.plan_schedule(steps, n_rows,
+                                          accuracy_critical=critical)
+
     def generate(self, prompts: np.ndarray, max_new: int,
-                 accuracy_critical: bool = False) -> dict:
-        """Batched greedy generation. prompts ``[B, S]`` int32 (same length —
-        the request queue pads). Returns tokens + the per-step profile trace."""
+                 accuracy_critical: bool = False, *,
+                 row_budget: Optional[np.ndarray] = None,
+                 account_rows: Optional[int] = None) -> dict:
+        """Batched greedy generation, fused: one prefill dispatch + one decode
+        dispatch. prompts ``[B, S]`` int32 (same length — the request queue
+        pads). ``row_budget [B]`` masks per-row tokens at index ≥ budget to −1
+        (early stop for heterogeneous request budgets); ``account_rows``
+        overrides how many rows the energy ledger bills per step (real
+        requests, not batch padding). Returns tokens + the realized per-step
+        profile trace."""
+        b, s = prompts.shape
+        n_account = b if account_rows is None else account_rows
+        schedule = self._plan_schedule(max_new, n_account, accuracy_critical)
+        logits, caches = self._prefill(self.params, int(schedule[0]),
+                                       {"tokens": jnp.asarray(prompts)})
+        pos0 = jnp.full((b,), s, jnp.int32)
+        rb = (jnp.full((b,), max_new, jnp.int32) if row_budget is None
+              else jnp.asarray(row_budget, jnp.int32))
+        toks, pids, _ = self._generate(self.params, self._prequant,
+                                       jnp.asarray(schedule),
+                                       logits, pos0, caches, rb)
+        toks = np.asarray(toks)         # the call's single decode host sync
+        trace = [self.engine.profile_names[p] for p in np.asarray(pids)]
+        return {"tokens": [row.tolist() for row in toks],
+                "profile_trace": trace}
+
+    def generate_stepwise(self, prompts: np.ndarray, max_new: int,
+                          accuracy_critical: bool = False) -> dict:
+        """Seed per-token host loop (one dispatch + host argmax per token).
+        Kept as the fused path's oracle and the benchmark baseline."""
         b, s = prompts.shape
         pid = self._select_profile(accuracy_critical)
         logits, caches = self._prefill(self.params, pid,
@@ -98,19 +170,29 @@ class AdaptiveServer:
         return {"tokens": [t[s:] for t in tokens], "profile_trace": trace}
 
     def serve(self, requests: Sequence[Request]) -> list[dict]:
-        """Naive request batching: group by padded length up to max_batch."""
+        """Request batching: group by padded length up to ``max_batch``; one
+        fused generate call per group. The batch is padded to ``max_batch``
+        (pad rows carry budget 0 → done from step 0) so every equal-length
+        group reuses one compiled executable; per-row ``max_new`` rides in as
+        the done-mask budget. MoE archs skip batch padding (expert capacity
+        is batch-global, so pad rows could perturb real rows' routing)."""
         results: list[dict] = [None] * len(requests)  # type: ignore
         order = sorted(range(len(requests)), key=lambda i: len(requests[i].tokens))
         for i0 in range(0, len(order), self.scfg.max_batch):
             group = order[i0:i0 + self.scfg.max_batch]
             maxlen = max(len(requests[i].tokens) for i in group)
-            prompts = np.zeros((len(group), maxlen), np.int32)
+            rows = (len(group) if self.cfg.family == "moe"
+                    else self.scfg.max_batch)
+            prompts = np.zeros((rows, maxlen), np.int32)
+            budget = np.zeros((rows,), np.int32)
             for row, i in enumerate(group):
                 t = requests[i].tokens
                 prompts[row, maxlen - len(t):] = t   # left-pad
+                budget[row] = requests[i].max_new
             max_new = max(requests[i].max_new for i in group)
             critical = any(requests[i].accuracy_critical for i in group)
-            out = self.generate(prompts, max_new, accuracy_critical=critical)
+            out = self.generate(prompts, max_new, accuracy_critical=critical,
+                                row_budget=budget, account_rows=len(group))
             for row, i in enumerate(group):
                 results[i] = {"tokens": out["tokens"][row][:requests[i].max_new],
                               "profile_trace": out["profile_trace"]}

@@ -1,0 +1,143 @@
+"""Fused scan decode == seed per-token loop (tokens, traces, energy ledger)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core.engine import AdaptiveEngine, QuantIndex
+from repro.core.manager import ProfileManager, ProfileStats
+from repro.core.profiles import paper_profiles
+from repro.models import transformer as T
+from repro.serving.engine import AdaptiveServer, Request, ServingConfig
+
+
+def _build(arch):
+    cfg = get_smoke(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    names = T.quant_layer_names(cfg)
+    profs = paper_profiles(names, inner_layers=[])
+    eng = AdaptiveEngine(tuple(profs), QuantIndex(names),
+                         lambda p, br, b: T.train_loss(p, cfg, br, b))
+    return cfg, params, eng
+
+
+@pytest.fixture(scope="module")
+def dense_parts():
+    return _build("granite-3-2b")
+
+
+def _manager():
+    stats = [ProfileStats(n, acc, e, 1e-3) for n, acc, e in [
+        ("A16-W8", 0.99, 4.0), ("A16-W4", 0.953, 2.0), ("A8-W8", 0.988, 3.0),
+        ("A8-W4", 0.953, 1.5), ("A4-W4", 0.958, 1.0), ("Mixed", 0.975, 2.0)]]
+    return ProfileManager(stats, accuracy_target=0.985, accuracy_floor=0.90,
+                          budget_j=120.0, low_energy=0.5)
+
+
+@pytest.mark.parametrize("kv_bits", [16, 8])
+def test_fused_matches_stepwise(dense_parts, kv_bits):
+    """Scan-based generate: token-for-token identical output, identical
+    realized profile trace, and identical energy accounting vs the seed
+    per-step host loop — under an active ProfileManager (profiles switch
+    mid-generation as the budget drains)."""
+    cfg, params, eng = dense_parts
+    scfg = ServingConfig(slots=64, kv_bits=kv_bits, max_batch=4)
+    m_fused, m_step = _manager(), _manager()
+    srv_fused = AdaptiveServer(cfg, params, eng, scfg, manager=m_fused)
+    srv_step = AdaptiveServer(cfg, params, eng, scfg, manager=m_step)
+    prompts = np.random.default_rng(0).integers(
+        0, cfg.vocab, (3, 8)).astype(np.int32)
+    out_f = srv_fused.generate(prompts, max_new=10)
+    out_s = srv_step.generate_stepwise(prompts, max_new=10)
+    assert out_f["tokens"] == out_s["tokens"]
+    assert out_f["profile_trace"] == out_s["profile_trace"]
+    assert len(set(out_f["profile_trace"])) >= 2      # adaptivity survived
+    assert abs(m_fused.spent_j - m_step.spent_j) < 1e-9
+
+
+def test_fused_is_single_decode_dispatch(dense_parts):
+    """The decode hot loop is one jitted dispatch: generate must never touch
+    the per-token ``_decode`` executable or sync logits to host per step."""
+    cfg, params, eng = dense_parts
+    srv = AdaptiveServer(cfg, params, eng, ServingConfig(slots=64))
+
+    def boom(*a, **k):  # any per-token dispatch is a regression
+        raise AssertionError("per-token _decode dispatch in fused generate")
+
+    srv._decode = boom
+    prompts = np.zeros((2, 4), np.int32)
+    out = srv.generate(prompts, max_new=6)
+    assert len(out["tokens"]) == 2 and len(out["tokens"][0]) == 6
+
+
+def test_schedule_is_data_no_retrace(dense_parts):
+    """A different profile schedule (manager state moved on) must reuse the
+    compiled scan — bits ride as data, switching never retraces."""
+    cfg, params, eng = dense_parts
+    srv = AdaptiveServer(cfg, params, eng, ServingConfig(slots=64),
+                         manager=_manager())
+    prompts = np.zeros((2, 4), np.int32)
+    srv.generate(prompts, max_new=6)
+    n0 = srv._generate._cache_size()
+    srv.generate(prompts, max_new=6)      # ledger drained → new schedule
+    assert srv._generate._cache_size() == n0 == 1
+
+
+def test_row_budget_done_mask(dense_parts):
+    """Tokens at index >= a row's budget come back masked (−1), live rows are
+    unaffected by frozen neighbours."""
+    cfg, params, eng = dense_parts
+    srv = AdaptiveServer(cfg, params, eng, ServingConfig(slots=64))
+    prompts = np.random.default_rng(2).integers(
+        0, cfg.vocab, (3, 6)).astype(np.int32)
+    full = srv.generate(prompts, max_new=8)
+    masked = srv.generate(prompts, max_new=8,
+                          row_budget=np.asarray([8, 3, 5], np.int32))
+    for row, budget in enumerate([8, 3, 5]):
+        assert masked["tokens"][row][:budget] == full["tokens"][row][:budget]
+        assert all(t == -1 for t in masked["tokens"][row][budget:])
+
+
+def test_serve_heterogeneous_budgets_match_solo_runs(dense_parts):
+    """serve() batches requests with different max_new into one padded fused
+    call; each result must equal running that request alone (dense rows are
+    independent, the done-mask freezes finished rows)."""
+    cfg, params, eng = dense_parts
+    scfg = ServingConfig(slots=64, max_batch=4)
+    srv = AdaptiveServer(cfg, params, eng, scfg)
+    rng = np.random.default_rng(3)
+    reqs = [Request(tokens=rng.integers(0, cfg.vocab, 5).astype(np.int32),
+                    max_new=mn) for mn in (7, 2, 4)]
+    results = srv.serve(reqs)
+    solo = AdaptiveServer(cfg, params, eng, scfg)
+    for req, res in zip(reqs, results):
+        assert len(res["tokens"]) == req.max_new
+        ref = solo.generate_stepwise(req.tokens[None, :], req.max_new)
+        assert res["tokens"] == ref["tokens"][0][:req.max_new]
+
+
+def test_fused_matches_stepwise_ssm():
+    """Scan carry also threads SSM recurrent state (no KV cache)."""
+    cfg, params, eng = _build("mamba2-130m")
+    scfg = ServingConfig(slots=32)
+    srv = AdaptiveServer(cfg, params, eng, scfg)
+    prompts = np.random.default_rng(1).integers(
+        0, cfg.vocab, (2, 6)).astype(np.int32)
+    out_f = srv.generate(prompts, max_new=5)
+    out_s = srv.generate_stepwise(prompts, max_new=5)
+    assert out_f["tokens"] == out_s["tokens"]
+
+
+def test_plan_schedule_matches_select_account_loop():
+    """plan_schedule is the vectorized form of the seed select/account loop:
+    same ids, same ledger evolution."""
+    m_plan, m_loop = _manager(), _manager()
+    sched = m_plan.plan_schedule(20, n_per_step=4)
+    loop = []
+    for _ in range(20):
+        pid = m_loop.select()
+        m_loop.account(pid, 4)
+        loop.append(pid)
+    assert sched.dtype == np.int32
+    assert sched.tolist() == loop
+    assert abs(m_plan.spent_j - m_loop.spent_j) < 1e-12

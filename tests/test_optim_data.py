@@ -2,6 +2,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need it; skip cleanly when absent
 from hypothesis import given, settings, strategies as st
 
 from repro.data.digits import make_dataset
