@@ -1,17 +1,28 @@
-"""Serving decode-loop benchmark: fused scan generate vs seed per-token loop.
+"""Serving benchmarks: fused decode loop + continuous-batching scheduler.
 
-Emits ``name,us_per_call,derived`` rows (harness contract). Each point runs
-the same greedy generation twice — ``serve_fused_*`` (single jitted
-``lax.scan`` dispatch, donated caches) and ``serve_stepwise_*`` (the seed
-loop: one dispatch + ``np.asarray`` host sync + host argmax per token) — and
-reports tokens/sec plus the fused/stepwise speedup in ``derived``.
+Emits ``name,us_per_call,derived`` rows (harness contract). Two experiments:
+
+* **fused vs stepwise** (``serve_fused_*`` / ``serve_stepwise_*``): the same
+  greedy generation through the single-dispatch ``lax.scan`` path vs the seed
+  per-token host loop — the PR-1 decode-fusion win.
+* **continuous vs static** (``serve_continuous_*`` / ``serve_static_*``): an
+  open-loop Poisson-arrival workload (heterogeneous prompt lengths and
+  ``max_new``) served by the :class:`ContinuousScheduler` slot pool vs static
+  grouped ``serve()`` (a group must finish before the next starts). Arrival
+  rate is calibrated to ``--util`` of the continuous path's measured
+  closed-loop capacity; rows report tokens/sec over the makespan and
+  p50/p99 request latency (arrival → completion). The static path burns
+  decode steps as dead padding whenever a group mixes ``max_new`` budgets —
+  the continuous pool refills those rows instead, which is where the
+  throughput gap comes from.
 
 CPU interpret-path numbers: what they measure is the *runtime overhead around
-the kernels* (dispatch count, host syncs, cache copies), which is exactly the
-adaptive-inference tax the paper says must be negligible. TPU numbers come
-from deployment.
+the kernels* (dispatch count, host syncs, cache copies, dead-step density),
+which is exactly the adaptive-inference tax the paper says must be
+negligible. TPU numbers come from deployment.
 
-  PYTHONPATH=src python benchmarks/serving_bench.py [--quick] [--iters N]
+  PYTHONPATH=src python benchmarks/serving_bench.py [--quick|--smoke]
+                                                    [--iters N] [--util U]
 """
 from __future__ import annotations
 
@@ -30,7 +41,8 @@ from repro.configs import get_smoke
 from repro.core.engine import AdaptiveEngine, QuantIndex
 from repro.core.profiles import paper_profiles
 from repro.models import transformer as T
-from repro.serving.engine import AdaptiveServer, ServingConfig
+from repro.serving.engine import AdaptiveServer, Request, ServingConfig
+from repro.serving.scheduler import ContinuousScheduler
 
 # (batch, prompt_len, max_new, kv_bits) — batch ≥ 4 / new ≥ 32 are the
 # acceptance points for the fused-loop speedup
@@ -95,13 +107,156 @@ def run(points=None, iters: int = 3) -> list[tuple]:
     return rows
 
 
+# ---------------------------------------------------------------------------
+# continuous batching: open-loop Poisson workload
+# ---------------------------------------------------------------------------
+
+# discrete length/budget menus keep the static path's executable count small
+# (group maxlen / max(max_new) are drawn from these sets), so the timed runs
+# measure serving, not compilation. The long-tailed max_new menu is the
+# canonical continuous-batching traffic shape: most requests are short, a few
+# run long — a static group burns max(max_new) steps for every row.
+PROMPT_LENS = (8, 16)
+MAX_NEWS = (4, 8, 16, 128)
+
+
+def _workload(cfg, n_req: int, seed: int,
+              lens=PROMPT_LENS, news=MAX_NEWS) -> list[Request]:
+    """Round-robin over the length/budget menus (prompt contents seeded):
+    composition is deterministic — a reproducible trace — so run-to-run
+    variance comes from arrival times and the machine, not from which
+    requests happened to land in the same static group."""
+    rng = np.random.default_rng(seed)
+    return [Request(tokens=rng.integers(0, cfg.vocab,
+                                        lens[i % len(lens)]).astype(np.int32),
+                    max_new=news[i % len(news)])
+            for i in range(n_req)]
+
+
+def _percentiles(lat: np.ndarray) -> tuple[float, float]:
+    return float(np.percentile(lat, 50)), float(np.percentile(lat, 99))
+
+
+def _run_continuous(srv, reqs, arrivals, quantum):
+    n = len(reqs)
+    sched = ContinuousScheduler(srv, quantum=quantum, record_events=False)
+    done_t = np.zeros((n,))
+    n_done, nxt = 0, 0
+    t0 = time.perf_counter()
+    while n_done < n:
+        now = time.perf_counter() - t0
+        while nxt < n and arrivals[nxt] <= now:
+            sched.submit(reqs[nxt])
+            nxt += 1
+        busy = sched.step()                # admit + segment + flush
+        if not busy and nxt < n:           # idle until the next arrival
+            time.sleep(min(1e-3, max(0.0, arrivals[nxt] - now)))
+        for rid, _res in sched.poll_completed():
+            done_t[rid] = time.perf_counter() - t0
+            n_done += 1
+    return done_t, time.perf_counter() - t0
+
+
+def _run_static(srv, reqs, arrivals, max_batch):
+    n = len(reqs)
+    done_t = np.zeros((n,))
+    n_done, nxt = 0, 0
+    backlog: list[int] = []
+    t0 = time.perf_counter()
+    while n_done < n:
+        now = time.perf_counter() - t0
+        while nxt < n and arrivals[nxt] <= now:
+            backlog.append(nxt)
+            nxt += 1
+        if backlog:                        # serve the oldest arrivals as one
+            group, backlog = backlog[:max_batch], backlog[max_batch:]
+            srv.serve([reqs[i] for i in group])
+            t_done = time.perf_counter() - t0
+            for i in group:
+                done_t[i] = t_done
+            n_done += len(group)
+        elif nxt < n:
+            time.sleep(min(1e-3, max(0.0, arrivals[nxt] - now)))
+    return done_t, time.perf_counter() - t0
+
+
+def bench_poisson(cfg, params, eng, *, n_req: int = 48, util: float = 0.95,
+                  max_batch: int = 8, quantum: int = 8, seed: int = 0,
+                  lens=PROMPT_LENS, news=MAX_NEWS) -> list[tuple]:
+    scfg = ServingConfig(slots=max(lens) + max(news) + 8, max_batch=max_batch)
+    srv = AdaptiveServer(cfg, params, eng, scfg)
+    reqs = _workload(cfg, n_req, seed, lens, news)
+    total_tokens = sum(r.max_new for r in reqs)
+
+    # warm every admission-wave executable the open-loop run can hit: wave
+    # row-counts bucket to powers of two and prompts to pow2 length buckets,
+    # so cover (1,2,4,...,max_batch) × lens with throwaway 2-token requests
+    w = 1
+    while w <= max_batch:
+        for length in lens:
+            warm = ContinuousScheduler(srv, quantum=quantum)
+            for _ in range(w):
+                warm.submit(Request(tokens=np.ones(length, np.int32),
+                                    max_new=2))
+            warm.run()
+        w *= 2
+    # closed-loop warm pass, then a second run measures the continuous
+    # capacity that sets the arrival rate — calibration excludes compile time
+    for _ in range(2):
+        sched = ContinuousScheduler(srv, quantum=quantum)
+        for r in reqs:
+            sched.submit(r)
+        t0 = time.perf_counter()
+        sched.run()
+        cap_tok_s = total_tokens / (time.perf_counter() - t0)
+    # warm every static executable the open-loop run can hit
+    for length in lens:
+        for mn in news:
+            srv.serve([Request(tokens=np.ones(length, np.int32), max_new=mn)
+                       for _ in range(max_batch)])
+
+    lam = util * cap_tok_s / (total_tokens / n_req)     # requests / second
+    arrivals = np.cumsum(np.random.default_rng(seed + 1)
+                         .exponential(1.0 / lam, n_req))
+
+    cont_t, cont_mk = _run_continuous(srv, reqs, arrivals, quantum)
+    stat_t, stat_mk = _run_static(srv, reqs, arrivals, max_batch)
+
+    c50, c99 = _percentiles((cont_t - arrivals) * 1e3)
+    s50, s99 = _percentiles((stat_t - arrivals) * 1e3)
+    speedup = stat_mk / cont_mk
+    tag = f"b{max_batch}_q{quantum}_n{n_req}_u{util:g}"
+    return [
+        (f"serve_continuous_{tag}", cont_mk * 1e6,
+         f"tok_s={total_tokens / cont_mk:.0f};p50_ms={c50:.1f};"
+         f"p99_ms={c99:.1f};speedup_vs_static={speedup:.2f}x"),
+        (f"serve_static_{tag}", stat_mk * 1e6,
+         f"tok_s={total_tokens / stat_mk:.0f};p50_ms={s50:.1f};"
+         f"p99_ms={s99:.1f};offered_tok_s={util * cap_tok_s:.0f}"),
+    ]
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="two acceptance points only")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI: tiny continuous-batching run, seconds-scale")
     ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--util", type=float, default=0.95,
+                    help="offered load as a fraction of continuous capacity")
+    ap.add_argument("--n-req", type=int, default=48)
     args = ap.parse_args()
-    rows = run(QUICK_POINTS if args.quick else POINTS, iters=args.iters)
+    if args.smoke:
+        cfg, params, eng = _build()
+        rows = bench_poisson(cfg, params, eng, n_req=8, util=args.util,
+                             max_batch=4, quantum=4,
+                             lens=(8,), news=(4, 8, 16))
+    else:
+        rows = run(QUICK_POINTS if args.quick else POINTS, iters=args.iters)
+        cfg, params, eng = _build()
+        rows += bench_poisson(cfg, params, eng, n_req=args.n_req,
+                              util=args.util)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.3f},{derived}")

@@ -1,14 +1,18 @@
 #!/usr/bin/env bash
-# Tier-1 CI gate (mirrors ROADMAP.md): the full suite must pass.
+# Tier-1 CI gate (mirrors ROADMAP.md): the full suite must pass, then the
+# serving path is exercised end-to-end (continuous scheduler + static serve
+# under open-loop Poisson arrivals), not just unit-tested.
 #
-#   ./scripts/ci.sh            # tier-1: pytest -x -q
-#   ./scripts/ci.sh --bench    # additionally run the serving benchmark
+#   ./scripts/ci.sh            # tier-1: pytest -x -q + serving smoke
+#   ./scripts/ci.sh --bench    # additionally run the full serving benchmark
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -x -q
+
+python benchmarks/serving_bench.py --smoke
 
 if [[ "${1:-}" == "--bench" ]]; then
     python benchmarks/serving_bench.py --quick

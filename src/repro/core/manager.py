@@ -52,7 +52,11 @@ class ProfileManager:
     _saver: bool = False
 
     def remaining_fraction(self) -> float:
-        return max(0.0, 1.0 - self.spent_j / self.budget_j) if self.budget_j else 0.0
+        # Zero budget = *unconstrained* (an unconfigured manager must not be
+        # silently pinned into battery-saver mode by a 0/0 → "empty" reading).
+        if not self.budget_j:
+            return 1.0
+        return max(0.0, 1.0 - self.spent_j / self.budget_j)
 
     def _eligible(self, floor: float) -> list[tuple[int, ProfileStats]]:
         ok = [(i, p) for i, p in enumerate(self.profiles) if p.accuracy >= floor]
@@ -92,7 +96,30 @@ class ProfileManager:
             self.account(int(sched[i]), n_per_step)
         return sched
 
+    def plan_schedule_ragged(self, steps: int, row_remaining,
+                             row_critical=None) -> np.ndarray:
+        """Per-step ids for a ragged row group → ``int32[steps]``.
+
+        Rows finish at different steps (heterogeneous ``max_new`` /
+        continuous-batching slot pools), so step ``i`` bills the ledger for
+        the rows actually live at that step (``row_remaining > i``) and is
+        accuracy-critical only while a critical row is still live — the exact
+        ledger evolution of a stepwise per-row select/account oracle, not the
+        group-wide over-billing of padding every row to the longest request.
+        """
+        rem = np.asarray(row_remaining, np.int64)
+        crit = (np.zeros(rem.shape, bool) if row_critical is None
+                else np.asarray(row_critical, bool))
+        sched = np.empty((steps,), np.int32)
+        for i in range(steps):
+            live = rem > i
+            sched[i] = self.select(accuracy_critical=bool((crit & live).any()))
+            self.account(int(sched[i]), int(live.sum()))
+        return sched
+
     def exhausted(self) -> bool:
+        if not self.budget_j:           # zero budget = unconstrained (see
+            return False                # remaining_fraction): never exhausts
         return self.spent_j >= self.budget_j
 
 

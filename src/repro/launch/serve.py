@@ -44,6 +44,11 @@ def main() -> None:
     ap.add_argument("--kv-bits", type=int, default=16, choices=[8, 16])
     ap.add_argument("--budget-inferences", type=float, default=200,
                     help="energy budget in units of full-power inferences")
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve through the continuous-batching slot pool "
+                         "(ContinuousScheduler) instead of static groups")
+    ap.add_argument("--quantum", type=int, default=8,
+                    help="decode steps per continuous-batching segment")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -70,7 +75,14 @@ def main() -> None:
             for i, n in enumerate(rng.integers(4, 24, args.requests))]
     import time
     t0 = time.perf_counter()
-    results = srv.serve(reqs)
+    if args.continuous:
+        from repro.serving.scheduler import ContinuousScheduler
+        sched = ContinuousScheduler(srv, quantum=args.quantum)
+        for r in reqs:
+            sched.submit(r)
+        results = sched.run()
+    else:
+        results = srv.serve(reqs)
     wall = time.perf_counter() - t0
     n_tok = sum(len(r["tokens"]) for r in results)
     for i, r in enumerate(results):

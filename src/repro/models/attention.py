@@ -36,13 +36,16 @@ def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                   window: jax.Array | int | None = None,
                   q_offset: jax.Array | int = 0,
                   block_k: int = 512,
-                  unroll: bool = False) -> jax.Array:
+                  unroll: bool = False,
+                  kv_valid: Optional[jax.Array] = None) -> jax.Array:
     """Blockwise GQA attention.
 
     q ``[B, S, H, D]``; k/v ``[B, Skv, Hkv, D]``; returns ``[B, S, H, D]``.
     ``window``: traced or static int; positions further back than ``window``
     are masked (full attention when ``window >= Skv``). ``q_offset`` shifts
-    query positions (prefill continuation).
+    query positions (prefill continuation). ``kv_valid`` ``[B, Skv]`` bool
+    masks per-row invalid keys (left-pad slots of ragged batches), exactly
+    like the block-pad index check masks the block-padding keys.
     """
     b, s, h, d = q.shape
     _, skv, hkv, _ = k.shape
@@ -55,6 +58,10 @@ def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
     n_blk = (skv + pad) // bk
+    kvv_blocks = None
+    if kv_valid is not None:
+        kvv = jnp.pad(kv_valid, ((0, 0), (0, pad))) if pad else kv_valid
+        kvv_blocks = kvv.reshape(b, n_blk, bk).transpose(1, 0, 2)  # [n_blk,B,bk]
 
     # bf16 until the score einsum (f32 accumulation preserved via
     # preferred_element_type): the S-resharding permutes then move half the
@@ -74,7 +81,11 @@ def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
     def body(carry, blk):
         m, l, acc = carry
-        kblk, vblk, j0 = blk                              # [B,Hkv,bk,D], scalar
+        if kvv_blocks is None:
+            kblk, vblk, j0 = blk                          # [B,Hkv,bk,D], scalar
+            kvb = None
+        else:
+            kblk, vblk, j0, kvb = blk                     # kvb [B, bk]
         scores = jnp.einsum("bkgsd,bkud->bkgsu", qh, kblk.astype(qh.dtype),
                             preferred_element_type=jnp.float32)
         jpos = j0 + jnp.arange(bk, dtype=jnp.int32)       # global kv indices
@@ -84,7 +95,11 @@ def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                    (qpos[:, None] - jpos[None, :] < win) & valid
         else:
             keep = jnp.broadcast_to(valid, (s, bk))
-        scores = jnp.where(keep[None, None, None], scores, NEG_INF)
+        if kvb is not None:                               # per-row ragged mask
+            keep = keep[None, :, :] & kvb[:, None, :]     # [B, s, bk]
+            scores = jnp.where(keep[:, None, None], scores, NEG_INF)
+        else:
+            scores = jnp.where(keep[None, None, None], scores, NEG_INF)
         m_new = jnp.maximum(m, scores.max(axis=-1, keepdims=True))
         alpha = jnp.exp(m - m_new)
         p = jnp.exp(scores - m_new)
@@ -100,10 +115,11 @@ def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     a0 = constrain(jnp.zeros((b, hkv, hg, s, d), jnp.float32),
                    "dp", None, None, "tp", None)
     j0s = jnp.arange(n_blk, dtype=jnp.int32) * bk
-    (m, l, acc), _ = jax.lax.scan(
-        body, (m0, l0, a0),
-        (kb.transpose(2, 0, 1, 3, 4), vb.transpose(2, 0, 1, 3, 4), j0s),
-        unroll=n_blk if unroll else 1)
+    xs = (kb.transpose(2, 0, 1, 3, 4), vb.transpose(2, 0, 1, 3, 4), j0s)
+    if kvv_blocks is not None:
+        xs = xs + (kvv_blocks,)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), xs,
+                                  unroll=n_blk if unroll else 1)
     # cast before the transpose/reshape so the S→residual reshard moves bf16
     out = (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)
     return out.transpose(0, 3, 1, 2, 4).reshape(b, s, h, d)
@@ -111,13 +127,15 @@ def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 def swa_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                   window: int, block_q: int = 512,
-                  q_offset: int = 0) -> jax.Array:
+                  q_offset: int = 0,
+                  kv_valid: Optional[jax.Array] = None) -> jax.Array:
     """Sliding-window attention with **block skipping** (§Perf iteration):
     each q block only touches the ``window + block_q`` keys it can see, so
     FLOPs scale with ``S·(window+bq)`` instead of ``S²`` (21× at S=32k,
     w=1024). Requires a *static* window (architectural, not profile-driven).
 
     q ``[B, S, H, D]``, k/v ``[B, S, Hkv, D]`` (self-attention lengths equal).
+    ``kv_valid`` ``[B, S]`` bool masks per-row left-pad keys (ragged batches).
     """
     b, s, h, d = q.shape
     _, skv, hkv, _ = k.shape
@@ -141,6 +159,8 @@ def swa_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     vp = jnp.pad(v.astype(jnp.float32), ((0, 0), (w, pad_q), (0, 0), (0, 0)))
     kp = constrain(kp, "dp", None, None, None)
     vp = constrain(vp, "dp", None, None, None)
+    kvp = (None if kv_valid is None
+           else jnp.pad(kv_valid, ((0, 0), (w, pad_q))))  # pads are invalid
 
     def one_block(i, q_blk):
         ks = jax.lax.dynamic_slice_in_dim(kp, i * bq, width, axis=1)
@@ -153,7 +173,12 @@ def swa_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         keep = ((jpos[None, :] >= 0) & (jpos[None, :] <= qpos[:, None])
                 & (qpos[:, None] - jpos[None, :] < w)
                 & (qpos[:, None] < s) & (jpos[None, :] < s))
-        scores = jnp.where(keep[None, None, None], scores, NEG_INF)
+        if kvp is not None:                              # per-row ragged mask
+            kvs = jax.lax.dynamic_slice_in_dim(kvp, i * bq, width, axis=1)
+            scores = jnp.where(keep[None, None, None]
+                               & kvs[:, None, None, None, :], scores, NEG_INF)
+        else:
+            scores = jnp.where(keep[None, None, None], scores, NEG_INF)
         p = jax.nn.softmax(scores, axis=-1)
         return jnp.einsum("bkgsu,bkud->bkgsd", p, vs)
 

@@ -69,11 +69,17 @@ def _qmat(w, bits_aw: jax.Array) -> jax.Array:
     return fake_quant_dynamic(w, bits_aw[1], SIGNED_SYM).astype(compute_dtype())
 
 
-def moe_ffn(params: dict, x: jax.Array, bits: dict, cfg: MoEConfig):
+def moe_ffn(params: dict, x: jax.Array, bits: dict, cfg: MoEConfig,
+            token_valid: Optional[jax.Array] = None):
     """x ``[B, S, d]`` → (y ``[B, S, d]``, aux_losses dict).
 
     ``bits`` maps site → int32[2]: ``router``, ``expert_in``, ``expert_out``,
-    ``shared_in``, ``shared_out``.
+    ``shared_in``, ``shared_out``. ``token_valid`` ``[B, S]`` bool (serving):
+    invalid tokens (batch-pad rows / left-pad slots / retired decode rows) are
+    dropped from the capacity dispatch — they neither advance the per-expert
+    cumsum ranks nor occupy buffer slots, so expert capacity is effectively
+    allocated from the *live* tokens only and pad rows can never displace a
+    real token's routing.
     """
     b, s, d = x.shape
     E, k, G = cfg.n_routed, cfg.top_k, cfg.groups
@@ -99,18 +105,28 @@ def moe_ffn(params: dict, x: jax.Array, bits: dict, cfg: MoEConfig):
                jax.nn.logsumexp(logits, axis=-1) ** 2)}
 
     # ---- group-local capacity dispatch (vmapped over G) ----
-    def dispatch(xg_, idx_, val_):
+    def dispatch(xg_, idx_, val_, tv_):
         flat_e = idx_.reshape(-1)                            # [tg*k]
         onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # [tg*k, E]
+        if tv_ is not None:
+            flat_tv = jnp.repeat(tv_, k)                     # [tg*k]
+            onehot = onehot * flat_tv[:, None].astype(jnp.int32)
         pos = jnp.cumsum(onehot, axis=0) - 1                 # rank within expert
         pos_in_e = jnp.sum(pos * onehot, axis=-1)            # [tg*k]
         keep = pos_in_e < cap
+        if tv_ is not None:
+            keep = keep & flat_tv
         buf_idx = jnp.where(keep, flat_e * cap + pos_in_e, E * cap)  # overflow row
         x_rep = jnp.repeat(xg_, k, axis=0)                   # [tg*k, d]
         buf = jnp.zeros((E * cap + 1, d), xg_.dtype).at[buf_idx].set(x_rep)
         return buf[:-1].reshape(E, cap, d), buf_idx, keep
 
-    buf, buf_idx, keep = jax.vmap(dispatch)(xg, gate_idx, gate_vals)
+    if token_valid is not None:
+        tvg = token_valid.reshape(G, tg)
+        buf, buf_idx, keep = jax.vmap(dispatch)(xg, gate_idx, gate_vals, tvg)
+    else:
+        buf, buf_idx, keep = jax.vmap(
+            lambda a, b_, c: dispatch(a, b_, c, None))(xg, gate_idx, gate_vals)
     # buf: [G, E, cap, d] — groups on dp, experts on tp (EP); falls back to
     # capacity-sharding when E doesn't divide the model axis (e.g. 60 experts)
     buf = constrain(buf, "dp", "tp", None, None)

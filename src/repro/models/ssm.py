@@ -90,13 +90,23 @@ def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
 def ssd_forward(params: dict, x: jax.Array, bits_in: jax.Array,
                 bits_out: jax.Array, cfg: SSMConfig,
                 return_final_state: bool = False,
-                unroll: bool = False):
+                unroll: bool = False,
+                valid: "jax.Array | None" = None):
     """Chunked SSD over a full sequence. x ``[B, S, d_model]`` → same shape.
 
     Optionally returns the final recurrent state (for prefill → decode
     handoff): ``(h [B, H, P, N], conv_tail [B, K-1, convdim])``.
+
+    ``valid`` ``[B, S]`` bool marks real tokens of a left-padded ragged batch.
+    Pad steps must not touch the recurrence: their inputs are zeroed (so the
+    causal conv sees the same implicit zero left-context as an unpadded run,
+    and the handed-off ``conv_tail`` pads are exactly zero) and their ``dt`` is
+    zero-masked (decay ``exp(0)=1`` → state passthrough, zero input
+    contribution) — the same trick the chunk padding below already uses.
     """
     bsz, s_real, d_model = x.shape
+    if valid is not None:
+        x = jnp.where(valid[..., None], x, 0).astype(x.dtype)
     di = cfg.d_inner(d_model)
     h_heads = cfg.n_heads(d_model)
     p_dim = cfg.head_dim
@@ -137,9 +147,14 @@ def ssd_forward(params: dict, x: jax.Array, bits_in: jax.Array,
 
     a = -jnp.exp(params["A_log"].astype(jnp.float32))    # [H], negative
     dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B,S,H]
-    if pad:  # dt→0 on padded steps: decay=exp(0)=1, input contribution 0
-        valid = (jnp.arange(s) < s_real).astype(jnp.float32)[None, :, None]
-        dt = dt * valid
+    if valid is not None:  # ragged rows: pad steps pass the state through
+        vmask = valid.astype(jnp.float32)
+        if pad:
+            vmask = jnp.pad(vmask, ((0, 0), (0, pad)))
+        dt = dt * vmask[:, :, None]
+    elif pad:  # dt→0 on padded steps: decay=exp(0)=1, input contribution 0
+        cmask = (jnp.arange(s) < s_real).astype(jnp.float32)[None, :, None]
+        dt = dt * cmask
     da = dt * a                                          # [B, S, H]
     xdt = xh * dt[..., None]                             # dt-weighted input
 

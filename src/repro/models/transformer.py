@@ -41,7 +41,8 @@ from .ssm import (SSMConfig, SSMState, init_ssm, init_ssm_state,
                   ssd_forward, ssm_decode_step)
 
 __all__ = ["ModelConfig", "init_params", "quant_layer_names", "forward",
-           "train_loss", "init_caches", "decode_step", "decode_many", "prefill",
+           "train_loss", "init_caches", "decode_step", "decode_many",
+           "decode_segment", "prefill",
            "prequant_decode_weights", "overlay_params",
            "param_count", "active_param_count"]
 
@@ -231,20 +232,27 @@ def _attn_qkv(cfg: ModelConfig, lp: dict, x: jax.Array, lb: jax.Array,
     return q, k, v
 
 
-def _attend(cfg: ModelConfig, q, k, v, s: int):
+def _attend(cfg: ModelConfig, q, k, v, s: int, kv_valid=None):
     """Dispatch: block-skipping SWA (exact, S·window FLOPs) vs masked blockwise."""
     if (cfg.sliding_window and cfg.causal and cfg.swa_block_skip
             and s > cfg.sliding_window and q.shape[1] == k.shape[1]):
         return swa_attention(q, k, v, window=cfg.sliding_window,
-                             block_q=cfg.attn_block_k)
+                             block_q=cfg.attn_block_k, kv_valid=kv_valid)
     return gqa_attention(q, k, v, causal=cfg.causal, window=cfg.window(s),
-                         block_k=cfg.attn_block_k, unroll=cfg.unroll_inner)
+                         block_k=cfg.attn_block_k, unroll=cfg.unroll_inner,
+                         kv_valid=kv_valid)
 
 
 def _layer_forward(cfg: ModelConfig, lp: dict, lb: jax.Array, x: jax.Array,
                    positions: jax.Array, collect_kv: bool,
-                   collect_ssm: bool):
-    """One layer over a full sequence. Returns (x, aux, collected)."""
+                   collect_ssm: bool, valid: Optional[jax.Array] = None):
+    """One layer over a full sequence. Returns (x, aux, collected).
+
+    ``valid`` ``[B, S]`` bool marks real tokens of a left-padded ragged batch
+    (None = every token real): pad keys are masked out of attention, pad steps
+    are masked out of the SSM recurrence, and pad tokens are dropped from the
+    MoE capacity dispatch — a ragged row computes exactly what it would solo.
+    """
     b, s, d = x.shape
     aux = jnp.zeros((), jnp.float32)
     collected = ()
@@ -252,13 +260,13 @@ def _layer_forward(cfg: ModelConfig, lp: dict, lb: jax.Array, x: jax.Array,
     if cfg.family == "hybrid":
         xin = _norm(cfg, lp["norm_attn"], x)
         q, k, v = _attn_qkv(cfg, lp, xin, lb, positions)
-        attn = _attend(cfg, q, k, v, s)
+        attn = _attend(cfg, q, k, v, s, kv_valid=valid)
         attn = qlinear(lp["attn_out"], attn.reshape(b, s, -1),
                        lb[_site_idx(cfg, "attn_out")])
         ssm_call = partial(ssd_forward, lp["ssm"], xin,
                            lb[_site_idx(cfg, "ssm_in")],
                            lb[_site_idx(cfg, "ssm_out")], cfg.ssm,
-                           unroll=cfg.unroll_inner)
+                           unroll=cfg.unroll_inner, valid=valid)
         if collect_ssm:
             ssm_out, fin = ssm_call(return_final_state=True)
         else:
@@ -279,7 +287,7 @@ def _layer_forward(cfg: ModelConfig, lp: dict, lb: jax.Array, x: jax.Array,
         call = partial(ssd_forward, lp["ssm"], xin,
                        lb[_site_idx(cfg, "ssm_in")],
                        lb[_site_idx(cfg, "ssm_out")], cfg.ssm,
-                       unroll=cfg.unroll_inner)
+                       unroll=cfg.unroll_inner, valid=valid)
         if collect_ssm:
             y, fin = call(return_final_state=True)
             collected = (None, fin)
@@ -290,7 +298,7 @@ def _layer_forward(cfg: ModelConfig, lp: dict, lb: jax.Array, x: jax.Array,
     # attention families: dense / moe / vlm / audio
     xin = _norm(cfg, lp["norm_attn"], x)
     q, k, v = _attn_qkv(cfg, lp, xin, lb, positions)
-    attn = _attend(cfg, q, k, v, s)
+    attn = _attend(cfg, q, k, v, s, kv_valid=valid)
     x = x + qlinear(lp["attn_out"], attn.reshape(b, s, -1),
                     lb[_site_idx(cfg, "attn_out")])
     x = constrain(x, "dp", None, None)
@@ -299,7 +307,7 @@ def _layer_forward(cfg: ModelConfig, lp: dict, lb: jax.Array, x: jax.Array,
         bits = {name: lb[_site_idx(cfg, name)]
                 for name in ("router", "expert_in", "expert_out",
                              "shared_in", "shared_out")}
-        y, moe_aux = moe_ffn(lp["moe"], xm, bits, cfg.moe)
+        y, moe_aux = moe_ffn(lp["moe"], xm, bits, cfg.moe, token_valid=valid)
         aux = aux + moe_aux["load_balance"] + moe_aux["router_z"]
     else:
         y = mlp(lp["mlp"], xm, lb[_site_idx(cfg, "mlp_in")],
@@ -316,8 +324,17 @@ def _layer_forward(cfg: ModelConfig, lp: dict, lb: jax.Array, x: jax.Array,
 # ---------------------------------------------------------------------------
 
 def _embed_inputs(cfg: ModelConfig, params: dict, bits_row: jax.Array,
-                  batch: dict) -> tuple[jax.Array, jax.Array]:
-    """Tokens/features/patches → initial hidden states + positions."""
+                  batch: dict) -> tuple[jax.Array, jax.Array, Optional[jax.Array]]:
+    """Tokens/features/patches → initial hidden states + positions + validity.
+
+    ``batch["prompt_len"]`` (``[B]`` int32, optional) marks ragged rows that
+    were left-padded to a common length: row ``i``'s real tokens occupy the
+    *last* ``prompt_len[i]`` columns. Each row then gets per-row position
+    offsets (``positions = arange(S) - pad``, so real tokens count 0..len−1
+    exactly as they would solo) and a ``valid`` mask over its real tokens; pad
+    embeddings are zeroed so pad junk never inflates activation-quant scales.
+    Without ``prompt_len`` the behavior (and lowering) is unchanged.
+    """
     eb, _, _ = split_bits(cfg, bits_row)
     if cfg.frontend == "audio":
         x = qlinear(params["embed"], batch["features"], eb)
@@ -330,8 +347,16 @@ def _embed_inputs(cfg: ModelConfig, params: dict, bits_row: jax.Array,
             # n_patches positions (frontend stub per the brief)
             patches = batch["patch_embeds"].astype(x.dtype)
             x = jnp.concatenate([patches, x[:, cfg.n_patches:]], axis=1)
-    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
-    return constrain(x, "dp", None, None), positions
+    plen = batch.get("prompt_len")
+    if plen is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        valid = None
+    else:
+        pad = s - jnp.asarray(plen, jnp.int32)               # [B] left-pad
+        positions = jnp.arange(s, dtype=jnp.int32)[None] - pad[:, None]
+        valid = positions >= 0                               # [B, S]
+        x = jnp.where(valid[..., None], x, 0).astype(x.dtype)
+    return constrain(x, "dp", None, None), positions, valid
 
 
 def forward(params: dict, cfg: ModelConfig, bits_row: jax.Array, batch: dict,
@@ -341,7 +366,7 @@ def forward(params: dict, cfg: ModelConfig, bits_row: jax.Array, batch: dict,
     Returns (hidden [B,S,d], aux_loss, collected) where ``collected`` stacks
     per-layer (kv, ssm_final) when ``collect`` (prefill → cache handoff).
     """
-    x, positions = _embed_inputs(cfg, params, bits_row, batch)
+    x, positions, valid = _embed_inputs(cfg, params, bits_row, batch)
     _, _, layer_bits = split_bits(cfg, bits_row)
 
     def body(carry, xs):
@@ -349,7 +374,8 @@ def forward(params: dict, cfg: ModelConfig, bits_row: jax.Array, batch: dict,
         lp, lb = xs
         x, a, col = _layer_forward(cfg, lp, lb, x, positions,
                                    collect_kv=collect and cfg.has_attn,
-                                   collect_ssm=collect and cfg.has_ssm)
+                                   collect_ssm=collect and cfg.has_ssm,
+                                   valid=valid)
         return (x, aux + a), col
 
     body_fn = body
@@ -468,8 +494,15 @@ def init_caches(cfg: ModelConfig, batch: int, slots: int, *,
 
 
 def decode_step(params: dict, cfg: ModelConfig, bits_row: jax.Array,
-                tokens: jax.Array, pos: jax.Array, caches: dict):
-    """One decode step. tokens ``[B,1]``, pos ``[B]`` → (logits [B,V], caches)."""
+                tokens: jax.Array, pos: jax.Array, caches: dict,
+                row_valid: Optional[jax.Array] = None):
+    """One decode step. tokens ``[B,1]``, pos ``[B]`` → (logits [B,V], caches).
+
+    ``row_valid`` ``[B]`` bool marks rows still generating (continuous-batching
+    slot pools carry retired/free rows): dead rows are dropped from the MoE
+    capacity dispatch so they cannot displace a live row's expert routing.
+    Non-MoE families ignore it (batch rows are independent there).
+    """
     eb, _, layer_bits = split_bits(cfg, bits_row)
     x = embed_lookup(params["embed"], tokens, eb)
     positions = pos[:, None].astype(jnp.int32)
@@ -515,7 +548,9 @@ def decode_step(params: dict, cfg: ModelConfig, bits_row: jax.Array,
                                      "shared_in", "shared_out")}
                 y, _ = moe_ffn(lp["moe"], xm, bits,
                                dataclasses.replace(
-                                   cfg.moe, groups=math.gcd(cfg.moe.groups, b)))
+                                   cfg.moe, groups=math.gcd(cfg.moe.groups, b)),
+                               token_valid=(None if row_valid is None
+                                            else row_valid[:, None]))
                 x = x + y
             else:
                 x = x + mlp(lp["mlp"], xm, lb[_site_idx(cfg, "mlp_in")],
@@ -660,32 +695,72 @@ def decode_many(params: dict, cfg: ModelConfig, table: jax.Array,
     # once per call — never once per token
     if prequant is None:
         prequant = prequant_decode_weights(params, cfg, table)
+    ys, _, _, caches = decode_segment(params, cfg, table, schedule[1:],
+                                      jnp.where(live0, tok0, 0), pos0, caches,
+                                      budget - 1, prequant=prequant)
+    tokens = jnp.concatenate([out0[:, None], ys], axis=1)
+    return tokens, schedule, caches
 
-    def step(carry, pid):
-        tok, pos, cch, idx = carry          # idx = index of the token emitted
+
+def decode_segment(params: dict, cfg: ModelConfig, table: jax.Array,
+                   schedule: jax.Array, tok0: jax.Array, pos0: jax.Array,
+                   caches: dict, remaining: jax.Array,
+                   prequant: Optional[dict] = None):
+    """Fused decode *segment*: ``len(schedule)`` scan steps from an arbitrary
+    mid-generation state — the continuous-batching quantum primitive.
+
+    Unlike :func:`decode_many` there is no prefill-logits prologue: the carry
+    enters with ``tok0 [B]`` (each row's last emitted token; 0 for idle slots),
+    ``pos0 [B]`` (next absolute position per row), and ``remaining [B]`` (tokens
+    each row still has to emit; 0 = retired/free slot). Rows whose ``remaining``
+    runs out mid-segment freeze exactly like :func:`decode_many`'s done-mask:
+    their outputs come back −1, they feed a constant 0, and (for MoE) they are
+    dropped from the expert-capacity dispatch via ``row_valid``. All shapes are
+    static in ``(B, len(schedule))``, so a slot-pool server runs every segment
+    through ONE compiled executable regardless of which rows are live.
+
+    Returns ``(tokens [B, steps], tok [B], pos [B], caches)`` — tok/pos/caches
+    are the carry for the next segment.
+    """
+    if prequant is None:
+        prequant = prequant_decode_weights(params, cfg, table)
+    rem = jnp.asarray(remaining, jnp.int32)
+
+    def step(carry, xs):
+        pid, i = xs
+        tok, pos, cch = carry
+        live = i < rem                       # done-mask: row still generating?
         bits_row = table[pid]
         p_step = overlay_params(params,
                                 jax.tree.map(lambda a: a[pid], prequant))
-        logits, cch = decode_step(p_step, cfg, bits_row, tok[:, None], pos, cch)
+        logits, cch = decode_step(p_step, cfg, bits_row, tok[:, None], pos, cch,
+                                  row_valid=live)
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        live = idx < budget                  # done-mask: row still generating?
         out = jnp.where(live, nxt, -1)
         feed = jnp.where(live, nxt, 0)
-        return (feed, pos + 1, cch, idx + 1), (out, pid)
+        return (feed, pos + 1, cch), out
 
-    carry0 = (jnp.where(live0, tok0, 0), pos0.astype(jnp.int32), caches,
-              jnp.ones((), jnp.int32))
-    (_, _, caches, _), (ys, pids) = jax.lax.scan(step, carry0, schedule[1:])
-    tokens = jnp.concatenate([out0[:, None], ys.T], axis=1)
-    pids = jnp.concatenate([schedule[:1], pids])
-    return tokens, pids, caches
+    steps = schedule.shape[0]
+    carry0 = (jnp.asarray(tok0, jnp.int32), pos0.astype(jnp.int32), caches)
+    (tok, pos, caches), ys = jax.lax.scan(
+        step, carry0, (schedule, jnp.arange(steps, dtype=jnp.int32)))
+    return ys.T, tok, pos, caches
 
 
 def prefill(params: dict, cfg: ModelConfig, bits_row: jax.Array, batch: dict,
             slots: int, *, kv_bits: int = 16):
-    """Full-sequence prefill → (last-token logits [B,V], decode-ready caches)."""
+    """Full-sequence prefill → (last-token logits [B,V], decode-ready caches).
+
+    Ragged batches (``batch["prompt_len"]``): each left-padded row hands off
+    its KV entries at per-row *logical* positions (``token_idx = idx − pad``),
+    so decode continues at ``pos0 = prompt_len`` exactly where a solo run
+    would. Pad slots are never written — their ``token_idx`` stays at the −1
+    sentinel, which :func:`repro.models.attention.decode_attention` skips —
+    and int-cache dequant scales are calibrated over real tokens only.
+    """
     hidden, _, collected = forward(params, cfg, bits_row, batch, collect=True)
     b, s, _ = hidden.shape
+    plen = batch.get("prompt_len")
     caches = init_caches(cfg, b, slots, kv_bits=kv_bits)
     kv_col, ssm_col = (collected if isinstance(collected, tuple) and collected
                        else (None, None))
@@ -694,25 +769,41 @@ def prefill(params: dict, cfg: ModelConfig, bits_row: jax.Array, batch: dict,
         eff = caches["kv"].token_idx.shape[-1]
         take = min(eff, s)
         idx = jnp.arange(s - take, s, dtype=jnp.int32)
-        slot = idx % eff
+        if plen is None:
+            slot = idx % eff                    # [take], shared across rows
+            tok_w = jnp.broadcast_to(idx[None], (b, take))
+            ridx = slice(None)                  # kvc.k.at[:, slot]
+            amask = None
+        else:
+            pad = s - jnp.asarray(plen, jnp.int32)          # [B]
+            pos_t = idx[None, :] - pad[:, None]             # [B, take] logical
+            real = pos_t >= 0
+            slot = jnp.where(real, pos_t % eff, eff)        # OOB slot → drop
+            tok_w = jnp.where(real, pos_t, -1)
+            ridx = jnp.arange(b)[:, None]       # kvc.k.at[bidx, slot]
+            amask = (jnp.arange(s, dtype=jnp.int32)[None] >= pad[:, None])
 
         def fill(kvc, k_l, v_l):
             if kvc.bits in (4, 8):
                 from repro.models.attention import _quantize_kv
                 qmax = 127.0 if kvc.bits == 8 else 7.0
-                ks = jnp.max(jnp.abs(k_l.astype(jnp.float32)), axis=(1, 3)) / qmax + 1e-9
-                vs = jnp.max(jnp.abs(v_l.astype(jnp.float32)), axis=(1, 3)) / qmax + 1e-9
+                ka = jnp.abs(k_l.astype(jnp.float32))
+                va = jnp.abs(v_l.astype(jnp.float32))
+                if amask is not None:           # pad junk must not set scales
+                    ka = jnp.where(amask[:, :, None, None], ka, 0.0)
+                    va = jnp.where(amask[:, :, None, None], va, 0.0)
+                ks = jnp.max(ka, axis=(1, 3)) / qmax + 1e-9
+                vs = jnp.max(va, axis=(1, 3)) / qmax + 1e-9
                 kq = _quantize_kv(k_l, ks, kvc.bits)
                 vq = _quantize_kv(v_l, vs, kvc.bits)
             else:
                 ks, vs = kvc.k_scale, kvc.v_scale
                 kq, vq = k_l.astype(kvc.k.dtype), v_l.astype(kvc.v.dtype)
             return KVCache(
-                k=kvc.k.at[:, slot].set(kq[:, idx]),
-                v=kvc.v.at[:, slot].set(vq[:, idx]),
+                k=kvc.k.at[ridx, slot].set(kq[:, idx], mode="drop"),
+                v=kvc.v.at[ridx, slot].set(vq[:, idx], mode="drop"),
                 k_scale=ks, v_scale=vs,
-                token_idx=kvc.token_idx.at[:, slot].set(
-                    jnp.broadcast_to(idx[None], (b, take))),
+                token_idx=kvc.token_idx.at[ridx, slot].set(tok_w, mode="drop"),
                 bits=kvc.bits,
             )
 

@@ -46,6 +46,10 @@ from repro.models import transformer as T
 __all__ = ["ServingConfig", "AdaptiveServer", "Request"]
 
 
+def _next_pow2(n: int) -> int:
+    return 1 << (int(n) - 1).bit_length()
+
+
 @dataclasses.dataclass(frozen=True)
 class ServingConfig:
     slots: int = 4096           # KV slots (≥ prompt + generation budget)
@@ -87,6 +91,40 @@ class AdaptiveServer:
                                  logits0, pos0, caches, row_budget=row_budget,
                                  prequant=prequant)
 
+        # params / prequant are server-lifetime constants: the continuous
+        # primitives close over them so a dispatch only flattens the small
+        # slot-pool carry (schedule, tok, pos, caches, remaining) instead of
+        # re-processing the full parameter pytree every segment — per-call
+        # python overhead is what continuous batching lives or dies by
+        def segment_fn(schedule, tok, pos, caches, remaining):
+            return T.decode_segment(self.params, cfg, jnp.asarray(table),
+                                    schedule, tok, pos, caches, remaining,
+                                    prequant=self._prequant)
+
+        def admit_fn(profile_id, batch, slots_idx, tok, pos, caches):
+            # one admission wave = one dispatch: ragged prefill of every
+            # waiting request (left-padded to a shared pow2 bucket,
+            # ``prompt_len`` as data) + on-device first-token argmax + scatter
+            # of each prefilled row into its pool slot. Rows whose
+            # ``slots_idx`` is out of range (admission-batch padding) are
+            # dropped by the scatter. The WHOLE pool row is overwritten
+            # (batch axis 1 under the [L, ...] layer stacking): stale
+            # token_idx entries of a retired request must not survive into
+            # the new request's attention window.
+            bits = jnp.asarray(table)[profile_id]
+            logits, rows = T.prefill(self.params, cfg, bits, batch,
+                                     serving.slots, kv_bits=serving.kv_bits)
+            tok0 = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            caches = jax.tree.map(
+                lambda pool, row: pool.at[:, slots_idx].set(row, mode="drop"),
+                caches, rows)
+            return (tok0,
+                    tok.at[slots_idx].set(tok0, mode="drop"),
+                    pos.at[slots_idx].set(
+                        jnp.asarray(batch["prompt_len"], jnp.int32),
+                        mode="drop"),
+                    caches)
+
         self._prefill = jax.jit(prefill_fn)
         self._decode = jax.jit(decode_fn)                  # stepwise baseline
         # per-profile weight images, materialized once per server (params and
@@ -98,38 +136,54 @@ class AdaptiveServer:
         # aliases input → output buffers (in-place ring-buffer writes, no
         # per-step cache copy)
         self._generate = jax.jit(generate_fn, donate_argnums=(5,))
+        # continuous-batching primitives (ContinuousScheduler): jitted here so
+        # every scheduler instance over this server shares the compiled
+        # executables; the slot-pool state they donate lives in the scheduler
+        self._segment = jax.jit(segment_fn, donate_argnums=(1, 2, 3))
+        self._admit = jax.jit(admit_fn, donate_argnums=(3, 4, 5))
 
     def _select_profile(self, critical: bool) -> int:
         if self.manager is None:
             return 0
         return self.manager.select(accuracy_critical=critical)
 
-    def _plan_schedule(self, steps: int, n_rows: int,
-                       critical: bool) -> np.ndarray:
-        """Per-step profile ids (bits-as-data). Accounts the energy ledger
-        exactly like the seed per-step select/account loop."""
-        if self.manager is None:
-            return np.zeros((steps,), np.int32)
-        return self.manager.plan_schedule(steps, n_rows,
-                                          accuracy_critical=critical)
-
     def generate(self, prompts: np.ndarray, max_new: int,
                  accuracy_critical: bool = False, *,
                  row_budget: Optional[np.ndarray] = None,
+                 prompt_len: Optional[np.ndarray] = None,
+                 row_critical: Optional[np.ndarray] = None,
                  account_rows: Optional[int] = None) -> dict:
         """Batched greedy generation, fused: one prefill dispatch + one decode
-        dispatch. prompts ``[B, S]`` int32 (same length — the request queue
-        pads). ``row_budget [B]`` masks per-row tokens at index ≥ budget to −1
-        (early stop for heterogeneous request budgets); ``account_rows``
-        overrides how many rows the energy ledger bills per step (real
-        requests, not batch padding). Returns tokens + the realized per-step
-        profile trace."""
+        dispatch. prompts ``[B, S]`` int32 (ragged requests left-padded to a
+        common length). ``prompt_len [B]`` marks each row's real length: rows
+        then get per-row rope offsets, pad-key masks, logical-position KV
+        handoff, and per-row ``pos0 = prompt_len`` — a mixed-length batch
+        generates exactly what each row would solo. ``row_budget [B]`` masks
+        per-row tokens at index ≥ budget to −1 (early stop for heterogeneous
+        request budgets). With a manager, per-row data (``row_budget`` /
+        ``row_critical``) switches the schedule to the exact ragged ledger
+        (step ``i`` bills only rows still live); otherwise ``account_rows``
+        rows are billed every step. Returns tokens + the per-step profile
+        trace."""
         b, s = prompts.shape
-        n_account = b if account_rows is None else account_rows
-        schedule = self._plan_schedule(max_new, n_account, accuracy_critical)
-        logits, caches = self._prefill(self.params, int(schedule[0]),
-                                       {"tokens": jnp.asarray(prompts)})
-        pos0 = jnp.full((b,), s, jnp.int32)
+        if self.manager is None:
+            schedule = np.zeros((max_new,), np.int32)
+        elif row_budget is not None or row_critical is not None:
+            rb_plan = (np.full((b,), max_new) if row_budget is None
+                       else np.minimum(np.asarray(row_budget), max_new))
+            rc = (np.full((b,), bool(accuracy_critical))
+                  if row_critical is None else np.asarray(row_critical, bool))
+            schedule = self.manager.plan_schedule_ragged(max_new, rb_plan, rc)
+        else:
+            n_account = b if account_rows is None else account_rows
+            schedule = self.manager.plan_schedule(max_new, n_account,
+                                                  accuracy_critical=accuracy_critical)
+        batch = {"tokens": jnp.asarray(prompts)}
+        if prompt_len is not None:
+            batch["prompt_len"] = jnp.asarray(prompt_len, jnp.int32)
+        logits, caches = self._prefill(self.params, int(schedule[0]), batch)
+        pos0 = (jnp.full((b,), s, jnp.int32) if prompt_len is None
+                else jnp.asarray(prompt_len, jnp.int32))
         rb = (jnp.full((b,), max_new, jnp.int32) if row_budget is None
               else jnp.asarray(row_budget, jnp.int32))
         toks, pids, _ = self._generate(self.params, self._prequant,
@@ -171,29 +225,39 @@ class AdaptiveServer:
 
     def serve(self, requests: Sequence[Request]) -> list[dict]:
         """Request batching: group by padded length up to ``max_batch``; one
-        fused generate call per group. The batch is padded to ``max_batch``
-        (pad rows carry budget 0 → done from step 0) so every equal-length
-        group reuses one compiled executable; per-row ``max_new`` rides in as
-        the done-mask budget. MoE archs skip batch padding (expert capacity
-        is batch-global, so pad rows could perturb real rows' routing)."""
+        fused *ragged* generate call per group. Mixed-length requests are
+        left-padded and ride in with per-row ``prompt_len`` (per-row rope
+        offsets, pad-key masks, logical-position KV handoff, per-row decode
+        start) so every row's tokens match a solo run. The batch is padded to
+        ``max_batch`` (pad rows: budget 0, ``prompt_len`` 0 → fully masked) so
+        every equal-length group reuses one compiled executable. MoE group
+        sizes are bucketed to powers of two instead — pad rows are dropped
+        from the capacity dispatch (``token_valid``), and the compile count
+        stays logarithmic in ``max_batch`` rather than one executable per
+        distinct group size. Each result's ``profile_trace`` is sliced to its
+        own ``max_new``; the ledger bills per step only the rows still live."""
         results: list[dict] = [None] * len(requests)  # type: ignore
         order = sorted(range(len(requests)), key=lambda i: len(requests[i].tokens))
         for i0 in range(0, len(order), self.scfg.max_batch):
             group = order[i0:i0 + self.scfg.max_batch]
             maxlen = max(len(requests[i].tokens) for i in group)
-            rows = (len(group) if self.cfg.family == "moe"
+            rows = (_next_pow2(max(2, len(group))) if self.cfg.family == "moe"
                     else self.scfg.max_batch)
             prompts = np.zeros((rows, maxlen), np.int32)
             budget = np.zeros((rows,), np.int32)
+            plen = np.zeros((rows,), np.int32)       # pad rows: fully masked
+            crit = np.zeros((rows,), bool)
             for row, i in enumerate(group):
                 t = requests[i].tokens
                 prompts[row, maxlen - len(t):] = t   # left-pad
                 budget[row] = requests[i].max_new
+                plen[row] = len(t)
+                crit[row] = requests[i].accuracy_critical
             max_new = max(requests[i].max_new for i in group)
-            critical = any(requests[i].accuracy_critical for i in group)
-            out = self.generate(prompts, max_new, accuracy_critical=critical,
-                                row_budget=budget, account_rows=len(group))
+            out = self.generate(prompts, max_new, row_budget=budget,
+                                prompt_len=plen, row_critical=crit)
             for row, i in enumerate(group):
-                results[i] = {"tokens": out["tokens"][row][:requests[i].max_new],
-                              "profile_trace": out["profile_trace"]}
+                mn = requests[i].max_new
+                results[i] = {"tokens": out["tokens"][row][:mn],
+                              "profile_trace": out["profile_trace"][:mn]}
         return results

@@ -1,0 +1,275 @@
+"""Continuous-batching scheduler over the fused decode scan.
+
+The paper's runtime (§4.4, Fig. 4) is an adaptive inference engine that keeps
+serving under a shifting energy budget — which presumes the serving layer
+keeps the device *busy* under real, heterogeneous traffic. Static grouped
+``serve()`` can't: a group must finish entirely before the next one starts, so
+every finished row burns decode steps as dead padding and every queued request
+waits for the whole group. This module replaces that with continuous batching:
+
+**Slot pool.** The scheduler owns a fixed ``[max_batch]`` row pool whose
+decode state (last token, position, KV/SSM caches) lives on device and is
+threaded through *donated* jit boundaries — the pool buffers are updated in
+place, never copied. A request occupies one row from admission to retirement;
+free rows idle with ``remaining == 0`` (the done-mask freezes them, and MoE
+capacity dispatch drops them via ``row_valid``).
+
+**Segment quantum.** Decode runs in fixed-size segments of
+:func:`repro.models.transformer.decode_segment` — ``quantum`` scan steps per
+dispatch, all shapes static in ``(max_batch, quantum)``, so every segment of
+the server's lifetime reuses ONE compiled executable no matter which rows are
+live. The quantum is the admission latency knob: between segments, retired
+rows are refilled from the FIFO queue by an *admission wave* — one ragged
+prefill of every waiting request (rows bucketed to a power of two, prompts
+left-padded to a power-of-two length bucket with ``prompt_len`` riding as
+data → compile count log² rather than one executable per shape) whose
+first tokens are argmaxed on device and whose cache rows are scattered into
+the free slots, all inside a single donated dispatch. Token blocks come back
+*asynchronously*: retirement and admission decisions need only host-side
+``remaining`` counts, so the engine loop dispatches the next segment before
+materializing the previous one's tokens (``_flush(keep=1)``) and host-side
+scheduling overlaps device compute.
+
+**Why re-planning per segment keeps the ledger exact.** The
+:class:`ProfileManager` policy is deterministic given its energy ledger, so
+profile ids can be precomputed as data — but only as far ahead as the set of
+live rows is known. A whole-generation schedule would bill rows that finish
+(or get admitted) mid-flight. Planning exactly one segment ahead, with
+:meth:`ProfileManager.plan_schedule_ragged` over the *actual* per-row
+remaining budgets, bills step ``i`` for precisely the rows live at step ``i``
+— the same ledger evolution as a per-step select/account oracle (admission
+prefills are billed like the stepwise engine bills prefill: one inference).
+Every billing event is recorded in :attr:`ContinuousScheduler.events` so the
+tests can replay the ledger against that oracle.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from .engine import AdaptiveServer, Request, _next_pow2
+
+__all__ = ["ContinuousScheduler"]
+
+
+class ContinuousScheduler:
+    """FIFO continuous batching on an :class:`AdaptiveServer`'s slot pool.
+
+    ``quantum`` = decode steps per segment (admission latency vs dispatch
+    overhead); ``prefill_bucket`` = minimum power-of-two prompt padding.
+    """
+
+    def __init__(self, server: AdaptiveServer, quantum: int = 8,
+                 prefill_bucket: int = 8, record_events: bool = True):
+        self.srv = server
+        self.quantum = int(quantum)
+        self.bucket_min = int(prefill_bucket)
+        # events/admission_log power the ledger-oracle and FIFO tests; a
+        # long-lived server should pass record_events=False (they grow with
+        # every segment step). Per-request state (prompt, result) is evicted
+        # by poll_completed(); run() keeps results for its return value.
+        self.record_events = record_events
+        cfg, scfg = server.cfg, server.scfg
+        nslots = self.n_slots = scfg.max_batch
+        # device-resident pool state (donated through every jit below)
+        self._caches = T.init_caches(cfg, nslots, scfg.slots,
+                                     kv_bits=scfg.kv_bits)
+        self._tok = jnp.zeros((nslots,), jnp.int32)
+        self._pos = jnp.zeros((nslots,), jnp.int32)
+        # host bookkeeping
+        self.remaining = np.zeros((nslots,), np.int64)   # tokens left to emit
+        self.slot_req: list[Optional[int]] = [None] * nslots
+        self._slot_crit = np.zeros((nslots,), bool)
+        self.queue: deque[int] = deque()                 # FIFO pending rids
+        self._reqs: dict[int, Request] = {}
+        self.results: dict[int, dict] = {}
+        self._n = 0
+        self.admission_log: list[int] = []               # rids, admission order
+        self.events: list[tuple[int, int, bool]] = []    # (pid, n_rows, crit)
+        self._done: list[int] = []                       # completions, in order
+        self._inflight: list[dict] = []                  # dispatched, unsynced
+        # the jitted segment/admit executables live on the server, so
+        # schedulers can be torn down and rebuilt without recompiling
+        self._segment = server._segment
+        self._admit = server._admit
+
+    # ------------------------------------------------------------------ queue
+    def submit(self, request: Request) -> int:
+        """Enqueue a request (FIFO). Returns its request id."""
+        rid = self._n
+        self._n += 1
+        self._reqs[rid] = request
+        if request.max_new <= 0:        # nothing to generate: done on arrival
+            self.results[rid] = {"tokens": [], "profile_trace": []}
+            self._done.append(rid)
+            return rid
+        self.queue.append(rid)
+        return rid
+
+    @property
+    def live_rows(self) -> int:
+        return int((self.remaining > 0).sum())
+
+    @property
+    def pending(self) -> int:
+        return len(self.queue)
+
+    def poll_completed(self) -> list[tuple[int, dict]]:
+        """``(rid, result)`` pairs finished since the last poll (completion
+        order). Ownership of each result transfers to the caller: the
+        scheduler evicts the request's retained state, so a long-lived
+        polling server stays O(pool), not O(requests ever served)."""
+        done, self._done = self._done, []
+        out = []
+        for rid in done:
+            out.append((rid, self.results.pop(rid)))
+            self._reqs.pop(rid, None)
+        return out
+
+    # -------------------------------------------------------------- admission
+    def admit(self) -> int:
+        """Fill free slots from the FIFO queue; returns #requests admitted.
+
+        One admission *wave* is ONE device dispatch: every admitted request
+        rides in a single ragged prefill (left-padded to a shared pow2 prompt
+        bucket, ``prompt_len`` as data — one executable per bucket), first
+        tokens come from an on-device argmax, and each prefilled row is
+        scattered into its free pool slot, all inside the server's donated
+        ``_admit`` jit. The wave's prefills are billed like the stepwise
+        engine bills prefill: one inference per admitted request.
+        """
+        free = [s for s in range(self.n_slots) if self.slot_req[s] is None]
+        take = min(len(free), len(self.queue))
+        if not take:
+            return 0
+        rids = [self.queue.popleft() for _ in range(take)]
+        slots = free[:take]
+        reqs = [self._reqs[r] for r in rids]
+        bucket = _next_pow2(max(self.bucket_min,
+                                max(len(r.tokens) for r in reqs)))
+        a = _next_pow2(take)               # pow2 wave shape (pad rows drop):
+        # a 1–2 row refill costs a 2-row prefill, not a full-pool one, and
+        # the executable count stays log² (row bucket × length bucket)
+        prompts = np.zeros((a, bucket), np.int32)
+        plen = np.zeros((a,), np.int32)    # pad rows: prompt_len 0 → masked
+        sidx = np.full((a,), self.n_slots, np.int32)     # OOB → scatter-drop
+        for j, r in enumerate(reqs):
+            t = np.asarray(r.tokens, np.int32)
+            prompts[j, bucket - len(t):] = t             # left-pad
+            plen[j] = len(t)
+            sidx[j] = slots[j]
+        mgr = self.srv.manager
+        crit = any(r.accuracy_critical for r in reqs)
+        pid = 0 if mgr is None else mgr.select(crit)
+        if mgr is not None:
+            mgr.account(pid, take)
+        if self.record_events:
+            self.events.append((pid, take, crit))
+        tok0, self._tok, self._pos, self._caches = self._admit(
+            pid,
+            {"tokens": jnp.asarray(prompts),
+             "prompt_len": jnp.asarray(plen)},
+            jnp.asarray(sidx), self._tok, self._pos, self._caches)
+        entry = {"kind": "admit", "toks": tok0,
+                 "name": self.srv.engine.profile_names[pid],
+                 "rows": [], "completes": []}
+        for j, (rid, slot) in enumerate(zip(rids, slots)):
+            req = self._reqs[rid]
+            self.results[rid] = {"tokens": [], "profile_trace": []}
+            entry["rows"].append((j, rid))
+            if self.record_events:
+                self.admission_log.append(rid)
+            if req.max_new == 1:                         # already complete
+                entry["completes"].append(rid)
+                continue
+            self.slot_req[slot] = rid
+            self._slot_crit[slot] = req.accuracy_critical
+            self.remaining[slot] = req.max_new - 1
+        self._inflight.append(entry)
+        return take
+
+    # --------------------------------------------------------------- decoding
+    def run_segment(self) -> None:
+        """One decode segment over the pool: plan ``quantum`` steps against
+        the live rows, dispatch the fused scan, distribute tokens, retire."""
+        q = self.quantum
+        mgr = self.srv.manager
+        rem = self.remaining
+        if mgr is None:
+            sched = np.zeros((q,), np.int32)
+        else:
+            sched = mgr.plan_schedule_ragged(q, rem, self._slot_crit)
+        if self.record_events:
+            for i in range(q):
+                live_i = rem > i
+                self.events.append((int(sched[i]), int(live_i.sum()),
+                                    bool((self._slot_crit & live_i).any())))
+        toks, self._tok, self._pos, self._caches = self._segment(
+            jnp.asarray(sched), self._tok, self._pos, self._caches,
+            jnp.asarray(self.remaining, jnp.int32))
+        # retirement depends only on host-side remaining counts, never on
+        # token *values* — so bookkeeping (and the next admission/segment
+        # dispatch) proceeds without materializing ``toks``
+        entry = {"kind": "seg", "toks": toks, "sched": sched,
+                 "rows": [], "completes": []}
+        for slot in range(self.n_slots):
+            rid = self.slot_req[slot]
+            if rid is None:
+                continue
+            n = int(min(self.remaining[slot], q))
+            entry["rows"].append((slot, rid, n))
+            self.remaining[slot] -= n
+            if self.remaining[slot] == 0:                # retire → refillable
+                self.slot_req[slot] = None
+                self._slot_crit[slot] = False
+                entry["completes"].append(rid)
+        self._inflight.append(entry)
+
+    def _flush(self, keep: int = 0) -> None:
+        """Materialize in-flight token blocks into per-request results.
+
+        ``keep`` leaves the newest entries un-synced: with ``keep=1`` the
+        engine loop runs one segment ahead of the host sync, so planning,
+        admission bookkeeping, and the next dispatch overlap device compute
+        (async dispatch) instead of serializing on ``np.asarray`` per segment.
+        A request counts as completed only once its tokens are materialized.
+        """
+        names = self.srv.engine.profile_names
+        while len(self._inflight) > keep:
+            e = self._inflight.pop(0)
+            arr = np.asarray(e["toks"])                  # blocks until ready
+            if e["kind"] == "admit":
+                for j, rid in e["rows"]:
+                    res = self.results[rid]
+                    res["tokens"].append(int(arr[j]))
+                    res["profile_trace"].append(e["name"])
+            else:
+                for slot, rid, n in e["rows"]:
+                    res = self.results[rid]
+                    res["tokens"].extend(arr[slot, :n].tolist())
+                    res["profile_trace"].extend(
+                        names[p] for p in e["sched"][:n])
+            self._done.extend(e["completes"])
+
+    # ------------------------------------------------------------------ drive
+    def step(self) -> bool:
+        """Admit then run one segment, keeping one segment in flight.
+        Returns False once fully drained (all tokens materialized)."""
+        self.admit()
+        if self.live_rows:
+            self.run_segment()
+            self._flush(keep=1)
+        else:
+            self._flush()
+        return bool(self.live_rows or self.queue or self._inflight)
+
+    def run(self) -> list[dict]:
+        """Drain queue + pool; results in submission order (entries already
+        claimed through poll_completed come back as None)."""
+        while self.step():
+            pass
+        return [self.results.get(i) for i in range(self._n)]

@@ -47,6 +47,42 @@ def test_manager_saver_mode_and_hysteresis():
     assert mgr.select() == 0
 
 
+def test_zero_budget_is_unconstrained():
+    """Regression: budget_j == 0 used to read as remaining_fraction 0.0,
+    silently forcing battery-saver mode on an unconfigured manager. Zero
+    budget must mean *unconstrained* — full fraction, no saver, target-grade
+    profile selection."""
+    mgr = ProfileManager(STATS, accuracy_target=0.98, accuracy_floor=0.90,
+                         budget_j=0.0)
+    assert mgr.remaining_fraction() == 1.0
+    assert not mgr.exhausted()
+    assert mgr.select() == 0        # "hi", not the saver-mode cheap profile
+    assert not mgr._saver
+    mgr.account(0, 100)             # spending never flips an unconstrained
+    assert mgr.remaining_fraction() == 1.0
+    assert not mgr.exhausted()
+    assert mgr.select() == 0
+
+
+def test_plan_schedule_ragged_bills_live_rows_only():
+    """plan_schedule_ragged == stepwise select/account over the rows actually
+    live at each step (heterogeneous budgets), not group-wide padding."""
+    rem = np.asarray([5, 2, 0, 3])
+    m_plan = ProfileManager(STATS, accuracy_target=0.98, accuracy_floor=0.90,
+                            budget_j=40.0, low_energy=0.5)
+    sched = m_plan.plan_schedule_ragged(5, rem, np.asarray([0, 1, 0, 0], bool))
+    m_loop = ProfileManager(STATS, accuracy_target=0.98, accuracy_floor=0.90,
+                            budget_j=40.0, low_energy=0.5)
+    for i in range(5):
+        live = rem > i
+        pid = m_loop.select(accuracy_critical=bool(live[1]))
+        m_loop.account(pid, int(live.sum()))
+        assert sched[i] == pid
+    assert abs(m_plan.spent_j - m_loop.spent_j) < 1e-12
+    # step 0 bills 3 live rows, step 4 bills only the longest row
+    assert m_plan.spent_j < sum(STATS[i].energy_j for i in sched) * 4
+
+
 def test_manager_graceful_when_floor_unreachable():
     mgr = ProfileManager(STATS, accuracy_target=0.999, accuracy_floor=0.999,
                          budget_j=10.0)
