@@ -1,0 +1,81 @@
+"""Docs gate: smoke-execute fenced python snippets + check markdown links.
+
+Keeps README/docs honest the same way tests keep code honest:
+
+* every ```` ```python ```` fence is executed in a fresh interpreter with
+  ``PYTHONPATH=src`` from the repo root (a snippet opting out starts with a
+  ``# doc: no-exec`` line — for fragments that illustrate rather than run);
+* every relative markdown link/image target must exist on disk (external
+  ``scheme://`` links and pure ``#anchors`` are not fetched).
+
+  python scripts/check_docs.py README.md docs/serving.md
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+import re
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def check_links(md: pathlib.Path, text: str) -> list[str]:
+    errors = []
+    text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)  # code ≠ links
+    for target in LINK.findall(text):
+        if "://" in target or target.startswith(("#", "mailto:")):
+            continue
+        path = (md.parent / target.split("#")[0]).resolve()
+        if not path.exists():
+            errors.append(f"{md}: broken link -> {target}")
+    return errors
+
+
+def run_snippets(md: pathlib.Path, text: str) -> list[str]:
+    errors = []
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"src{os.pathsep}" + env.get("PYTHONPATH", "")
+    for i, code in enumerate(FENCE.findall(text)):
+        if code.lstrip().startswith("# doc: no-exec"):
+            continue
+        print(f"[docs] {md.name} snippet {i}: running "
+              f"({len(code.splitlines())} lines)", flush=True)
+        try:
+            proc = subprocess.run([sys.executable, "-"], input=code,
+                                  text=True, cwd=ROOT, env=env,
+                                  capture_output=True, timeout=600)
+        except subprocess.TimeoutExpired:
+            errors.append(f"{md}: snippet {i} timed out after 600s")
+            continue
+        if proc.returncode != 0:
+            errors.append(f"{md}: snippet {i} failed\n--- stderr ---\n"
+                          f"{proc.stderr[-2000:]}")
+        else:
+            tail = proc.stdout.strip().splitlines()[-1:] or [""]
+            print(f"[docs]   ok: {tail[0][:100]}")
+    return errors
+
+
+def main(paths: list[str]) -> int:
+    errors = []
+    for p in paths:
+        md = (ROOT / p).resolve()
+        try:
+            text = md.read_text()
+        except OSError as e:
+            errors.append(f"{md}: unreadable ({e})")
+            continue
+        errors += check_links(md, text)
+        errors += run_snippets(md, text)
+    for e in errors:
+        print(f"[docs] FAIL {e}", file=sys.stderr)
+    print(f"[docs] {'FAILED' if errors else 'ok'}: {len(paths)} files")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:] or ["README.md", "docs/serving.md"]))

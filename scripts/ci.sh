@@ -1,9 +1,11 @@
 #!/usr/bin/env bash
 # Tier-1 CI gate (mirrors ROADMAP.md): the full suite must pass, then the
 # serving path is exercised end-to-end (continuous scheduler + static serve
-# under open-loop Poisson arrivals), not just unit-tested.
+# under open-loop Poisson arrivals, plus the paged-KV shared-prefix point,
+# which asserts the >=30% KV-footprint saving), and finally the docs gate
+# smoke-executes every README/docs code snippet and checks markdown links.
 #
-#   ./scripts/ci.sh            # tier-1: pytest -x -q + serving smoke
+#   ./scripts/ci.sh            # tier-1: pytest -x -q + serving smoke + docs
 #   ./scripts/ci.sh --bench    # additionally run the full serving benchmark
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -13,6 +15,8 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -x -q
 
 python benchmarks/serving_bench.py --smoke
+
+python scripts/check_docs.py README.md docs/serving.md
 
 if [[ "${1:-}" == "--bench" ]]; then
     python benchmarks/serving_bench.py --quick

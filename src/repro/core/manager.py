@@ -52,8 +52,11 @@ class ProfileManager:
     _saver: bool = False
 
     def remaining_fraction(self) -> float:
-        # Zero budget = *unconstrained* (an unconfigured manager must not be
-        # silently pinned into battery-saver mode by a 0/0 → "empty" reading).
+        """Remaining energy budget in ``[0, 1]``.
+
+        Zero budget = *unconstrained* (an unconfigured manager must not be
+        silently pinned into battery-saver mode by a 0/0 → "empty" reading).
+        """
         if not self.budget_j:
             return 1.0
         return max(0.0, 1.0 - self.spent_j / self.budget_j)
@@ -64,7 +67,15 @@ class ProfileManager:
         return ok or [max(enumerate(self.profiles), key=lambda ip: ip[1].accuracy)]
 
     def select(self, accuracy_critical: bool = False) -> int:
-        """Return the profile index to run next (the engine's ``profile_id``)."""
+        """Return the profile index to run next (the engine's ``profile_id``).
+
+        Deterministic given the ledger (``spent_j``) and the hysteresis
+        state — the property every schedule planner below relies on.
+        ``accuracy_critical`` holds the selection at ``accuracy_target``
+        even in the battery-saver regime. Does NOT account: callers pair
+        each ``select`` with an :meth:`account` of the inferences actually
+        dispatched.
+        """
         rem = self.remaining_fraction()
         if self._saver and rem > self.low_energy + self.hysteresis:
             self._saver = False
@@ -77,6 +88,9 @@ class ProfileManager:
         return idx
 
     def account(self, profile_idx: int, n_inferences: int = 1) -> None:
+        """Bill ``n_inferences`` runs of profile ``profile_idx`` to the
+        ledger (one batched decode step over N live rows = N inferences;
+        one admission prefill = one inference per admitted request)."""
         self.spent_j += self.profiles[profile_idx].energy_j * n_inferences
 
     def plan_schedule(self, steps: int, n_per_step: int = 1,
@@ -106,6 +120,17 @@ class ProfileManager:
         accuracy-critical only while a critical row is still live — the exact
         ledger evolution of a stepwise per-row select/account oracle, not the
         group-wide over-billing of padding every row to the longest request.
+
+        Args:
+            steps: schedule length (the decode segment's quantum).
+            row_remaining: ``[B]`` tokens each pool row still has to emit
+                (0 = idle slot — never billed).
+            row_critical: optional ``[B]`` bool accuracy-critical flags.
+        Returns:
+            ``int32[steps]`` profile ids, ready to ride the fused decode
+            scan as data. The ledger is already advanced for all of them —
+            plan exactly one segment ahead, or the billing drifts from the
+            rows actually live.
         """
         rem = np.asarray(row_remaining, np.int64)
         crit = (np.zeros(rem.shape, bool) if row_critical is None
@@ -118,6 +143,7 @@ class ProfileManager:
         return sched
 
     def exhausted(self) -> bool:
+        """Whether the energy budget is fully spent."""
         if not self.budget_j:           # zero budget = unconstrained (see
             return False                # remaining_fraction): never exhausts
         return self.spent_j >= self.budget_j

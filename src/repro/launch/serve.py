@@ -49,6 +49,26 @@ def main() -> None:
                          "(ContinuousScheduler) instead of static groups")
     ap.add_argument("--quantum", type=int, default=8,
                     help="decode steps per continuous-batching segment")
+    ap.add_argument("--paged-kv", dest="paged_kv", action="store_true",
+                    default=True,
+                    help="paged KV pool for the continuous scheduler: "
+                         "global block pool + per-row block tables "
+                         "(default)")
+    ap.add_argument("--no-paged-kv", dest="paged_kv", action="store_false",
+                    help="contiguous [max_batch, slots] KV rows instead of "
+                         "the paged pool")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per KV block of the paged pool "
+                         "(default: 16)")
+    ap.add_argument("--pool-blocks", type=int, default=None,
+                    help="physical KV blocks to provision; default sizes "
+                         "the pool at the contiguous footprint — set lower "
+                         "to oversubscribe (admission backpressure kicks "
+                         "in when it runs dry)")
+    ap.add_argument("--no-prefix-cache", dest="prefix_cache",
+                    action="store_false", default=True,
+                    help="disable shared-prefix reuse (block-hash registry "
+                         "+ suffix-only admission prefill)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -66,7 +86,10 @@ def main() -> None:
                          low_energy=0.5)
     srv = AdaptiveServer(cfg, params, engine,
                          ServingConfig(slots=256, kv_bits=args.kv_bits,
-                                       max_batch=4),
+                                       max_batch=4, paged_kv=args.paged_kv,
+                                       block_size=args.block_size,
+                                       pool_blocks=args.pool_blocks,
+                                       prefix_cache=args.prefix_cache),
                          manager=mgr)
     rng = np.random.default_rng(args.seed)
     reqs = [Request(tokens=rng.integers(0, cfg.vocab, int(n)).astype(np.int32),
@@ -75,6 +98,7 @@ def main() -> None:
             for i, n in enumerate(rng.integers(4, 24, args.requests))]
     import time
     t0 = time.perf_counter()
+    sched = None
     if args.continuous:
         from repro.serving.scheduler import ContinuousScheduler
         sched = ContinuousScheduler(srv, quantum=args.quantum)
@@ -84,6 +108,11 @@ def main() -> None:
     else:
         results = srv.serve(reqs)
     wall = time.perf_counter() - t0
+    if sched is not None and sched.paged:
+        st = sched.paged_stats()
+        print(f"[serve] paged KV: peak {st['peak_used_blocks']}/"
+              f"{st['pool_blocks']} blocks of {st['block_size']} tokens, "
+              f"prefix hits {st.get('registry_hits', 0)}")
     n_tok = sum(len(r["tokens"]) for r in results)
     for i, r in enumerate(results):
         print(f"[serve] req{i}: {len(r['tokens'])} tokens, "

@@ -26,7 +26,9 @@ import jax.numpy as jnp
 from .pshard import constrain
 
 __all__ = ["gqa_attention", "swa_attention", "decode_attention", "KVCache",
-           "init_kv_cache", "update_kv_cache"]
+           "init_kv_cache", "update_kv_cache",
+           "PagedKVCache", "init_paged_kv_cache", "update_paged_kv_cache",
+           "paged_view", "prefix_attention"]
 
 NEG_INF = -1e30
 
@@ -258,15 +260,17 @@ def _dequantize_kv(data: jax.Array, scale: jax.Array, bits: int) -> jax.Array:
     return q.astype(jnp.float32) * scale[:, None, :, None]
 
 
-def update_kv_cache(cache: KVCache, k_new: jax.Array, v_new: jax.Array,
-                    pos: jax.Array) -> KVCache:
-    """Write one decode step (``k_new [B, 1, Hkv, D]``) at ring slot
-    ``pos % slots``; updates running scales for int caches on the fly."""
-    b, slots = cache.token_idx.shape
-    slot = (pos % slots).astype(jnp.int32)                 # [B]
+def _kv_step_quantize(cache, k_new: jax.Array, v_new: jax.Array):
+    """Decode-step scale update + row quantization, shared by the contiguous
+    and paged cache writers — they must stay bit-identical (the paged
+    cache's token-identity to the contiguous path rides on this block), so
+    it exists exactly once. Returns ``(k_scale, v_scale, k_row, v_row)``.
+
+    Int caches keep a running max-abs scale (monotone → previously written
+    rows stay valid); bf16 caches just cast.
+    """
     if cache.bits in (4, 8):
         qmax = 127.0 if cache.bits == 8 else 7.0
-        # running max-abs scale (monotone → previously written rows stay valid)
         k_amax = jnp.max(jnp.abs(k_new.astype(jnp.float32)), axis=(1, 3))
         v_amax = jnp.max(jnp.abs(v_new.astype(jnp.float32)), axis=(1, 3))
         k_scale = jnp.maximum(cache.k_scale, k_amax / qmax + 1e-9)
@@ -277,6 +281,16 @@ def update_kv_cache(cache: KVCache, k_new: jax.Array, v_new: jax.Array,
         k_scale, v_scale = cache.k_scale, cache.v_scale
         k_row = k_new[:, 0].astype(cache.k.dtype)
         v_row = v_new[:, 0].astype(cache.v.dtype)
+    return k_scale, v_scale, k_row, v_row
+
+
+def update_kv_cache(cache: KVCache, k_new: jax.Array, v_new: jax.Array,
+                    pos: jax.Array) -> KVCache:
+    """Write one decode step (``k_new [B, 1, Hkv, D]``) at ring slot
+    ``pos % slots``; updates running scales for int caches on the fly."""
+    b, slots = cache.token_idx.shape
+    slot = (pos % slots).astype(jnp.int32)                 # [B]
+    k_scale, v_scale, k_row, v_row = _kv_step_quantize(cache, k_new, v_new)
     bidx = jnp.arange(b)
     return KVCache(
         k=cache.k.at[bidx, slot].set(k_row),
@@ -286,6 +300,181 @@ def update_kv_cache(cache: KVCache, k_new: jax.Array, v_new: jax.Array,
         token_idx=cache.token_idx.at[bidx, slot].set(pos.astype(jnp.int32)),
         bits=cache.bits,
     )
+
+
+# ---------------------------------------------------------------------------
+# paged KV cache: global block pool + per-row block tables (vLLM-style)
+# ---------------------------------------------------------------------------
+
+class PagedKVCache(NamedTuple):
+    """Per-layer-stacked *paged* KV cache: a global pool of fixed-size blocks.
+
+    Instead of reserving a contiguous ``[B, S_slots]`` row per slot, K/V live
+    in a shared pool of ``n_blocks`` physical blocks of ``block_size`` tokens
+    each, and every pool row maps its *logical* blocks onto physical ones
+    through ``block_table`` — an int32 array, i.e. **data**, so remapping rows
+    at admission/retirement never retraces or recompiles anything.
+
+    ``k``/``v``: ``[n_blocks, bs, Hkv, D]`` (int8 when 8-bit quantized; int4
+    packs two values per byte along D). ``token_idx``: ``[n_blocks, bs]``
+    absolute token index per pool slot, −1 = empty — the same validity
+    sentinel the contiguous :class:`KVCache` uses, so the dense per-row view
+    built by :func:`paged_view` drops straight into
+    :func:`decode_attention`. ``k_scale``/``v_scale`` stay per *row*
+    (``[B, Hkv]``), carrying the exact running-max semantics of the
+    contiguous cache — what keeps paged decode bit-identical to it at int KV
+    precisions. ``block_table``: ``[B, n_lblk]``; entries ``>= n_blocks``
+    (out of bounds) mean "unmapped" — reads of them fill with empty slots and
+    writes to them are dropped, which is both the free-row representation and
+    the copy-on-write guard for shared prefix blocks.
+    """
+
+    k: jax.Array
+    v: jax.Array
+    k_scale: jax.Array
+    v_scale: jax.Array
+    token_idx: jax.Array
+    block_table: jax.Array
+    bits: int = 16  # static (pytree aux)
+
+
+jax.tree_util.register_pytree_with_keys(
+    PagedKVCache,
+    lambda c: ([(jax.tree_util.GetAttrKey(n), getattr(c, n))
+                for n in ("k", "v", "k_scale", "v_scale", "token_idx",
+                          "block_table")],
+               (c.bits,)),
+    lambda aux, ch: PagedKVCache(*ch, bits=aux[0]),
+)
+
+
+def init_paged_kv_cache(batch: int, n_blocks: int, block_size: int,
+                        n_lblk: int, hkv: int, d: int, *,
+                        bits: int = 16, dtype=jnp.bfloat16) -> PagedKVCache:
+    """Empty pool: ``n_blocks`` physical blocks, every row's table unmapped.
+
+    ``n_lblk`` logical blocks per row bound each row's *virtual* sequence
+    length at ``n_lblk * block_size`` slots (the analogue of the contiguous
+    cache's ``slots``); the pool is sized independently — that decoupling of
+    logical capacity from physical allocation is the entire point.
+    """
+    if bits == 4:
+        assert d % 2 == 0
+        shape = (n_blocks, block_size, hkv, d // 2)
+        cdt = jnp.int8
+    else:
+        shape = (n_blocks, block_size, hkv, d)
+        cdt = jnp.int8 if bits == 8 else dtype
+    return PagedKVCache(
+        k=jnp.zeros(shape, cdt),
+        v=jnp.zeros(shape, cdt),
+        k_scale=jnp.ones((batch, hkv), jnp.float32),
+        v_scale=jnp.ones((batch, hkv), jnp.float32),
+        token_idx=jnp.full((n_blocks, block_size), -1, jnp.int32),
+        block_table=jnp.full((batch, n_lblk), n_blocks, jnp.int32),
+        bits=bits,
+    )
+
+
+def paged_view(cache: PagedKVCache) -> KVCache:
+    """Dense per-row gather view: ``[B, n_lblk*bs, ...]`` :class:`KVCache`.
+
+    One gather per field, keyed off the block table; unmapped logical blocks
+    fill with zeros / ``token_idx`` −1, i.e. *empty* slots, exactly the
+    contiguous cache's pad representation (``kv_valid`` masking in attention
+    falls out of ``token_idx`` as usual). Because a row's logical block
+    ``l`` holds the tokens the contiguous ring would keep at slots
+    ``[l*bs, (l+1)*bs)``, the view reconstructs the contiguous layout
+    byte-for-byte and :func:`decode_attention` runs on it unchanged — paged
+    decode stays token-identical to the contiguous path by construction.
+    """
+    b, n_lblk = cache.block_table.shape
+    bs = cache.k.shape[1]
+
+    def gather(pool, fill):
+        g = jnp.take(pool, cache.block_table, axis=0, mode="fill",
+                     fill_value=fill)                 # [B, n_lblk, bs, ...]
+        return g.reshape(b, n_lblk * bs, *pool.shape[2:])
+
+    return KVCache(
+        k=gather(cache.k, 0), v=gather(cache.v, 0),
+        k_scale=cache.k_scale, v_scale=cache.v_scale,
+        token_idx=gather(cache.token_idx, -1),
+        bits=cache.bits,
+    )
+
+
+def update_paged_kv_cache(cache: PagedKVCache, k_new: jax.Array,
+                          v_new: jax.Array, pos: jax.Array) -> PagedKVCache:
+    """Write one decode step through the block table.
+
+    Virtual ring slot ``pos % (n_lblk*bs)`` resolves to physical block
+    ``block_table[row, slot // bs]``, offset ``slot % bs`` — identical
+    placement to the contiguous ring, so the gathered view stays
+    bit-identical. Rows whose mapping is unmapped (retired rows whose table
+    was cleared, never-admitted free rows) scatter with ``mode="drop"`` —
+    a dead row can never write into a block that has been handed to another
+    request. Scale updates share :func:`update_kv_cache`'s code exactly.
+    """
+    b, n_lblk = cache.block_table.shape
+    bs = cache.k.shape[1]
+    slot = (pos % (n_lblk * bs)).astype(jnp.int32)            # [B] virtual
+    phys = jnp.take_along_axis(cache.block_table,
+                               (slot // bs)[:, None], axis=1)[:, 0]
+    off = slot % bs
+    k_scale, v_scale, k_row, v_row = _kv_step_quantize(cache, k_new, v_new)
+    return PagedKVCache(
+        k=cache.k.at[phys, off].set(k_row, mode="drop"),
+        v=cache.v.at[phys, off].set(v_row, mode="drop"),
+        k_scale=k_scale, v_scale=v_scale,
+        token_idx=cache.token_idx.at[phys, off].set(pos.astype(jnp.int32),
+                                                    mode="drop"),
+        block_table=cache.block_table,
+        bits=cache.bits,
+    )
+
+
+def prefix_attention(q: jax.Array, k_pre: jax.Array, v_pre: jax.Array,
+                     k_suf: jax.Array, v_suf: jax.Array, *,
+                     positions: jax.Array, prefix_len: jax.Array,
+                     suffix_valid: jax.Array) -> jax.Array:
+    """Continuation-prefill attention: suffix queries vs [prefix ++ suffix] keys.
+
+    The shared-prefix admission path prefills only the *suffix* of a prompt
+    whose prefix KV already exists; each suffix query must still attend over
+    the full causal history. ``q``/``k_suf``/``v_suf`` are the suffix
+    projections (``[B, S, H|Hkv, D]``, rows left-padded); ``k_pre``/``v_pre``
+    ``[B, Pp, Hkv, D]`` hold the prefix keys/values (zero-padded past
+    ``prefix_len[row]``); ``positions [B, S]`` are the suffix tokens'
+    absolute positions (``prefix_len + local index``; negative on pads) and
+    ``suffix_valid [B, S]`` masks the pads. Prefix keys sit at absolute
+    positions ``0..prefix_len−1`` by construction — the logical-position
+    invariant that makes a prefix shareable at all. Admission waves are small
+    (``S``, ``Pp`` ≤ a few hundred), so a dense masked softmax is used rather
+    than the blockwise online form. Full causal attention only — sliding-
+    window stacks don't take the shared-prefix path.
+    """
+    b, s, h, d = q.shape
+    _, pp, hkv, _ = k_pre.shape
+    hg = h // hkv
+    qh = (q.astype(jnp.float32) * d ** -0.5).reshape(b, s, hkv, hg, d)
+    qh = qh.transpose(0, 2, 3, 1, 4)                      # [B, Hkv, Hg, S, D]
+    kc = jnp.concatenate([k_pre, k_suf], axis=1).astype(jnp.float32)
+    vc = jnp.concatenate([v_pre, v_suf], axis=1).astype(jnp.float32)
+    kc = kc.transpose(0, 2, 1, 3)                         # [B, Hkv, Pp+S, D]
+    vc = vc.transpose(0, 2, 1, 3)
+    scores = jnp.einsum("bkgsd,bkud->bkgsu", qh, kc)
+    ppos = jnp.arange(pp, dtype=jnp.int32)
+    keep_pre = (ppos[None, None, :] < prefix_len[:, None, None]) & \
+               (ppos[None, None, :] <= positions[:, :, None])    # [B, S, Pp]
+    kqpos = positions                                      # suffix key pos
+    keep_suf = suffix_valid[:, None, :] & \
+               (kqpos[:, None, :] <= positions[:, :, None])      # [B, S, S]
+    keep = jnp.concatenate([keep_pre, keep_suf], axis=-1)  # [B, S, Pp+S]
+    scores = jnp.where(keep[:, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgsu,bkud->bkgsd", p, vc)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, s, h, d).astype(q.dtype)
 
 
 def decode_attention(q: jax.Array, cache: KVCache, pos: jax.Array, *,

@@ -29,8 +29,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .attention import (KVCache, decode_attention, gqa_attention,
-                        init_kv_cache, swa_attention, update_kv_cache)
+from .attention import (KVCache, PagedKVCache, decode_attention,
+                        gqa_attention, init_kv_cache, init_paged_kv_cache,
+                        paged_view, prefix_attention, swa_attention,
+                        update_kv_cache, update_paged_kv_cache)
 from .pshard import constrain
 from .layers import (embed_lookup, init_embed, init_linear, init_norm,
                      layer_norm, qlinear, rms_norm)
@@ -41,8 +43,9 @@ from .ssm import (SSMConfig, SSMState, init_ssm, init_ssm_state,
                   ssd_forward, ssm_decode_step)
 
 __all__ = ["ModelConfig", "init_params", "quant_layer_names", "forward",
-           "train_loss", "init_caches", "decode_step", "decode_many",
-           "decode_segment", "prefill",
+           "train_loss", "init_caches", "init_paged_caches", "decode_step",
+           "decode_many", "decode_segment", "prefill", "prefill_extend",
+           "forward_extend", "cache_bytes", "supports_prefix_sharing",
            "prequant_decode_weights", "overlay_params",
            "param_count", "active_param_count"]
 
@@ -493,6 +496,75 @@ def init_caches(cfg: ModelConfig, batch: int, slots: int, *,
     return caches
 
 
+def paged_block_size(cfg: ModelConfig, slots: int, block_size: int) -> int:
+    """Largest block size ≤ ``block_size`` compatible with ``cfg``.
+
+    Sliding-window stacks ring-wrap at the window, so exact equivalence
+    with the contiguous ring requires the block size to divide the window
+    (a non-divisor request degrades to the largest divisor). Full-attention
+    stacks never wrap within a valid request — their virtual row just
+    rounds up to a whole number of blocks — so any block size works.
+    """
+    bs = max(1, int(block_size))
+    if cfg.sliding_window:
+        eff = min(slots, cfg.sliding_window)
+        while eff % bs and bs > 1:
+            bs -= 1
+    return bs
+
+
+def init_paged_caches(cfg: ModelConfig, batch: int, slots: int, *,
+                      kv_bits: int = 16, block_size: int = 16,
+                      pool_blocks: Optional[int] = None) -> dict:
+    """Paged decode caches: the KV pool is a global set of fixed-size blocks.
+
+    Same contract as :func:`init_caches` (stacked ``[L, ...]``, scanned over
+    layers), but attention state is a :class:`repro.models.attention.
+    PagedKVCache`: ``pool_blocks`` physical blocks of ``block_size`` tokens
+    shared by all ``batch`` rows, each row owning a ``[n_lblk]`` block table
+    (``n_lblk = ceil(eff_slots / block_size)``). ``pool_blocks=None``
+    provisions ``batch * n_lblk`` — exactly the contiguous footprint; a
+    scheduler that shares prefixes or admits short rows can provision far
+    less. SSM state is O(1) per row and stays dense, as in
+    :func:`init_caches`.
+    """
+    caches: dict[str, Any] = {}
+    if cfg.has_attn:
+        eff = min(slots, cfg.sliding_window) if cfg.sliding_window else slots
+        bs = paged_block_size(cfg, slots, block_size)
+        n_lblk = -(-eff // bs)
+        nb = batch * n_lblk if pool_blocks is None else int(pool_blocks)
+        dt = jnp.float32 if kv_bits == 32 else jnp.bfloat16
+        caches["kv"] = _stack_layerwise(
+            lambda: init_paged_kv_cache(batch, nb, bs, n_lblk, cfg.n_kv,
+                                        cfg.hd, bits=kv_bits, dtype=dt),
+            cfg.n_layers)
+    if cfg.has_ssm:
+        caches["ssm"] = _stack_layerwise(
+            lambda: init_ssm_state(batch, cfg.d_model, cfg.ssm), cfg.n_layers)
+    return caches
+
+
+def cache_bytes(caches) -> int:
+    """Device bytes held by a cache pytree (KV pools, block tables, scales,
+    SSM state) — the serving bench's KV-memory-footprint metric."""
+    return sum(int(x.nbytes) for x in jax.tree_util.tree_leaves(caches))
+
+
+def supports_prefix_sharing(cfg: ModelConfig) -> bool:
+    """Whether the shared-prefix admission path is exact for this stack.
+
+    Requires full causal attention with per-position state only: the prefix
+    KV is position-addressed, so any row can map it. Sliding-window stacks
+    ring-wrap (a shared block would eventually be overwritten), SSM stacks
+    carry a recurrent state that is not per-position, and MoE capacity
+    dispatch couples tokens across the batch — those families take the cold
+    paged path instead (still paged, just no cross-request block mapping).
+    """
+    return (cfg.has_attn and not cfg.has_ssm and cfg.family != "moe"
+            and not cfg.sliding_window and cfg.causal)
+
+
 def decode_step(params: dict, cfg: ModelConfig, bits_row: jax.Array,
                 tokens: jax.Array, pos: jax.Array, caches: dict,
                 row_valid: Optional[jax.Array] = None):
@@ -514,10 +586,32 @@ def decode_step(params: dict, cfg: ModelConfig, bits_row: jax.Array,
         if cfg.has_attn:
             xin = _norm(cfg, lp["norm_attn"], x)
             q, k, v = _attn_qkv(cfg, lp, xin, lb, positions)
-            kvc = update_kv_cache(cache["kv"], k, v, pos)
-            attn = decode_attention(
-                q, kvc, pos,
-                window=cfg.window(kvc.token_idx.shape[1]))
+            if "kv_view" in cache:
+                # paged fast path (decode_segment): the block table is
+                # fixed for the whole segment, so the dense per-row view
+                # was gathered ONCE at segment entry, rides the carry, and
+                # takes every read AND write of the segment — exactly the
+                # contiguous ring's per-step cost. The pool passes through
+                # untouched; decode_segment folds the view's blocks back
+                # through the block tables once, at segment exit.
+                kvc = cache["kv"]
+                view = update_kv_cache(cache["kv_view"], k, v, pos)
+                attn = decode_attention(
+                    q, view, pos,
+                    window=cfg.window(view.token_idx.shape[1]))
+                new_cache["kv_view"] = view
+            elif isinstance(cache["kv"], PagedKVCache):
+                # standalone paged step: gather the view on the spot
+                kvc = update_paged_kv_cache(cache["kv"], k, v, pos)
+                view = paged_view(kvc)
+                attn = decode_attention(
+                    q, view, pos,
+                    window=cfg.window(view.token_idx.shape[1]))
+            else:
+                kvc = update_kv_cache(cache["kv"], k, v, pos)
+                attn = decode_attention(
+                    q, kvc, pos,
+                    window=cfg.window(kvc.token_idx.shape[1]))
             attn = qlinear(lp["attn_out"], attn.reshape(b, 1, -1),
                            lb[_site_idx(cfg, "attn_out")])
             new_cache["kv"] = kvc
@@ -725,6 +819,14 @@ def decode_segment(params: dict, cfg: ModelConfig, table: jax.Array,
     if prequant is None:
         prequant = prequant_decode_weights(params, cfg, table)
     rem = jnp.asarray(remaining, jnp.int32)
+    paged = isinstance(caches.get("kv"), PagedKVCache)
+    if paged:
+        # block tables are fixed for the segment: gather the dense per-row
+        # view once here instead of once per step inside the scan — the
+        # steps read AND write only the view (the pool passes through the
+        # scan untouched and absorbs the view's blocks at segment exit)
+        caches = dict(caches)
+        caches["kv_view"] = jax.vmap(paged_view)(caches["kv"])
 
     def step(carry, xs):
         pid, i = xs
@@ -738,17 +840,64 @@ def decode_segment(params: dict, cfg: ModelConfig, table: jax.Array,
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         out = jnp.where(live, nxt, -1)
         feed = jnp.where(live, nxt, 0)
-        return (feed, pos + 1, cch), out
+        # dead rows freeze their position: their junk writes stay parked on
+        # one slot past their last real token instead of marching around the
+        # ring — with a paged cache a marching dead row would eventually wrap
+        # into its first logical block, which may be a *shared* prefix block
+        return (feed, pos + live.astype(jnp.int32), cch), out
 
     steps = schedule.shape[0]
     carry0 = (jnp.asarray(tok0, jnp.int32), pos0.astype(jnp.int32), caches)
     (tok, pos, caches), ys = jax.lax.scan(
         step, carry0, (schedule, jnp.arange(steps, dtype=jnp.int32)))
+    if paged:
+        # fold the segment's decode writes back into the persistent pool:
+        # one blocked scatter per layer instead of one per step. Shared
+        # prefix blocks appear in several rows' tables, but decode never
+        # writes their virtual range, so every duplicate scatter carries
+        # the same original bytes; unmapped tables (free/retired rows)
+        # drop, so their junk follows no block to its next owner. Rows that
+        # FINISH inside this segment (0 < remaining <= steps) come back
+        # unmapped too — their cache has no future reader, so retirement
+        # needs no separate table-clearing dispatch from the host.
+        caches = dict(caches)
+        view = caches.pop("kv_view")
+        finish = (rem > 0) & (rem <= steps)
+
+        def writeback(pool_l, view_l):
+            b, nlb = pool_l.block_table.shape
+            bs = pool_l.k.shape[1]
+            nb = pool_l.k.shape[0]
+            bt = jnp.where(finish[:, None], nb, pool_l.block_table)
+            # scatter is slow on CPU backends, so write back via the INVERSE
+            # map instead: one tiny scatter builds pool-block → view-block
+            # (shared blocks appear under several rows — any winner carries
+            # identical bytes, since decode never writes the shared range),
+            # then fast gathers pull each mapped block's new content and a
+            # select keeps unmapped blocks' old bytes
+            inv = jnp.full((nb + 1,), b * nlb, jnp.int32)
+            inv = inv.at[bt.reshape(-1)].set(
+                jnp.arange(b * nlb, dtype=jnp.int32), mode="drop")[:nb]
+            mapped = inv < b * nlb
+
+            def put(pl, vl):
+                blk = vl.reshape(b * nlb, bs, *vl.shape[2:])
+                g = jnp.take(blk, inv, axis=0, mode="fill", fill_value=0)
+                keep = mapped.reshape((nb,) + (1,) * (g.ndim - 1))
+                return jnp.where(keep, g, pl)
+
+            return pool_l._replace(
+                k=put(pool_l.k, view_l.k), v=put(pool_l.v, view_l.v),
+                token_idx=put(pool_l.token_idx, view_l.token_idx),
+                k_scale=view_l.k_scale, v_scale=view_l.v_scale,
+                block_table=bt)
+
+        caches["kv"] = jax.vmap(writeback)(caches["kv"], view)
     return ys.T, tok, pos, caches
 
 
 def prefill(params: dict, cfg: ModelConfig, bits_row: jax.Array, batch: dict,
-            slots: int, *, kv_bits: int = 16):
+            slots: int, *, kv_bits: int = 16, return_raw_kv: bool = False):
     """Full-sequence prefill → (last-token logits [B,V], decode-ready caches).
 
     Ragged batches (``batch["prompt_len"]``): each left-padded row hands off
@@ -757,6 +906,13 @@ def prefill(params: dict, cfg: ModelConfig, bits_row: jax.Array, batch: dict,
     would. Pad slots are never written — their ``token_idx`` stays at the −1
     sentinel, which :func:`repro.models.attention.decode_attention` skips —
     and int-cache dequant scales are calibrated over real tokens only.
+
+    ``return_raw_kv`` additionally returns the *pre-quantization* collected
+    per-layer K/V (``(k, v)`` each ``[L, B, S, Hkv, hd]``, still in padded
+    column coordinates) as a third result — the full-precision masters a
+    prefix registry snapshots so later shared-prefix admissions can replay
+    the exact cache-fill (attention reads and int-KV scale calibration) a
+    cold prefill would have done.
     """
     hidden, _, collected = forward(params, cfg, bits_row, batch, collect=True)
     b, s, _ = hidden.shape
@@ -811,5 +967,147 @@ def prefill(params: dict, cfg: ModelConfig, bits_row: jax.Array, batch: dict,
     if cfg.has_ssm and ssm_col is not None:
         h_fin, conv_tail = ssm_col              # [L, B, H, P, N], [L, B, K-1, cd]
         caches["ssm"] = SSMState(h=h_fin, conv=conv_tail.astype(jnp.float32))
+    logits = _logits(cfg, params, bits_row, hidden[:, -1:])[:, 0]
+    if return_raw_kv:
+        return logits, caches, kv_col
+    return logits, caches
+
+
+# ---------------------------------------------------------------------------
+# shared-prefix continuation prefill (paged KV serving)
+# ---------------------------------------------------------------------------
+
+def forward_extend(params: dict, cfg: ModelConfig, bits_row: jax.Array,
+                   batch: dict, prefix_k: jax.Array, prefix_v: jax.Array,
+                   prefix_len: jax.Array):
+    """Backbone over a prompt *suffix*, attending to precomputed prefix KV.
+
+    The shared-prefix admission path skips re-running the backbone over a
+    prefix whose per-layer KV already exists; only the divergent suffix is
+    embedded and pushed through the layers, with every attention read
+    spanning ``[prefix KV ++ suffix KV]`` (:func:`repro.models.attention.
+    prefix_attention`). Positions are absolute (``prefix_len + local``), so
+    rope and causal masks line up with what a cold full-prompt prefill
+    computes.
+
+    ``batch``: ``tokens [B, Sb]`` left-padded suffixes + ``prompt_len [B]``
+    = per-row *suffix* lengths. ``prefix_k``/``prefix_v``: ``[L, B, Pp, Hkv,
+    hd]`` full-precision prefix masters, zero-padded past ``prefix_len[row]``
+    (their logical positions are ``0..prefix_len−1`` by the shared-prefix
+    invariant). Returns ``(hidden [B, Sb, d], (k, v) [L, B, Sb, Hkv, hd])``.
+    Only stacks where :func:`supports_prefix_sharing` holds may call this.
+    """
+    assert supports_prefix_sharing(cfg), cfg.family
+    eb, _, layer_bits = split_bits(cfg, bits_row)
+    x = embed_lookup(params["embed"], batch["tokens"], eb)
+    b, s = batch["tokens"].shape
+    slen = jnp.asarray(batch["prompt_len"], jnp.int32)
+    plen = jnp.asarray(prefix_len, jnp.int32)
+    local = jnp.arange(s, dtype=jnp.int32)[None] - (s - slen)[:, None]
+    positions = local + plen[:, None]         # absolute; negative on pads
+    valid = local >= 0
+    x = jnp.where(valid[..., None], x, 0).astype(x.dtype)
+    x = constrain(x, "dp", None, None)
+
+    def body(x, xs):
+        lp, lb, kp, vp = xs
+        xin = _norm(cfg, lp["norm_attn"], x)
+        q, k, v = _attn_qkv(cfg, lp, xin, lb, positions)
+        attn = prefix_attention(q, kp, vp, k, v, positions=positions,
+                                prefix_len=plen, suffix_valid=valid)
+        x = x + qlinear(lp["attn_out"], attn.reshape(b, s, -1),
+                        lb[_site_idx(cfg, "attn_out")])
+        x = constrain(x, "dp", None, None)
+        xm = _norm(cfg, lp["norm_mlp"], x)
+        x = x + mlp(lp["mlp"], xm, lb[_site_idx(cfg, "mlp_in")],
+                    lb[_site_idx(cfg, "mlp_out")],
+                    gated=cfg.act == "silu", act=cfg.act)
+        return x, (k, v)
+
+    x, kv_col = jax.lax.scan(body, x,
+                             (params["layers"], layer_bits,
+                              prefix_k, prefix_v))
+    x = _norm(cfg, params["norm_f"], x)
+    return x, kv_col
+
+
+def prefill_extend(params: dict, cfg: ModelConfig, bits_row: jax.Array,
+                   batch: dict, slots: int, *, kv_bits: int = 16,
+                   prefix_k: jax.Array, prefix_v: jax.Array,
+                   prefix_len: jax.Array,
+                   prefix_k_amax: Optional[jax.Array] = None,
+                   prefix_v_amax: Optional[jax.Array] = None):
+    """Shared-prefix prefill → (last-token logits, dense decode caches).
+
+    Runs :func:`forward_extend` over the suffix only, then builds the same
+    dense ``[B, slots]`` row caches a cold :func:`prefill` of the full
+    prompt would: prefix K/V land at logical positions ``0..prefix_len−1``
+    (re-cast / re-quantized from the full-precision masters), suffix K/V at
+    ``prefix_len..prompt_len−1``, everything else stays at the ``token_idx
+    = −1`` empty sentinel. For int KV the per-row dequant scale is
+    calibrated as ``max(prefix amax, suffix amax)`` — *exactly* the scale a
+    cold prefill over all real tokens computes (``prefix_*_amax [L, B,
+    Hkv]`` are the raw max-|K|/|V| over real prefix tokens, snapshotted at
+    registration) — so the quantized ints, and every decode step after
+    them, match the cold path. The caller scatters the resulting rows into
+    pool blocks, skipping the shared ones (copy-on-write: shared blocks are
+    never written, divergent content lands in private blocks).
+    """
+    hidden, kv_col = forward_extend(params, cfg, bits_row, batch,
+                                    prefix_k, prefix_v, prefix_len)
+    b, s, _ = hidden.shape
+    caches = init_caches(cfg, b, slots, kv_bits=kv_bits)
+    k_all, v_all = kv_col                        # [L, B, Sb, Hkv, hd]
+    eff = caches["kv"].token_idx.shape[-1]
+    pp = prefix_k.shape[2]
+    plen = jnp.asarray(prefix_len, jnp.int32)
+    slen = jnp.asarray(batch["prompt_len"], jnp.int32)
+    ppos = jnp.arange(pp, dtype=jnp.int32)
+    real_p = ppos[None] < plen[:, None]                   # [B, Pp]
+    slot_p = jnp.where(real_p, ppos[None], eff)           # OOB → drop
+    tokw_p = jnp.where(real_p, ppos[None], -1)
+    local = jnp.arange(s, dtype=jnp.int32)[None] - (s - slen)[:, None]
+    pos_s = local + plen[:, None]                         # [B, Sb] absolute
+    real_s = local >= 0
+    slot_s = jnp.where(real_s, pos_s, eff)
+    tokw_s = jnp.where(real_s, pos_s, -1)
+    ridx = jnp.arange(b)[:, None]
+
+    def fill(kvc, k_l, v_l, kp_l, vp_l, ka_l, va_l):
+        if kvc.bits in (4, 8):
+            from repro.models.attention import _quantize_kv
+            qmax = 127.0 if kvc.bits == 8 else 7.0
+            ka = jnp.where(real_s[:, :, None, None],
+                           jnp.abs(k_l.astype(jnp.float32)), 0.0)
+            va = jnp.where(real_s[:, :, None, None],
+                           jnp.abs(v_l.astype(jnp.float32)), 0.0)
+            ks = jnp.maximum(jnp.max(ka, axis=(1, 3)), ka_l) / qmax + 1e-9
+            vs = jnp.maximum(jnp.max(va, axis=(1, 3)), va_l) / qmax + 1e-9
+            kq_s, vq_s = _quantize_kv(k_l, ks, kvc.bits), \
+                _quantize_kv(v_l, vs, kvc.bits)
+            kq_p, vq_p = _quantize_kv(kp_l, ks, kvc.bits), \
+                _quantize_kv(vp_l, vs, kvc.bits)
+        else:
+            ks, vs = kvc.k_scale, kvc.v_scale
+            kq_s, vq_s = k_l.astype(kvc.k.dtype), v_l.astype(kvc.v.dtype)
+            kq_p, vq_p = kp_l.astype(kvc.k.dtype), vp_l.astype(kvc.v.dtype)
+        k = kvc.k.at[ridx, slot_p].set(kq_p, mode="drop")
+        v = kvc.v.at[ridx, slot_p].set(vq_p, mode="drop")
+        ti = kvc.token_idx.at[ridx, slot_p].set(tokw_p, mode="drop")
+        return KVCache(
+            k=k.at[ridx, slot_s].set(kq_s, mode="drop"),
+            v=v.at[ridx, slot_s].set(vq_s, mode="drop"),
+            k_scale=ks, v_scale=vs,
+            token_idx=ti.at[ridx, slot_s].set(tokw_s, mode="drop"),
+            bits=kvc.bits,
+        )
+
+    if prefix_k_amax is None:
+        prefix_k_amax = jnp.zeros((cfg.n_layers, b, cfg.n_kv), jnp.float32)
+    if prefix_v_amax is None:
+        prefix_v_amax = jnp.zeros((cfg.n_layers, b, cfg.n_kv), jnp.float32)
+    caches["kv"] = jax.vmap(fill)(caches["kv"], k_all, v_all,
+                                  prefix_k, prefix_v,
+                                  prefix_k_amax, prefix_v_amax)
     logits = _logits(cfg, params, bits_row, hidden[:, -1:])[:, 0]
     return logits, caches

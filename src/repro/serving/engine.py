@@ -47,28 +47,93 @@ __all__ = ["ServingConfig", "AdaptiveServer", "Request"]
 
 
 def _next_pow2(n: int) -> int:
+    """Smallest power of two ≥ ``n`` (shape-bucketing helper)."""
     return 1 << (int(n) - 1).bit_length()
 
 
 @dataclasses.dataclass(frozen=True)
 class ServingConfig:
-    slots: int = 4096           # KV slots (≥ prompt + generation budget)
-    kv_bits: int = 16           # 16 (bf16) | 8 (int8 cache)
+    """Deployment knobs for an :class:`AdaptiveServer`.
+
+    ``slots`` — per-row KV capacity in tokens; must cover ``prompt_len +
+    max_new`` for every request (sliding-window stacks ring within their
+    window regardless). ``kv_bits`` — KV cache storage precision: 16 (bf16
+    baseline) or 8 (int8, the beyond-paper memory-roofline win). ``max_batch``
+    — decode rows: the static group width of :meth:`AdaptiveServer.serve` and
+    the slot-pool size of :class:`~repro.serving.scheduler.
+    ContinuousScheduler`. ``greedy`` — argmax sampling (the only mode the
+    fused decode scan implements today).
+
+    Paged-KV knobs (used by the continuous scheduler's slot pool; the
+    solo/static paths keep the contiguous layout as the oracle):
+
+    ``paged_kv`` — lay the pool out as a global block pool + per-row block
+    tables instead of contiguous ``[max_batch, slots]`` rows.
+    ``block_size`` — tokens per block (rounded down to a divisor of the
+    sliding window when one exists, so paged placement matches the
+    contiguous ring exactly). ``pool_blocks`` — physical blocks to
+    provision; ``None`` means ``max_batch * ceil(slots/block_size)``, the
+    exact contiguous footprint — set it lower to realize the paged memory
+    win (short rows + shared prefixes), with admission backpressure as the
+    safety valve. ``prefix_cache`` — register block-aligned prompt prefixes
+    and serve hash-matched admissions from them (full-attention stacks
+    only); ``prefix_capacity`` bounds registered entries (LRU — note one
+    prompt registers its whole block-aligned prefix chain, one entry per
+    length, so later prompts can match at any block boundary).
+    """
+
+    slots: int = 4096
+    kv_bits: int = 16
     max_batch: int = 8
     greedy: bool = True
+    paged_kv: bool = True
+    block_size: int = 16
+    pool_blocks: Optional[int] = None
+    prefix_cache: bool = True
+    prefix_capacity: int = 32
 
 
 @dataclasses.dataclass
 class Request:
-    tokens: np.ndarray          # [S] prompt
+    """One generation request.
+
+    ``tokens`` — the ``[S]`` int32 prompt. ``max_new`` — token budget; the
+    request retires after exactly ``max_new`` generated tokens (greedy, no
+    EOS short-circuit). ``accuracy_critical`` — pins profile selection to
+    the accuracy target even in the battery-saver regime (paper §4.4).
+    """
+
+    tokens: np.ndarray
     max_new: int = 32
     accuracy_critical: bool = False
 
 
 class AdaptiveServer:
+    """Adaptive inference engine: jitted serving entry points over one model.
+
+    Owns the compiled executables of the serving stack — ``_prefill`` /
+    ``_decode`` (stepwise oracle), ``_generate`` (fused whole-generation
+    scan), and the continuous-batching primitives ``_segment`` / ``_admit``
+    (+ paged variants) shared by every :class:`~repro.serving.scheduler.
+    ContinuousScheduler` built on top — plus the per-profile prequantized
+    weight images. Profile adaptivity is bits-as-data: ``profile_id`` and
+    per-step schedules are traced int32 inputs, so switching profiles never
+    recompiles (the paper's runtime configuration word).
+
+    Args:
+        cfg: model architecture.
+        params: parameter pytree (fixed for the server's lifetime — the
+            prequant images and closed-over executables assume it).
+        engine: merged :class:`AdaptiveEngine` (profile family + bits table).
+        serving: :class:`ServingConfig` deployment knobs.
+        manager: optional :class:`ProfileManager`; ``None`` pins profile 0.
+    """
+
     def __init__(self, cfg: T.ModelConfig, params, engine: AdaptiveEngine,
                  serving: ServingConfig,
                  manager: Optional[ProfileManager] = None):
+        """Compile the serving executables and prequantize weight images
+        (see the class docstring for the argument contract)."""
         self.cfg = cfg
         self.params = params
         self.engine = engine
@@ -125,6 +190,107 @@ class AdaptiveServer:
                         mode="drop"),
                     caches)
 
+        # ---- paged-KV geometry (continuous scheduler's block pool) -------
+        # block size degrades to a divisor of the SWA window so paged ring
+        # placement matches the contiguous ring slot-for-slot
+        self.block_size = T.paged_block_size(cfg, serving.slots,
+                                             serving.block_size)
+        eff = (min(serving.slots, cfg.sliding_window) if cfg.sliding_window
+               else serving.slots)
+        self.n_lblk = -(-eff // self.block_size)       # logical blocks / row
+        self.slots_p = self.n_lblk * self.block_size   # virtual row length
+        self.prefix_sharing = bool(serving.prefix_cache
+                                   and T.supports_prefix_sharing(cfg))
+        # full-precision prefix masters are only needed when the pool's
+        # storage is lossy (int KV): a bf16 pool *is* its own master, so
+        # kv16 shared admissions gather the prefix straight from the shared
+        # blocks and the registry stores nothing but block ids
+        self._collect_masters = self.prefix_sharing and serving.kv_bits != 16
+
+        def admit_paged_fn(profile_id, batch, slots_idx, dest, tok, pos,
+                           caches):
+            # paged admission wave: one ragged prefill into transient dense
+            # rows, then one scatter of those rows into the block pool at
+            # the host-chosen physical ids. ``dest[j, l]`` is the write
+            # mapping for row j's logical block l — out-of-range entries
+            # (wave padding, logical blocks past the row's need, and shared
+            # prefix blocks owned by the registry) are DROPPED by the
+            # scatter: that drop is the copy-on-write discipline. Writing
+            # every private block wholesale also clears any stale
+            # ``token_idx`` left by the block's previous owner.
+            bits = jnp.asarray(table)[profile_id]
+            out = T.prefill(self.params, cfg, bits, batch, self.slots_p,
+                            kv_bits=serving.kv_bits,
+                            return_raw_kv=self._collect_masters)
+            logits, rows = out[0], out[1]
+            raw = out[2] if self._collect_masters else None
+            tok0 = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            caches = dict(caches)
+            caches["kv"] = self._scatter_blocks(caches["kv"], rows["kv"],
+                                                dest, slots_idx)
+            if "ssm" in caches:
+                caches["ssm"] = jax.tree.map(
+                    lambda pool, row: pool.at[:, slots_idx].set(
+                        row, mode="drop"),
+                    caches["ssm"], rows["ssm"])
+            plen = jnp.asarray(batch["prompt_len"], jnp.int32)
+            return (tok0, raw,
+                    tok.at[slots_idx].set(tok0, mode="drop"),
+                    pos.at[slots_idx].set(plen, mode="drop"),
+                    caches)
+
+        def _admit_shared_body(profile_id, batch, slots_idx, dest, bt_rows,
+                               kpre, vpre, ka, va, prefix_len, tok, pos,
+                               caches):
+            # shared-prefix admission wave: continuation prefill over the
+            # suffixes only (prefix KV replayed from masters / pool
+            # blocks), then the same block scatter — with ``dest``
+            # out-of-range on the shared blocks (never written; ``bt_rows``
+            # still maps them) and private on everything after the
+            # divergence point: that skipped write IS the copy-on-write.
+            bits = jnp.asarray(table)[profile_id]
+            logits, rows = T.prefill_extend(
+                self.params, cfg, bits, batch, self.slots_p,
+                kv_bits=serving.kv_bits, prefix_k=kpre, prefix_v=vpre,
+                prefix_len=prefix_len, prefix_k_amax=ka, prefix_v_amax=va)
+            tok0 = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            caches = dict(caches)
+            caches["kv"] = self._scatter_blocks(caches["kv"], rows["kv"],
+                                                dest, slots_idx,
+                                                bt_rows=bt_rows)
+            plen = jnp.asarray(prefix_len, jnp.int32) + \
+                jnp.asarray(batch["prompt_len"], jnp.int32)
+            return (tok0,
+                    tok.at[slots_idx].set(tok0, mode="drop"),
+                    pos.at[slots_idx].set(plen, mode="drop"),
+                    caches)
+
+        def admit_shared_pool_fn(profile_id, batch, slots_idx, dest, bt_rows,
+                                 pre_bids, prefix_len, tok, pos, caches):
+            # bf16 variant: the shared pool blocks ARE the masters — gather
+            # the prefix KV straight from them (zero duplicated storage)
+            pool = caches["kv"]
+            a, pb = pre_bids.shape
+
+            def gather(x):                     # [L, nb, bs, Hkv, hd]
+                g = jnp.take(x, pre_bids, axis=1, mode="fill", fill_value=0)
+                return g.reshape(cfg.n_layers, a, pb * x.shape[2],
+                                 *x.shape[3:]).astype(jnp.float32)
+
+            return _admit_shared_body(profile_id, batch, slots_idx, dest,
+                                      bt_rows, gather(pool.k),
+                                      gather(pool.v), None, None,
+                                      prefix_len, tok, pos, caches)
+
+        def clear_rows_fn(slots_idx, caches):
+            # retirement: unmap the rows' block tables so a retired row's
+            # residual junk writes (dead rows keep stepping inside a
+            # segment) can never land in a block that has been reallocated
+            pool = caches["kv"]
+            nb = pool.k.shape[1]           # [L, n_blocks, bs, ...]
+            bt = pool.block_table.at[:, slots_idx].set(nb, mode="drop")
+            return {**caches, "kv": pool._replace(block_table=bt)}
+
         self._prefill = jax.jit(prefill_fn)
         self._decode = jax.jit(decode_fn)                  # stepwise baseline
         # per-profile weight images, materialized once per server (params and
@@ -141,6 +307,50 @@ class AdaptiveServer:
         # executables; the slot-pool state they donate lives in the scheduler
         self._segment = jax.jit(segment_fn, donate_argnums=(1, 2, 3))
         self._admit = jax.jit(admit_fn, donate_argnums=(3, 4, 5))
+        # paged continuous-batching primitives: same sharing story as above
+        # (compiled once per server; the scheduler owns the donated pool)
+        self._admit_paged = jax.jit(admit_paged_fn, donate_argnums=(4, 5, 6))
+        if not self.prefix_sharing:
+            self._admit_shared = None
+        elif serving.kv_bits == 16:
+            self._admit_shared = jax.jit(admit_shared_pool_fn,
+                                         donate_argnums=(7, 8, 9))
+        else:
+            # int-KV variant: prefix replayed from full-precision registry
+            # masters (the pool's int8 rows were quantized on the *owner's*
+            # per-row grid and are not bit-shareable)
+            self._admit_shared = jax.jit(_admit_shared_body,
+                                         donate_argnums=(10, 11, 12))
+        self._clear_rows = jax.jit(clear_rows_fn, donate_argnums=(1,))
+
+    def _scatter_blocks(self, pool, rows, dest, sidx, bt_rows=None):
+        """Scatter dense admission rows into the paged pool (traced helper).
+
+        ``rows`` is the stacked contiguous ``[L, a, slots_p, ...]`` cache an
+        admission prefill produced; each row is cut into ``n_lblk`` blocks
+        and written at physical ids ``dest [a, n_lblk]`` (out-of-range =
+        skip: wave padding, unallocated tail, shared prefix blocks).
+        ``bt_rows`` is the mapping installed in the block table — it differs
+        from ``dest`` exactly when shared blocks are mapped-but-not-written.
+        Per-row scales and the block table land at pool rows ``sidx``.
+        """
+        nlb, bs = self.n_lblk, self.block_size
+        L = self.cfg.n_layers
+        a = dest.shape[0]
+
+        def blk(x):
+            return x.reshape(L, a, nlb, bs, *x.shape[3:])
+
+        bt = pool.block_table.at[:, sidx].set(
+            dest if bt_rows is None else bt_rows, mode="drop")
+        return pool._replace(
+            k=pool.k.at[:, dest].set(blk(rows.k), mode="drop"),
+            v=pool.v.at[:, dest].set(blk(rows.v), mode="drop"),
+            token_idx=pool.token_idx.at[:, dest].set(blk(rows.token_idx),
+                                                     mode="drop"),
+            k_scale=pool.k_scale.at[:, sidx].set(rows.k_scale, mode="drop"),
+            v_scale=pool.v_scale.at[:, sidx].set(rows.v_scale, mode="drop"),
+            block_table=bt)
 
     def _select_profile(self, critical: bool) -> int:
         if self.manager is None:

@@ -1,0 +1,254 @@
+"""Host-side paged-KV bookkeeping: block allocator + shared-prefix registry.
+
+The device side of the paged KV cache (:class:`repro.models.attention.
+PagedKVCache`) is deliberately dumb — a pool of blocks and per-row block
+tables that are plain int32 *data*. Everything that decides **which** physical
+block backs which logical block lives here, on the host, between decode
+segments:
+
+* :class:`BlockAllocator` — a free list with reference counts. A block with
+  ``refcount > 1`` is shared (a registered prefix and/or several live rows map
+  it); it returns to the free list only when the last reference drops. The
+  allocator never touches the device: exhaustion surfaces as ``alloc()``
+  returning ``None``, which the scheduler turns into queue backpressure
+  instead of corrupting a live row.
+* :class:`PrefixRegistry` — content-addressed prefix reuse. Prompts are
+  hashed at *block granularity* (the hash of a prefix covers every token in
+  it, so two prompts map the same entry iff their first ``k·block_size``
+  tokens are identical), and a hit lets admission skip re-running the
+  backbone over the prefix and (at kv16) map the already-resident blocks
+  instead of re-storing them. Entries snapshot the full-precision prefix K/V
+  masters + raw max-|K|/|V| so a shared admission can replay *exactly* the
+  attention reads and int-KV scale calibration a cold prefill would have
+  done — what keeps shared admission token-identical to cold.
+
+This mirrors the paper's decoupling of logical computation from physical
+resource binding (the MDC/NN2CAM datapath-merging discipline): the traced
+program never changes; only the binding tables do.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Optional
+
+import numpy as np
+
+__all__ = ["BlockAllocator", "PrefixRegistry", "PrefixEntry", "prefix_keys"]
+
+
+def prefix_keys(tokens: np.ndarray, block_size: int) -> list[bytes]:
+    """Block-aligned prefix hashes of a prompt, longest first.
+
+    Key ``j`` (1-based) identifies tokens ``[0, j*block_size)`` via a
+    *chained* digest — block ``j``'s hash is seeded with key ``j−1`` (the
+    vLLM scheme), so hashing the whole chain is O(prompt) rather than
+    O(prompt²/block) and two prompts share a key iff their whole prefix
+    matches. Only prefixes *strictly shorter* than the prompt are keyed —
+    a shared admission must keep at least one suffix token, whose logits
+    seed the first generated token. Hashed once at enqueue; matched
+    against the registry at admission.
+    """
+    t = np.ascontiguousarray(np.asarray(tokens, np.int32))
+    j_max = (len(t) - 1) // block_size
+    keys = []
+    h = b""
+    for j in range(1, j_max + 1):
+        h = hashlib.sha1(
+            h + t[(j - 1) * block_size:j * block_size].tobytes()).digest()
+        keys.append(h)
+    keys.reverse()
+    return keys
+
+
+class BlockAllocator:
+    """Refcounted free list over the physical block pool.
+
+    ``alloc`` hands out blocks at refcount 1 (the owning row); ``retain``
+    adds references (a registry pin, each additional sharer); ``release``
+    drops one reference per block and returns fully-released blocks to the
+    free list. All O(1)-per-block host operations — the device pool is never
+    read or written here.
+    """
+
+    def __init__(self, n_blocks: int, block_size: int):
+        """``n_blocks`` physical blocks of ``block_size`` tokens, all free."""
+        self.n_blocks = int(n_blocks)
+        self.block_size = int(block_size)
+        self._free: list[int] = list(range(self.n_blocks - 1, -1, -1))
+        self._ref = np.zeros(self.n_blocks, np.int32)
+
+    @property
+    def free_blocks(self) -> int:
+        """Blocks immediately available to ``alloc``."""
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        """Blocks with at least one live reference."""
+        return self.n_blocks - len(self._free)
+
+    def alloc(self, n: int) -> Optional[list[int]]:
+        """Take ``n`` blocks (refcount 1 each); ``None`` if fewer are free —
+        the caller's backpressure signal, never a partial allocation."""
+        if n > len(self._free):
+            return None
+        ids = [self._free.pop() for _ in range(n)]
+        self._ref[ids] = 1
+        return ids
+
+    def retain(self, ids) -> None:
+        """Add one reference to each block (registry pin / extra sharer)."""
+        for b in ids:
+            assert self._ref[b] > 0, f"retain of free block {b}"
+            self._ref[b] += 1
+
+    def release(self, ids) -> None:
+        """Drop one reference per block; fully-released blocks become free."""
+        for b in ids:
+            assert self._ref[b] > 0, f"release of free block {b}"
+            self._ref[b] -= 1
+            if self._ref[b] == 0:
+                self._free.append(int(b))
+
+
+@dataclasses.dataclass
+class PrefixEntry:
+    """One registered block-aligned prefix.
+
+    ``block_ids`` are the pool blocks holding the prefix KV (kv16 only —
+    int-KV rows carry per-row scales, so their blocks are not bit-shareable
+    across rows and shared admissions requantize from the masters instead).
+    ``master_k``/``master_v`` (per layer ``[L, n_tokens, Hkv, hd]``, full
+    precision) and ``k_amax``/``v_amax`` (``[L, Hkv]`` raw max-abs over the
+    prefix) let a shared admission reproduce the cold path exactly.
+    ``sharers`` counts live rows currently mapping ``block_ids``; an entry is
+    evictable only at zero.
+    """
+
+    key: bytes
+    n_tokens: int
+    block_ids: Optional[list[int]]
+    master_k: Any
+    master_v: Any
+    k_amax: Any
+    v_amax: Any
+    sharers: int = 0
+    hits: int = 0
+
+
+class PrefixRegistry:
+    """LRU registry of reusable prompt prefixes.
+
+    ``capacity`` bounds host+device memory held by masters; when the
+    allocator runs dry, :meth:`evict_for` additionally drops idle entries to
+    hand their pinned blocks back. Lookup order is longest-prefix-first over
+    the hashes computed at enqueue (:func:`prefix_keys`).
+    """
+
+    def __init__(self, allocator: BlockAllocator, capacity: int = 8):
+        """Registry over ``allocator``'s pool, holding ≤ ``capacity`` entries."""
+        self.alloc = allocator
+        self.capacity = int(capacity)
+        self._entries: dict[bytes, PrefixEntry] = {}   # insertion = LRU order
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def contains(self, key: bytes) -> bool:
+        """Membership test that does NOT touch LRU recency or hit counters."""
+        return key in self._entries
+
+    def lookup(self, keys: list[bytes]) -> Optional[PrefixEntry]:
+        """Longest registered prefix among ``keys`` (ordered longest-first).
+
+        Pure read: hit/miss counters and LRU recency move only when an
+        admission actually commits (:meth:`record_admission`) — a request
+        re-looked-up on every scheduler tick while backpressured must not
+        inflate the stats or churn the eviction order.
+        """
+        for key in keys:
+            e = self._entries.get(key)
+            if e is not None:
+                return e
+        return None
+
+    def record_admission(self, entry: Optional[PrefixEntry]) -> None:
+        """Count one committed admission: a hit (refreshing the entry's LRU
+        recency) when ``entry`` was reused, a miss for a cold admission."""
+        if entry is None:
+            self.misses += 1
+            return
+        if entry.key in self._entries:
+            self._entries.pop(entry.key)
+            self._entries[entry.key] = entry           # refresh recency
+        entry.hits += 1
+        self.hits += 1
+
+    def register(self, key: bytes, n_tokens: int,
+                 block_ids: Optional[list[int]],
+                 master_k, master_v, k_amax, v_amax) -> Optional[PrefixEntry]:
+        """Pin a prefix for reuse (no-op if already registered).
+
+        ``block_ids`` get one extra reference so they outlive the owning
+        row's retirement. Over-capacity registration evicts the least
+        recently used idle entry first; if every entry is in live use the
+        new one is simply not registered.
+        """
+        if key in self._entries:
+            return self._entries[key]
+        while len(self._entries) >= self.capacity:
+            if not self._evict_one():
+                return None
+        if block_ids is not None:
+            self.alloc.retain(block_ids)
+        e = PrefixEntry(key=key, n_tokens=n_tokens,
+                        block_ids=None if block_ids is None
+                        else list(block_ids),
+                        master_k=master_k, master_v=master_v,
+                        k_amax=k_amax, v_amax=v_amax)
+        self._entries[key] = e
+        return e
+
+    def acquire(self, entry: PrefixEntry) -> None:
+        """A row starts mapping the entry's blocks (kv16: refcount them)."""
+        entry.sharers += 1
+        if entry.block_ids is not None:
+            self.alloc.retain(entry.block_ids)
+
+    def release(self, entry: PrefixEntry) -> None:
+        """A sharing row retired; drop its references."""
+        entry.sharers -= 1
+        assert entry.sharers >= 0
+        if entry.block_ids is not None:
+            self.alloc.release(entry.block_ids)
+
+    def _evict_one(self) -> bool:
+        for key, e in self._entries.items():
+            if e.sharers == 0:
+                self._entries.pop(key)
+                if e.block_ids is not None:
+                    self.alloc.release(e.block_ids)
+                return True
+        return False
+
+    def evict_for(self, n_needed: int) -> None:
+        """Free idle entries (LRU first) until ``n_needed`` blocks are
+        allocatable or nothing evictable remains."""
+        while self.alloc.free_blocks < n_needed and self._evict_one():
+            pass
+
+    def nbytes(self) -> int:
+        """Device bytes pinned by prefix masters (counted by the bench as
+        part of the paged KV footprint). Chain entries share one master
+        buffer, so bytes are counted per unique array, not per entry."""
+        total = 0
+        seen: set[int] = set()
+        for e in self._entries.values():
+            for arr in (e.master_k, e.master_v, e.k_amax, e.v_amax):
+                if arr is not None and id(arr) not in seen:
+                    seen.add(id(arr))            # kv16 stores no masters at
+                    total += int(arr.nbytes)     # all — pool blocks double
+        return total                             # as the masters there

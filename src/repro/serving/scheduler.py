@@ -30,6 +30,15 @@ the free slots, all inside a single donated dispatch. Token blocks come back
 materializing the previous one's tokens (``_flush(keep=1)``) and host-side
 scheduling overlaps device compute.
 
+**Paged KV.** By default the pool's attention cache is *paged* (a global
+block pool + per-row block tables — :mod:`repro.serving.paged` holds the
+host-side allocator and shared-prefix registry, ``docs/serving.md`` the full
+design): a row holds only the blocks its ``prompt + max_new`` actually
+touch instead of a whole ``[slots]`` reservation, hash-matched prompt
+prefixes are admitted with a suffix-only prefill against blocks that are
+mapped rather than recomputed and re-stored, and a dry allocator turns into
+FIFO queue backpressure rather than corruption.
+
 **Why re-planning per segment keeps the ledger exact.** The
 :class:`ProfileManager` policy is deterministic given its energy ledger, so
 profile ids can be precomputed as data — but only as far ahead as the set of
@@ -52,6 +61,7 @@ import numpy as np
 
 from repro.models import transformer as T
 from .engine import AdaptiveServer, Request, _next_pow2
+from .paged import BlockAllocator, PrefixRegistry, prefix_keys
 
 __all__ = ["ContinuousScheduler"]
 
@@ -61,10 +71,32 @@ class ContinuousScheduler:
 
     ``quantum`` = decode steps per segment (admission latency vs dispatch
     overhead); ``prefill_bucket`` = minimum power-of-two prompt padding.
+
+    With ``ServingConfig.paged_kv`` (the default for attention stacks) the
+    pool's KV state is *paged*: a global pool of fixed-size blocks plus
+    per-row block tables (:class:`repro.models.attention.PagedKVCache`).
+    Admission allocates exactly the blocks a request will touch
+    (``ceil((prompt + max_new) / block_size)``, capped at the row's logical
+    table) from a refcounted :class:`~repro.serving.paged.BlockAllocator`;
+    retirement returns them. When the allocator cannot satisfy the FIFO
+    head, admission simply stops for this wave — queue backpressure, never
+    corruption of a live row — and resumes as rows retire (a request that
+    could never fit the whole pool is rejected at :meth:`submit`). With
+    ``prefix_cache``, prompts are block-hashed at enqueue and matched
+    against a :class:`~repro.serving.paged.PrefixRegistry` at admission:
+    hits skip the prefix prefill entirely and (at kv16) map the registered
+    blocks copy-on-write instead of re-storing them.
     """
 
     def __init__(self, server: AdaptiveServer, quantum: int = 8,
                  prefill_bucket: int = 8, record_events: bool = True):
+        """Build a scheduler (pool state + host bookkeeping) on ``server``.
+
+        The jitted executables live on the server and are shared; the
+        donated device pool (tok/pos/caches) and all queue/allocator/
+        registry state are per-scheduler, so schedulers can be torn down
+        and rebuilt without recompiling anything.
+        """
         self.srv = server
         self.quantum = int(quantum)
         self.bucket_min = int(prefill_bucket)
@@ -75,9 +107,29 @@ class ContinuousScheduler:
         self.record_events = record_events
         cfg, scfg = server.cfg, server.scfg
         nslots = self.n_slots = scfg.max_batch
+        self.paged = bool(scfg.paged_kv) and cfg.has_attn
         # device-resident pool state (donated through every jit below)
-        self._caches = T.init_caches(cfg, nslots, scfg.slots,
-                                     kv_bits=scfg.kv_bits)
+        if self.paged:
+            self.block_size = server.block_size
+            self.n_lblk = server.n_lblk
+            nb = (scfg.pool_blocks if scfg.pool_blocks is not None
+                  else nslots * self.n_lblk)
+            self._caches = T.init_paged_caches(
+                cfg, nslots, scfg.slots, kv_bits=scfg.kv_bits,
+                block_size=self.block_size, pool_blocks=nb)
+            self.allocator = BlockAllocator(nb, self.block_size)
+            self.registry = (
+                PrefixRegistry(self.allocator,
+                               capacity=scfg.prefix_capacity)
+                if server.prefix_sharing else None)
+            self._slot_blocks: list = [None] * nslots  # (private_ids, entry)
+            self._prefix_keys: dict[int, list[bytes]] = {}
+            self.peak_used_blocks = 0
+        else:
+            self._caches = T.init_caches(cfg, nslots, scfg.slots,
+                                         kv_bits=scfg.kv_bits)
+            self.allocator = None
+            self.registry = None
         self._tok = jnp.zeros((nslots,), jnp.int32)
         self._pos = jnp.zeros((nslots,), jnp.int32)
         # host bookkeeping
@@ -96,10 +148,68 @@ class ContinuousScheduler:
         # schedulers can be torn down and rebuilt without recompiling
         self._segment = server._segment
         self._admit = server._admit
+        self._admit_paged = server._admit_paged
+        self._admit_shared = server._admit_shared
+        self._clear = server._clear_rows
+
+    # ------------------------------------------------------------- paged util
+    def _blocks_needed(self, prompt_len: int, max_new: int) -> int:
+        """Physical blocks a request touches over its whole lifetime:
+        prompt positions + every decode write, capped at the row's logical
+        table (sliding-window rings reuse their blocks by design)."""
+        return min(self.n_lblk,
+                   -(-(prompt_len + max_new) // self.block_size))
+
+    def paged_stats(self) -> dict:
+        """Block-pool occupancy + prefix-registry counters (bench JSON)."""
+        if not self.paged:
+            return {"paged": False,
+                    "kv_bytes": T.cache_bytes(self._caches)}
+        out = {
+            "paged": True,
+            "block_size": self.block_size,
+            "pool_blocks": self.allocator.n_blocks,
+            "used_blocks": self.allocator.used_blocks,
+            "peak_used_blocks": self.peak_used_blocks,
+            "free_blocks": self.allocator.free_blocks,
+            "kv_bytes": T.cache_bytes(self._caches),
+            "registry_bytes": 0,
+        }
+        if self.registry is not None:
+            out.update(registry_entries=len(self.registry),
+                       registry_hits=self.registry.hits,
+                       registry_misses=self.registry.misses,
+                       registry_bytes=self.registry.nbytes())
+        return out
 
     # ------------------------------------------------------------------ queue
     def submit(self, request: Request) -> int:
-        """Enqueue a request (FIFO). Returns its request id."""
+        """Enqueue a request (FIFO). Returns its request id.
+
+        Paged pools validate the request up front: one that could never fit
+        (more blocks than the whole pool provisions, or — when prefix
+        sharing is active — ``prompt + max_new ≥`` the virtual row length,
+        which would let its post-retirement ring position wrap onto a
+        potentially shared block) raises ``ValueError`` here, cleanly,
+        rather than corrupting live rows later. Transient fullness is *not*
+        an error: the request queues and admission backpressure holds it
+        until blocks free up.
+        """
+        if self.paged and request.max_new > 0:
+            plen = len(request.tokens)
+            cfg = self.srv.cfg
+            if not cfg.sliding_window and self.registry is not None \
+                    and plen + request.max_new >= self.srv.slots_p:
+                raise ValueError(
+                    f"request needs {plen + request.max_new} KV slots but a "
+                    f"prefix-sharing paged pool caps rows at "
+                    f"{self.srv.slots_p - 1} (slots={self.srv.scfg.slots})")
+            need = self._blocks_needed(plen, request.max_new)
+            if need > self.allocator.n_blocks:
+                raise ValueError(
+                    f"request needs {need} KV blocks but the pool has only "
+                    f"{self.allocator.n_blocks} "
+                    f"(block_size={self.block_size})")
         rid = self._n
         self._n += 1
         self._reqs[rid] = request
@@ -107,15 +217,22 @@ class ContinuousScheduler:
             self.results[rid] = {"tokens": [], "profile_trace": []}
             self._done.append(rid)
             return rid
+        if self.paged and self.registry is not None:
+            # hash block-aligned prefixes once, at enqueue; admission just
+            # dictionary-matches them against the registry
+            self._prefix_keys[rid] = prefix_keys(
+                np.asarray(request.tokens, np.int32), self.block_size)
         self.queue.append(rid)
         return rid
 
     @property
     def live_rows(self) -> int:
+        """Pool rows still generating (``remaining > 0``)."""
         return int((self.remaining > 0).sum())
 
     @property
     def pending(self) -> int:
+        """Requests queued but not yet admitted (FIFO depth)."""
         return len(self.queue)
 
     def poll_completed(self) -> list[tuple[int, dict]]:
@@ -128,6 +245,8 @@ class ContinuousScheduler:
         for rid in done:
             out.append((rid, self.results.pop(rid)))
             self._reqs.pop(rid, None)
+            if self.paged and self.registry is not None:
+                self._prefix_keys.pop(rid, None)
         return out
 
     # -------------------------------------------------------------- admission
@@ -139,9 +258,21 @@ class ContinuousScheduler:
         bucket, ``prompt_len`` as data — one executable per bucket), first
         tokens come from an on-device argmax, and each prefilled row is
         scattered into its free pool slot, all inside the server's donated
-        ``_admit`` jit. The wave's prefills are billed like the stepwise
-        engine bills prefill: one inference per admitted request.
+        admit jit. The wave's prefills are billed like the stepwise engine
+        bills prefill: one inference per admitted request.
+
+        Paged pools add two twists. Admission is gated on *blocks* as well
+        as slots: candidates are taken strictly FIFO and the wave stops at
+        the first request the allocator cannot satisfy (backpressure).
+        And a candidate whose enqueue-time prefix hashes hit the registry
+        joins a separate *shared* wave — one ``_admit_shared`` dispatch
+        that prefills only the suffixes (prefix KV replayed from the
+        registered masters) and maps the shared blocks copy-on-write —
+        while cold candidates ride the usual full-prefill wave; at most two
+        dispatches per admission round.
         """
+        if self.paged:
+            return self._admit_paged_waves()
         free = [s for s in range(self.n_slots) if self.slot_req[s] is None]
         take = min(len(free), len(self.queue))
         if not take:
@@ -192,6 +323,256 @@ class ContinuousScheduler:
         self._inflight.append(entry)
         return take
 
+    def _admit_paged_waves(self) -> int:
+        """FIFO claim of slots *and* blocks, then ≤2 dispatches (cold/shared)."""
+        free = [s for s in range(self.n_slots) if self.slot_req[s] is None]
+        cold, shared = [], []
+        while free and self.queue:
+            rid = self.queue[0]
+            req = self._reqs[rid]
+            need = self._blocks_needed(len(req.tokens), req.max_new)
+            entry, n_shared = None, 0
+            if self.registry is not None:
+                entry = self.registry.lookup(self._prefix_keys.get(rid, []))
+            if entry is not None:
+                self.registry.acquire(entry)     # pins it through eviction
+                if entry.block_ids is not None:  # kv16: map, don't re-store
+                    n_shared = entry.n_tokens // self.block_size
+            n_priv = need - n_shared
+            if self.allocator.free_blocks < n_priv and \
+                    self.registry is not None:
+                self.registry.evict_for(n_priv)
+            blocks = self.allocator.alloc(n_priv)
+            if blocks is None:                   # backpressure: head waits,
+                if entry is not None:            # FIFO order preserved
+                    self.registry.release(entry)
+                break
+            self.queue.popleft()
+            slot = free.pop(0)
+            if self.registry is not None:
+                self.registry.record_admission(entry)
+            if entry is not None:
+                shared.append((rid, slot, entry, blocks))
+            else:
+                cold.append((rid, slot, blocks))
+        n = 0
+        if cold:
+            n += self._dispatch_cold(cold)
+        if shared:
+            n += self._dispatch_shared(shared)
+        if n:
+            self.peak_used_blocks = max(self.peak_used_blocks,
+                                        self.allocator.used_blocks)
+        return n
+
+    def _bill(self, reqs) -> int:
+        """Select/account the wave's profile (one inference per request)."""
+        mgr = self.srv.manager
+        crit = any(r.accuracy_critical for r in reqs)
+        pid = 0 if mgr is None else mgr.select(crit)
+        if mgr is not None:
+            mgr.account(pid, len(reqs))
+        if self.record_events:
+            self.events.append((pid, len(reqs), crit))
+        return pid
+
+    def _pad_slot_idx(self, slots: list) -> jnp.ndarray:
+        """Fixed-shape ``[n_slots]`` slot-index vector (OOB-padded) so row
+        clearing reuses one executable regardless of how many rows retire."""
+        out = np.full((self.n_slots,), self.n_slots, np.int32)
+        out[:len(slots)] = slots
+        return jnp.asarray(out)
+
+    def _dispatch_cold(self, rows) -> int:
+        """One ``_admit_paged`` wave: full ragged prefill + block scatter."""
+        reqs = [self._reqs[rid] for rid, _, _ in rows]
+        bucket = _next_pow2(max(self.bucket_min,
+                                max(len(r.tokens) for r in reqs)))
+        a = _next_pow2(len(rows))
+        nb_oob = self.allocator.n_blocks
+        prompts = np.zeros((a, bucket), np.int32)
+        plen = np.zeros((a,), np.int32)
+        sidx = np.full((a,), self.n_slots, np.int32)
+        dest = np.full((a, self.n_lblk), nb_oob, np.int32)
+        for j, (rid, slot, blocks) in enumerate(rows):
+            t = np.asarray(reqs[j].tokens, np.int32)
+            prompts[j, bucket - len(t):] = t                 # left-pad
+            plen[j] = len(t)
+            sidx[j] = slot
+            dest[j, :len(blocks)] = blocks
+        pid = self._bill(reqs)
+        tok0, raw, self._tok, self._pos, self._caches = self._admit_paged(
+            pid,
+            {"tokens": jnp.asarray(prompts),
+             "prompt_len": jnp.asarray(plen)},
+            jnp.asarray(sidx), jnp.asarray(dest),
+            self._tok, self._pos, self._caches)
+        if self.registry is not None:
+            self._register_prefixes(rows, reqs, raw, bucket)
+        self._post_admission(tok0, self.srv.engine.profile_names[pid],
+                             [(j, rid, slot, blocks, None)
+                              for j, (rid, slot, blocks) in enumerate(rows)])
+        return len(rows)
+
+    def _register_prefixes(self, rows, reqs, raw, bucket: int) -> None:
+        """Pin each new prompt's longest block-aligned prefix for reuse.
+
+        The whole block-aligned prefix CHAIN registers, longest first —
+        key ``j`` covers ``j·bs`` tokens — because the next prompt's
+        shared span is unknown: a request whose unique tail crosses a
+        block boundary must still hit the shorter shared-prefix keys
+        (registering only the longest key would fold tail tokens into
+        every hash and never match a multi-tenant system prompt). Every
+        key of the chain is offered — ``register`` no-ops on present ones
+        — because LRU eviction removes single entries, so a present long
+        key does NOT imply its shorter companions survived.
+
+        At kv16 each entry refcounts the row's first ``j`` blocks so they
+        survive the row's retirement and later admissions can map them in
+        place — the pool's bf16 blocks double as the masters, so nothing
+        else is stored. At int KV precisions the pool rows sit on the
+        owner's quantization grid, so entries instead snapshot the wave's
+        pre-quantization K/V (one lazily-sliced device array shared by
+        the whole chain) plus per-length raw amax that re-calibrate
+        scales exactly.
+        """
+        kv16 = self.srv.scfg.kv_bits == 16
+        bs = self.block_size
+        for j, (rid, slot, blocks) in enumerate(rows):
+            t = np.asarray(reqs[j].tokens, np.int32)
+            j_max = (len(t) - 1) // bs
+            keys = self._prefix_keys.get(rid)
+            if j_max < 1 or not keys:
+                continue
+            mk = mv = None
+            if not kv16:
+                k_all, v_all = raw
+                c0 = bucket - len(t)
+                mk = k_all[:, j, c0:c0 + j_max * bs].astype(jnp.float32)
+                mv = v_all[:, j, c0:c0 + j_max * bs].astype(jnp.float32)
+            for i, key in enumerate(keys):       # longest first
+                if self.registry.contains(key):
+                    continue
+                n_blk = j_max - i
+                n_tok = n_blk * bs
+                if kv16:
+                    self.registry.register(key, n_tok, blocks[:n_blk],
+                                           None, None, None, None)
+                else:
+                    # amax is per entry length; the master arrays are the
+                    # SAME device buffers for the whole chain (entries
+                    # slice by their n_tokens at dispatch) — O(chain), not
+                    # O(chain²), device memory
+                    ka = jnp.max(jnp.abs(mk[:, :n_tok]), axis=(1, 3))
+                    va = jnp.max(jnp.abs(mv[:, :n_tok]), axis=(1, 3))
+                    self.registry.register(key, n_tok, None, mk, mv, ka, va)
+
+    def _dispatch_shared(self, rows) -> int:
+        """One ``_admit_shared`` wave: suffix-only continuation prefill."""
+        bs = self.block_size
+        cfg = self.srv.cfg
+        reqs = [self._reqs[rid] for rid, _, _, _ in rows]
+        sufs = [np.asarray(r.tokens, np.int32)[e.n_tokens:]
+                for r, (_, _, e, _) in zip(reqs, rows)]
+        sb = _next_pow2(max(self.bucket_min, max(len(s) for s in sufs)))
+        pp = bs * _next_pow2(max(-(-e.n_tokens // bs)
+                                 for _, _, e, _ in rows))
+        a = _next_pow2(len(rows))
+        nb_oob = self.allocator.n_blocks
+        prompts = np.zeros((a, sb), np.int32)
+        slen = np.zeros((a,), np.int32)
+        plen_pre = np.zeros((a,), np.int32)
+        sidx = np.full((a,), self.n_slots, np.int32)
+        dest = np.full((a, self.n_lblk), nb_oob, np.int32)
+        bt_rows = np.full((a, self.n_lblk), nb_oob, np.int32)
+        for j, ((rid, slot, e, blocks), suf) in enumerate(zip(rows, sufs)):
+            prompts[j, sb - len(suf):] = suf                 # left-pad
+            slen[j] = len(suf)
+            plen_pre[j] = e.n_tokens
+            sidx[j] = slot
+            ns = e.n_tokens // bs if e.block_ids is not None else 0
+            if ns:
+                bt_rows[j, :ns] = e.block_ids[:ns]           # mapped, shared
+            bt_rows[j, ns:ns + len(blocks)] = blocks         # private tail
+            dest[j, ns:ns + len(blocks)] = blocks            # only these get
+        ents = [e for _, _, e, _ in rows]                    # written (CoW)
+        pid = self._bill(reqs)
+        batch = {"tokens": jnp.asarray(prompts),
+                 "prompt_len": jnp.asarray(slen)}
+        if self.srv.scfg.kv_bits == 16:
+            # bf16: prefix gathered from the shared pool blocks in-jit
+            pb = pp // bs
+            pre_bids = np.full((a, pb), nb_oob, np.int32)
+            for j, e in enumerate(ents):
+                nbl = e.n_tokens // bs
+                pre_bids[j, :nbl] = e.block_ids[:nbl]
+            tok0, self._tok, self._pos, self._caches = self._admit_shared(
+                pid, batch, jnp.asarray(sidx), jnp.asarray(dest),
+                jnp.asarray(bt_rows), jnp.asarray(pre_bids),
+                jnp.asarray(plen_pre), self._tok, self._pos, self._caches)
+        else:
+            # int KV: prefix replayed from full-precision registry masters
+            # (chain entries share one master buffer — slice to the entry's
+            # own prefix length before padding to the wave bucket)
+            def padm(m, n_tok):
+                m = m[:, :n_tok].astype(jnp.float32)
+                return (m if n_tok == pp else
+                        jnp.pad(m, ((0, 0), (0, pp - n_tok),
+                                    (0, 0), (0, 0))))
+
+            zk = jnp.zeros((cfg.n_layers, pp, cfg.n_kv, cfg.hd), jnp.float32)
+            za = jnp.zeros((cfg.n_layers, cfg.n_kv), jnp.float32)
+            npad = a - len(rows)
+            kpre = jnp.stack([padm(e.master_k, e.n_tokens) for e in ents]
+                             + [zk] * npad, axis=1)
+            vpre = jnp.stack([padm(e.master_v, e.n_tokens) for e in ents]
+                             + [zk] * npad, axis=1)
+            ka = jnp.stack([e.k_amax for e in ents] + [za] * npad, axis=1)
+            va = jnp.stack([e.v_amax for e in ents] + [za] * npad, axis=1)
+            tok0, self._tok, self._pos, self._caches = self._admit_shared(
+                pid, batch, jnp.asarray(sidx), jnp.asarray(dest),
+                jnp.asarray(bt_rows), kpre, vpre, ka, va,
+                jnp.asarray(plen_pre), self._tok, self._pos, self._caches)
+        self._post_admission(tok0, self.srv.engine.profile_names[pid],
+                             [(j, rid, slot, blocks, e)
+                              for j, (rid, slot, e, blocks)
+                              in enumerate(rows)])
+        return len(rows)
+
+    def _post_admission(self, tok0, pname: str, rows) -> None:
+        """Common post-dispatch bookkeeping for paged admission waves.
+
+        ``rows``: ``(wave_row, rid, slot, private_blocks, registry_entry)``.
+        ``max_new == 1`` rows complete at admission: their blocks go straight
+        back to the allocator and their (never-live) slot's block table is
+        cleared so residual dead-row writes can't follow the blocks to their
+        next owner.
+        """
+        entry = {"kind": "admit", "toks": tok0, "name": pname,
+                 "rows": [], "completes": []}
+        clear = []
+        for j, rid, slot, blocks, reg in rows:
+            req = self._reqs[rid]
+            self.results[rid] = {"tokens": [], "profile_trace": []}
+            entry["rows"].append((j, rid))
+            if self.record_events:
+                self.admission_log.append(rid)
+            if req.max_new == 1:                             # done on arrival
+                entry["completes"].append(rid)
+                self.allocator.release(blocks)
+                if reg is not None:
+                    self.registry.release(reg)
+                clear.append(slot)
+                continue
+            self.slot_req[slot] = rid
+            self._slot_crit[slot] = req.accuracy_critical
+            self.remaining[slot] = req.max_new - 1
+            self._slot_blocks[slot] = (blocks, reg)
+        if clear:
+            self._caches = self._clear(self._pad_slot_idx(clear),
+                                       self._caches)
+        self._inflight.append(entry)
+
     # --------------------------------------------------------------- decoding
     def run_segment(self) -> None:
         """One decode segment over the pool: plan ``quantum`` steps against
@@ -216,6 +597,7 @@ class ContinuousScheduler:
         # dispatch) proceeds without materializing ``toks``
         entry = {"kind": "seg", "toks": toks, "sched": sched,
                  "rows": [], "completes": []}
+        retired: list[int] = []
         for slot in range(self.n_slots):
             rid = self.slot_req[slot]
             if rid is None:
@@ -227,6 +609,19 @@ class ContinuousScheduler:
                 self.slot_req[slot] = None
                 self._slot_crit[slot] = False
                 entry["completes"].append(rid)
+                retired.append(slot)
+        if self.paged and retired:
+            # hand the rows' blocks back (shared prefix blocks just drop one
+            # reference); their block tables need no host dispatch — the
+            # segment already unmapped every row that finished inside it
+            # (see decode_segment's writeback), so residual dead-row writes
+            # can't follow the freed blocks to their next owner
+            for slot in retired:
+                blocks, reg = self._slot_blocks[slot]
+                self.allocator.release(blocks)
+                if reg is not None:
+                    self.registry.release(reg)
+                self._slot_blocks[slot] = None
         self._inflight.append(entry)
 
     def _flush(self, keep: int = 0) -> None:

@@ -1,0 +1,202 @@
+"""Paged KV cache: block-table decode, shared-prefix reuse, CoW, backpressure.
+
+The load-bearing properties, mirroring docs/serving.md:
+
+* paged decode (global block pool + per-row block tables) is token-identical
+  to the contiguous ring layout — including prompts straddling block
+  boundaries, sliding-window rings, SSM-hybrid stacks, and int8 KV;
+* a shared-prefix admission (suffix-only prefill + mapped blocks) emits
+  exactly what a cold full prefill would, even while the prefix owner is
+  still decoding (copy-on-write: divergence lands in private blocks and the
+  shared blocks' bytes never change);
+* allocator exhaustion is clean backpressure — requests queue, FIFO order
+  holds, nothing corrupts — and impossible requests fail loudly at submit.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core.engine import AdaptiveEngine, QuantIndex
+from repro.core.profiles import paper_profiles
+from repro.models import transformer as T
+from repro.serving.engine import AdaptiveServer, Request, ServingConfig
+from repro.serving.scheduler import ContinuousScheduler
+
+
+def _build(arch):
+    cfg = get_smoke(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    names = T.quant_layer_names(cfg)
+    profs = paper_profiles(names, inner_layers=[])
+    eng = AdaptiveEngine(tuple(profs), QuantIndex(names),
+                         lambda p, br, b: T.train_loss(p, cfg, br, b))
+    return cfg, params, eng
+
+
+@pytest.fixture(scope="module")
+def dense_parts():
+    return _build("granite-3-2b")
+
+
+def _solo_tokens(cfg, params, eng, req, kv_bits=16):
+    srv = AdaptiveServer(cfg, params, eng,
+                         ServingConfig(slots=64, max_batch=4,
+                                       kv_bits=kv_bits))
+    return srv.generate(req.tokens[None, :], req.max_new)["tokens"][0]
+
+
+@pytest.mark.parametrize("kv_bits", [16, 8])
+def test_paged_block_boundary_matches_solo(dense_parts, kv_bits):
+    """Prompt lengths straddling the block size (7/8/9 around bs=8): every
+    row through the paged pool equals its solo (contiguous) run."""
+    cfg, params, eng = dense_parts
+    scfg = ServingConfig(slots=64, max_batch=4, kv_bits=kv_bits,
+                         block_size=8)
+    srv = AdaptiveServer(cfg, params, eng, scfg)
+    sched = ContinuousScheduler(srv, quantum=4)
+    assert sched.paged and sched.block_size == 8
+    rng = np.random.default_rng(13)
+    reqs = [Request(tokens=rng.integers(0, cfg.vocab, n).astype(np.int32),
+                    max_new=mn)
+            for n, mn in [(7, 6), (8, 5), (9, 7), (16, 4), (17, 6)]]
+    for r in reqs:
+        sched.submit(r)
+    results = sched.run()
+    # after draining, only registry-pinned prefix blocks stay allocated
+    # (chain entries of one prompt share their leading blocks)
+    pinned = set()
+    for e in sched.registry._entries.values():
+        pinned.update(e.block_ids or ())
+    assert sched.allocator.used_blocks == len(pinned)
+    for req, res in zip(reqs, results):
+        assert res["tokens"] == _solo_tokens(cfg, params, eng, req, kv_bits)
+
+
+@pytest.mark.parametrize("arch,kv_bits", [("hymba-1.5b", 16),
+                                          ("hymba-1.5b", 8),
+                                          ("mamba2-130m", 16)])
+def test_paged_swa_ssm_matches_solo(arch, kv_bits):
+    """Sliding-window (ring wrap inside one block table) and SSM stacks:
+    the paged pool reproduces the contiguous slot pool token-for-token."""
+    cfg, params, eng = _build(arch)
+    scfg = ServingConfig(slots=64, max_batch=4, kv_bits=kv_bits)
+    srv = AdaptiveServer(cfg, params, eng, scfg)
+    sched = ContinuousScheduler(srv, quantum=4)
+    assert sched.paged == cfg.has_attn
+    rng = np.random.default_rng(17)
+    reqs = [Request(tokens=rng.integers(0, cfg.vocab, n).astype(np.int32),
+                    max_new=mn) for n, mn in [(4, 6), (9, 3), (17, 6)]]
+    for r in reqs:
+        sched.submit(r)
+    results = sched.run()
+    for req, res in zip(reqs, results):
+        assert res["tokens"] == _solo_tokens(cfg, params, eng, req, kv_bits)
+
+
+@pytest.mark.parametrize("kv_bits", [16, 8])
+def test_shared_prefix_admission_matches_cold(dense_parts, kv_bits):
+    """A hash-matched admission prefills only the suffix (prefix replayed
+    from the registry) yet emits exactly the cold-prefill tokens, at bf16
+    and int8 KV (int scales re-calibrated from the snapshotted amax)."""
+    cfg, params, eng = dense_parts
+    scfg = ServingConfig(slots=64, max_batch=4, kv_bits=kv_bits,
+                         block_size=8)
+    srv = AdaptiveServer(cfg, params, eng, scfg)
+    sched = ContinuousScheduler(srv, quantum=4)
+    rng = np.random.default_rng(21)
+    sys_prompt = rng.integers(0, cfg.vocab, 16).astype(np.int32)  # 2 blocks
+    reqs = [Request(tokens=np.concatenate([sys_prompt, t]), max_new=6)
+            for t in (rng.integers(0, cfg.vocab, 5).astype(np.int32),
+                      rng.integers(0, cfg.vocab, 3).astype(np.int32))]
+    sched.submit(reqs[0])
+    sched.run()               # cold: registers the 16- and 8-token prefixes
+    assert sched.registry.hits == 0 and len(sched.registry) == 2
+    sched.submit(reqs[1])
+    results = sched.run()
+    assert sched.registry.hits == 1           # second rode the shared path
+    for req, res in zip(reqs, results):
+        assert res["tokens"] == _solo_tokens(cfg, params, eng, req, kv_bits)
+
+
+def test_shared_prefix_hits_across_block_boundary_tails(dense_parts):
+    """The whole block-aligned prefix chain registers, so a request whose
+    unique tail crosses a block boundary (changing its own longest-prefix
+    hash) still matches the shared system prompt at a shorter key."""
+    cfg, params, eng = dense_parts
+    scfg = ServingConfig(slots=64, max_batch=4, block_size=8)
+    srv = AdaptiveServer(cfg, params, eng, scfg)
+    sched = ContinuousScheduler(srv, quantum=4)
+    rng = np.random.default_rng(37)
+    sys_prompt = rng.integers(0, cfg.vocab, 16).astype(np.int32)  # 2 blocks
+    reqs = [Request(tokens=np.concatenate([sys_prompt, t]), max_new=5)
+            for t in (rng.integers(0, cfg.vocab, 9).astype(np.int32),
+                      rng.integers(0, cfg.vocab, 11).astype(np.int32))]
+    sched.submit(reqs[0])
+    sched.run()        # registers keys for 24- AND 16-token prefixes
+    assert len(sched.registry) == 3            # chain: 3, 2, 1 blocks
+    sched.submit(reqs[1])                      # 27 tokens: longest own key
+    results = sched.run()                      # is 24 ≠ reqs[0]'s 24 — must
+    assert sched.registry.hits == 1            # fall through to the 16-key
+    for req, res in zip(reqs, results):
+        assert res["tokens"] == _solo_tokens(cfg, params, eng, req)
+
+
+def test_cow_divergence_shared_blocks_uncorrupted(dense_parts):
+    """Two rows decoding concurrently off the same prefix blocks: divergent
+    suffixes/generations land in private blocks only — the shared blocks'
+    bytes are identical before and after, and both rows match solo."""
+    cfg, params, eng = dense_parts
+    scfg = ServingConfig(slots=64, max_batch=4, block_size=8)
+    srv = AdaptiveServer(cfg, params, eng, scfg)
+    sched = ContinuousScheduler(srv, quantum=2)
+    rng = np.random.default_rng(29)
+    sys_prompt = rng.integers(0, cfg.vocab, 16).astype(np.int32)
+    r1 = Request(tokens=np.concatenate(
+        [sys_prompt, rng.integers(0, cfg.vocab, 4).astype(np.int32)]),
+        max_new=12)
+    r2 = Request(tokens=np.concatenate(
+        [sys_prompt, rng.integers(0, cfg.vocab, 7).astype(np.int32)]),
+        max_new=8)
+    sched.submit(r1)
+    sched.step()                              # r1 admitted cold + registered
+    entry = max(sched.registry._entries.values(), key=lambda e: e.n_tokens)
+    bids = np.asarray(entry.block_ids)
+    pool = sched._caches["kv"]
+    snap_k = np.asarray(pool.k[:, bids]).copy()
+    snap_v = np.asarray(pool.v[:, bids]).copy()
+    sched.submit(r2)                          # shares while r1 is still live
+    while sched.step():
+        pass
+    assert sched.registry.hits == 1
+    pool = sched._caches["kv"]
+    assert np.array_equal(np.asarray(pool.k[:, bids]), snap_k)
+    assert np.array_equal(np.asarray(pool.v[:, bids]), snap_v)
+    results = sched.run()
+    for req, res in zip((r1, r2), results):
+        assert res["tokens"] == _solo_tokens(cfg, params, eng, req)
+
+
+def test_allocator_exhaustion_backpressure(dense_parts):
+    """A full block pool stalls admission (FIFO-preserving backpressure)
+    instead of corrupting live rows; impossible requests fail at submit."""
+    cfg, params, eng = dense_parts
+    scfg = ServingConfig(slots=64, max_batch=4, block_size=8,
+                         pool_blocks=6, prefix_cache=False)
+    srv = AdaptiveServer(cfg, params, eng, scfg)
+    sched = ContinuousScheduler(srv, quantum=4)
+    rng = np.random.default_rng(31)
+    reqs = [Request(tokens=rng.integers(0, cfg.vocab, 9).astype(np.int32),
+                    max_new=7) for _ in range(5)]      # 2 blocks each
+    rids = [sched.submit(r) for r in reqs]
+    assert sched.admit() == 3                 # 6-block pool: 3 of 4 slots
+    assert sched.pending == 2 and sched.allocator.free_blocks == 0
+    assert sched.admit() == 0                 # exhausted: clean backpressure
+    results = sched.run()
+    assert sched.admission_log == rids        # FIFO held under pressure
+    assert sched.allocator.used_blocks == 0   # everything returned
+    for req, res in zip(reqs, results):
+        assert res["tokens"] == _solo_tokens(cfg, params, eng, req)
+    with pytest.raises(ValueError, match="KV blocks"):
+        sched.submit(Request(tokens=rng.integers(0, cfg.vocab, 9)
+                             .astype(np.int32), max_new=48))
