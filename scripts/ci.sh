@@ -1,9 +1,12 @@
 #!/usr/bin/env bash
 # Tier-1 CI gate (mirrors ROADMAP.md): the full suite must pass, then the
 # serving path is exercised end-to-end (continuous scheduler + static serve
-# under open-loop Poisson arrivals, plus the paged-KV shared-prefix point,
-# which asserts the >=30% KV-footprint saving), and finally the docs gate
-# smoke-executes every README/docs code snippet and checks markdown links.
+# under open-loop Poisson arrivals, the paged-KV shared-prefix point, which
+# asserts the >=30% KV-footprint saving and refcount-accurate block-pool
+# occupancy, and a chunked-prefill point), then the paged-attention kernel
+# gate (token identity vs the gather path + strictly fewer bytes per decode
+# step), and finally the docs gate smoke-executes every README/docs code
+# snippet and checks markdown links.
 #
 #   ./scripts/ci.sh            # tier-1: pytest -x -q + serving smoke + docs
 #   ./scripts/ci.sh --bench    # additionally run the full serving benchmark
@@ -15,6 +18,10 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -x -q
 
 python benchmarks/serving_bench.py --smoke
+
+# paged-attention kernel gate: kernel/gather token identity on a real
+# decode_segment + strictly fewer per-decode-step bytes than the gather path
+python benchmarks/kernel_bench.py --smoke
 
 python scripts/check_docs.py README.md docs/serving.md
 

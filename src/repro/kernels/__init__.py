@@ -17,7 +17,9 @@ CompilerParams = getattr(_pltpu, "CompilerParams", None) or _pltpu.TPUCompilerPa
 from .ops import qmatmul, qmatmul_qt
 from .qmatmul import qmatmul_pallas, DEFAULT_BLOCKS
 from .qkv_attention import qkv_attention_pallas
+from .paged_attention import paged_attention_pallas
 from .aquant import aquant_pallas
 
 __all__ = ["qmatmul", "qmatmul_qt", "qmatmul_pallas", "qkv_attention_pallas",
-           "aquant_pallas", "DEFAULT_BLOCKS", "CompilerParams"]
+           "paged_attention_pallas", "aquant_pallas", "DEFAULT_BLOCKS",
+           "CompilerParams"]

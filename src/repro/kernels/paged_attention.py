@@ -1,0 +1,165 @@
+"""Pallas TPU kernel: decode attention reading paged KV blocks **in place**.
+
+The gather-view serving path (`repro.models.attention.paged_view`) rebuilds a
+dense ``[B, n_lblk*bs]`` copy of every row's KV before `decode_attention` can
+run — per segment that is a full extra round-trip of the pool through HBM, and
+the fold-back at segment exit doubles it. This kernel deletes both copies: the
+per-row ``block_table`` rides in as a **scalar-prefetch** operand, the
+BlockSpec index maps resolve each grid step's logical block to its physical
+pool block, and the DMA engine streams exactly the mapped blocks HBM→VMEM.
+Unmapped table entries (``< 0`` or ``>= n_blocks`` — free rows, retired rows,
+copy-on-write guards) are clamped for the DMA and masked to ``-inf`` in the
+scores, so a dead row reads garbage bytes but contributes nothing.
+
+Layout (matches :class:`repro.models.attention.PagedKVCache`):
+  q        [B, Hkv, Hg, D]   f32/bf16 — one decode token per row
+  k/v pool [n_blocks, bs, Hkv, D]     bf16 (kv16) or int8 (kv8)
+  tidx     [n_blocks, bs]    int32 absolute token index per slot, −1 = empty
+  scales   [B, Hkv]          f32 per-row dequant scales (kv8)
+  bt       [B * n_lblk]      int32 flattened block table (scalar prefetch)
+  pos      [B]               int32 current absolute position (scalar prefetch)
+
+Grid ``(B, Hkv, n_lblk)`` with the logical-block axis sequential;
+online-softmax scratch (running max ``m``, denominator ``l``, accumulator)
+lives in VMEM across the block loop and is flushed on the last block. The
+int8 path contracts on the int grid and folds the per-(B,Hkv) scale into the
+scores/output afterwards — the exact operation order of the jnp
+``decode_attention`` int8 fast path, so the two stay numerically aligned.
+Validated in interpret mode against ``ref.paged_attention_ref`` and the
+gather-view oracle (``tests/test_paged_attention_kernel.py``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import CompilerParams
+
+__all__ = ["paged_attention_pallas"]
+
+NEG_INF = -1e30
+
+
+def _kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, tidx_ref, ks_ref, vs_ref,
+            o_ref, m_ref, l_ref, acc_ref, *,
+            n_lblk: int, n_blocks: int, bits: int, window: int,
+            sm_scale: float):
+    b = pl.program_id(0)
+    lb = pl.program_id(2)
+
+    @pl.when(lb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    entry = bt_ref[b * n_lblk + lb]
+    mapped = (entry >= 0) & (entry < n_blocks)
+
+    q = q_ref[0, 0].astype(jnp.float32) * sm_scale          # [Hg, D]
+    k = k_ref[0, :, 0].astype(jnp.float32)                  # [bs, D]
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # [Hg, bs]
+    if bits == 8:
+        # int-grid contraction, scale folded after — decode_attention's order
+        scores = scores * ks_ref[0, 0]
+
+    tidx = tidx_ref[0]                                      # [bs]
+    p_b = pos_ref[b]
+    keep = mapped & (tidx >= 0) & (tidx <= p_b) & (p_b - tidx < window)
+    scores = jnp.where(keep[None, :], scores, NEG_INF)
+
+    m_prev = m_ref[...]                                     # [Hg, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    # explicit zero on masked columns: with every key masked so far,
+    # exp(NEG_INF − NEG_INF) would otherwise contribute 1 per dead slot
+    p = jnp.where(keep[None, :], jnp.exp(scores - m_new), 0.0)  # [Hg, bs]
+    v = v_ref[0, :, 0].astype(jnp.float32)                  # [bs, D]
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(lb == n_lblk - 1)
+    def _flush():
+        # rows with no attendable key flush exact zeros; the ref oracle pins
+        # the same corner to zero (an unmapped table's gather-fill would
+        # yield zeros under a uniform softmax anyway), so dead rows agree
+        # across backends bit-for-bit
+        any_valid = m_ref[...] > NEG_INF * 0.5
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        if bits == 8:
+            out = out * vs_ref[0, 0]
+        o_ref[0, 0] = jnp.where(any_valid, out, 0.0).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "window", "interpret"))
+def paged_attention_pallas(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                           k_scale: jax.Array, v_scale: jax.Array,
+                           token_idx: jax.Array, block_table: jax.Array,
+                           pos: jax.Array, *, bits: int = 16,
+                           window: int = 0,
+                           interpret: bool = False) -> jax.Array:
+    """In-place paged decode attention; see module docstring for layout.
+
+    ``window <= 0`` means full attention. Returns ``[B, Hkv, Hg, D]`` f32.
+    """
+    assert bits in (8, 16), f"paged kernel supports kv16/kv8, got kv{bits}"
+    b, hkv, hg, d = q.shape
+    n_blocks, bs, _, _ = k_pool.shape
+    _, n_lblk = block_table.shape
+    win = window if window > 0 else n_lblk * bs + 1
+
+    kernel = functools.partial(
+        _kernel, n_lblk=n_lblk, n_blocks=n_blocks, bits=bits, window=win,
+        sm_scale=1.0 / d ** 0.5)
+
+    def phys(lb_idx, bt):
+        # block-table indirection happens HERE, in the index map: the grid
+        # cell's DMA source is the physical pool block the table names.
+        # Unmapped entries clamp to a resident block (the bytes are fetched
+        # but masked off in the kernel body) — the DMA must stay in bounds.
+        return jnp.clip(bt[lb_idx], 0, n_blocks - 1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,          # (block_table, pos)
+        grid=(b, hkv, n_lblk),
+        in_specs=[
+            pl.BlockSpec((1, 1, hg, d), lambda r, h, lb, bt, p: (r, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, d),
+                         lambda r, h, lb, bt, p:
+                         (phys(r * n_lblk + lb, bt), 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, d),
+                         lambda r, h, lb, bt, p:
+                         (phys(r * n_lblk + lb, bt), 0, h, 0)),
+            pl.BlockSpec((1, bs),
+                         lambda r, h, lb, bt, p:
+                         (phys(r * n_lblk + lb, bt), 0)),
+            pl.BlockSpec((1, 1), lambda r, h, lb, bt, p: (r, h)),
+            pl.BlockSpec((1, 1), lambda r, h, lb, bt, p: (r, h)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hg, d),
+                               lambda r, h, lb, bt, p: (r, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((hg, 1), jnp.float32),
+            pltpu.VMEM((hg, 1), jnp.float32),
+            pltpu.VMEM((hg, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, hg, d), jnp.float32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(block_table.reshape(-1).astype(jnp.int32), pos.astype(jnp.int32),
+      q, k_pool, v_pool, token_idx,
+      jnp.asarray(k_scale, jnp.float32).reshape(b, hkv),
+      jnp.asarray(v_scale, jnp.float32).reshape(b, hkv))

@@ -10,7 +10,8 @@ import jax.numpy as jnp
 
 from repro.core.qtypes import unpack_int4
 
-__all__ = ["qmatmul_ref", "dequant_ref", "requant_ref", "qkv_attention_ref"]
+__all__ = ["qmatmul_ref", "dequant_ref", "requant_ref", "qkv_attention_ref",
+           "paged_attention_ref"]
 
 
 def dequant_ref(w_q: jax.Array, scale: jax.Array, bits: int) -> jax.Array:
@@ -64,6 +65,55 @@ def qkv_attention_ref(q: jax.Array, k_q: jax.Array, v_q: jax.Array,
     scores = scores / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
     p = jax.nn.softmax(scores, axis=-1)
     return jnp.einsum("bhqs,bhsd->bhqd", p, vf)
+
+
+def paged_attention_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                        k_scale: jax.Array, v_scale: jax.Array,
+                        token_idx: jax.Array, block_table: jax.Array,
+                        pos: jax.Array, *, bits: int = 16,
+                        window: int = 0) -> jax.Array:
+    """Oracle for the in-place paged decode-attention kernel.
+
+    The reference path is the one the kernel replaces: a dense gather of each
+    row's blocks through its table (unmapped entries fill with zeros /
+    ``token_idx`` −1) followed by the masked-softmax decode attention of
+    ``repro.models.attention.decode_attention`` — including the int8 fast
+    path's operation order (contract on the int grid, scale the scores).
+
+    q ``[B, Hkv, Hg, D]``; k/v pool ``[n_blocks, bs, Hkv, D]``; returns
+    ``[B, Hkv, Hg, D]`` f32. ``window <= 0`` = full attention.
+    """
+    b, hkv, hg, d = q.shape
+    n_blocks, bs = token_idx.shape
+    _, n_lblk = block_table.shape
+    NEG_INF = -1e30
+    # both "unmapped" sentinels (< 0, >= n_blocks) must miss the pool: OOB
+    # positives already fill, but jnp.take wraps negatives — normalize them
+    bt = jnp.where(block_table < 0, n_blocks, block_table)
+
+    def gather(pool, fill):
+        g = jnp.take(pool, bt, axis=0, mode="fill", fill_value=fill)
+        return g.reshape(b, n_lblk * bs, *pool.shape[2:])
+
+    kf = gather(k_pool, 0).astype(jnp.float32)          # [B, S, Hkv, D]
+    vf = gather(v_pool, 0).astype(jnp.float32)
+    tidx = gather(token_idx, -1)                         # [B, S]
+    qh = q.astype(jnp.float32) * d ** -0.5
+    scores = jnp.einsum("bkgd,bskd->bkgs", qh, kf)
+    if bits == 8:
+        scores = scores * jnp.asarray(k_scale, jnp.float32)[:, :, None, None]
+    win = window if window > 0 else n_lblk * bs + 1
+    keep = (tidx >= 0) & (tidx <= pos[:, None]) & (pos[:, None] - tidx < win)
+    scores = jnp.where(keep[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, vf)
+    if bits == 8:
+        out = out * jnp.asarray(v_scale, jnp.float32)[:, :, None, None]
+    # rows with no attendable key flush exact zeros, like the kernel — a
+    # plain softmax would emit the uniform mean of whatever the gather
+    # fetched (zeros for unmapped tables, junk V for mapped-but-masked
+    # ones); pinning both paths to zero keeps kernel/oracle identity total
+    return jnp.where(keep.any(-1)[:, None, None, None], out, 0.0)
 
 
 def aquant_ref(x: jax.Array, bits: int = 8, po2: bool = True) -> jax.Array:

@@ -69,6 +69,19 @@ def main() -> None:
                     action="store_false", default=True,
                     help="disable shared-prefix reuse (block-hash registry "
                          "+ suffix-only admission prefill)")
+    ap.add_argument("--paged-backend", default="auto",
+                    choices=["auto", "pallas", "gather"],
+                    help="paged decode backend: 'pallas' attends in place "
+                         "against the block pool through the paged-"
+                         "attention kernel (no dense view, no fold-back); "
+                         "'gather' materializes the per-segment view (the "
+                         "oracle path); 'auto' = pallas on TPU, gather "
+                         "elsewhere (default)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked prefill: admission prompts longer than "
+                         "this many tokens prefill in block-aligned chunks "
+                         "interleaved with decode segments (full-causal "
+                         "stacks; default: disabled)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -89,7 +102,9 @@ def main() -> None:
                                        max_batch=4, paged_kv=args.paged_kv,
                                        block_size=args.block_size,
                                        pool_blocks=args.pool_blocks,
-                                       prefix_cache=args.prefix_cache),
+                                       prefix_cache=args.prefix_cache,
+                                       paged_backend=args.paged_backend,
+                                       prefill_chunk=args.prefill_chunk),
                          manager=mgr)
     rng = np.random.default_rng(args.seed)
     reqs = [Request(tokens=rng.integers(0, cfg.vocab, int(n)).astype(np.int32),

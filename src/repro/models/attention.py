@@ -28,7 +28,7 @@ from .pshard import constrain
 __all__ = ["gqa_attention", "swa_attention", "decode_attention", "KVCache",
            "init_kv_cache", "update_kv_cache",
            "PagedKVCache", "init_paged_kv_cache", "update_paged_kv_cache",
-           "paged_view", "prefix_attention"]
+           "paged_view", "paged_decode_attention", "prefix_attention"]
 
 NEG_INF = -1e30
 
@@ -432,6 +432,38 @@ def update_paged_kv_cache(cache: PagedKVCache, k_new: jax.Array,
         block_table=cache.block_table,
         bits=cache.bits,
     )
+
+
+def paged_decode_attention(q: jax.Array, cache: PagedKVCache, pos: jax.Array,
+                           *, window: int | None = None,
+                           interpret: bool | None = None) -> jax.Array:
+    """One-token attention **in place** against the paged block pool.
+
+    The Pallas serving hot path: no ``[B, n_lblk*bs]`` gather view is ever
+    materialized — the kernel's BlockSpec index maps resolve each logical
+    block through ``cache.block_table`` (scalar-prefetched) and stream only
+    the mapped physical blocks. Masking falls out of the pool's per-slot
+    ``token_idx`` exactly as in :func:`decode_attention`, so ring wraparound
+    and unmapped (free/retired/CoW-guarded) table entries are safe by the
+    same argument. q ``[B, 1, H, D]`` → ``[B, 1, H, D]``; ``pos [B]`` is the
+    current absolute position. ``window`` must be static (``None`` / ``>=
+    slots`` = full attention). ``interpret=None`` auto-selects interpret
+    mode off-TPU (the CPU oracle path); :func:`paged_view` +
+    :func:`decode_attention` remains the gather-backend oracle.
+    """
+    from repro.kernels.paged_attention import paged_attention_pallas
+    b, _, h, d = q.shape
+    _, bs, hkv, _ = cache.k.shape
+    hg = h // hkv
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    slots = cache.block_table.shape[1] * bs
+    win = 0 if window is None or int(window) > slots else int(window)
+    out = paged_attention_pallas(
+        q.reshape(b, hkv, hg, d), cache.k, cache.v,
+        cache.k_scale, cache.v_scale, cache.token_idx, cache.block_table,
+        pos, bits=cache.bits, window=win, interpret=bool(interpret))
+    return out.reshape(b, 1, h, d).astype(q.dtype)
 
 
 def prefix_attention(q: jax.Array, k_pre: jax.Array, v_pre: jax.Array,

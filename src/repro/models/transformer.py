@@ -31,8 +31,8 @@ import numpy as np
 
 from .attention import (KVCache, PagedKVCache, decode_attention,
                         gqa_attention, init_kv_cache, init_paged_kv_cache,
-                        paged_view, prefix_attention, swa_attention,
-                        update_kv_cache, update_paged_kv_cache)
+                        paged_decode_attention, paged_view, prefix_attention,
+                        swa_attention, update_kv_cache, update_paged_kv_cache)
 from .pshard import constrain
 from .layers import (embed_lookup, init_embed, init_linear, init_norm,
                      layer_norm, qlinear, rms_norm)
@@ -567,13 +567,20 @@ def supports_prefix_sharing(cfg: ModelConfig) -> bool:
 
 def decode_step(params: dict, cfg: ModelConfig, bits_row: jax.Array,
                 tokens: jax.Array, pos: jax.Array, caches: dict,
-                row_valid: Optional[jax.Array] = None):
+                row_valid: Optional[jax.Array] = None,
+                paged_backend: str = "gather"):
     """One decode step. tokens ``[B,1]``, pos ``[B]`` → (logits [B,V], caches).
 
     ``row_valid`` ``[B]`` bool marks rows still generating (continuous-batching
     slot pools carry retired/free rows): dead rows are dropped from the MoE
     capacity dispatch so they cannot displace a live row's expert routing.
     Non-MoE families ignore it (batch rows are independent there).
+
+    ``paged_backend`` (static) picks how a :class:`PagedKVCache` is read:
+    ``"gather"`` materializes the dense per-row view (:func:`paged_view`, the
+    CPU/oracle path) while ``"pallas"`` attends **in place** against the
+    block pool (:func:`repro.models.attention.paged_decode_attention`) — no
+    ``[B, n_lblk*bs]`` copy exists anywhere in the step.
     """
     eb, _, layer_bits = split_bits(cfg, bits_row)
     x = embed_lookup(params["embed"], tokens, eb)
@@ -601,12 +608,18 @@ def decode_step(params: dict, cfg: ModelConfig, bits_row: jax.Array,
                     window=cfg.window(view.token_idx.shape[1]))
                 new_cache["kv_view"] = view
             elif isinstance(cache["kv"], PagedKVCache):
-                # standalone paged step: gather the view on the spot
                 kvc = update_paged_kv_cache(cache["kv"], k, v, pos)
-                view = paged_view(kvc)
-                attn = decode_attention(
-                    q, view, pos,
-                    window=cfg.window(view.token_idx.shape[1]))
+                slots_p = kvc.block_table.shape[1] * kvc.k.shape[1]
+                if paged_backend == "pallas":
+                    # in-place path: the kernel streams mapped pool blocks
+                    # through the block table; no dense view is built
+                    attn = paged_decode_attention(
+                        q, kvc, pos, window=cfg.window(slots_p))
+                else:
+                    # standalone paged step: gather the view on the spot
+                    view = paged_view(kvc)
+                    attn = decode_attention(
+                        q, view, pos, window=cfg.window(slots_p))
             else:
                 kvc = update_kv_cache(cache["kv"], k, v, pos)
                 attn = decode_attention(
@@ -799,7 +812,8 @@ def decode_many(params: dict, cfg: ModelConfig, table: jax.Array,
 def decode_segment(params: dict, cfg: ModelConfig, table: jax.Array,
                    schedule: jax.Array, tok0: jax.Array, pos0: jax.Array,
                    caches: dict, remaining: jax.Array,
-                   prequant: Optional[dict] = None):
+                   prequant: Optional[dict] = None,
+                   paged_backend: str = "gather"):
     """Fused decode *segment*: ``len(schedule)`` scan steps from an arbitrary
     mid-generation state — the continuous-batching quantum primitive.
 
@@ -813,6 +827,18 @@ def decode_segment(params: dict, cfg: ModelConfig, table: jax.Array,
     static in ``(B, len(schedule))``, so a slot-pool server runs every segment
     through ONE compiled executable regardless of which rows are live.
 
+    Paged pools run one of two backends (``paged_backend``, static):
+
+    * ``"gather"`` — the dense per-row view is gathered ONCE at segment
+      entry, every step reads/writes the view, and the view's blocks fold
+      back through the tables at exit. Exactly the contiguous per-step cost,
+      but the segment moves two extra pool-sized copies — the CPU oracle
+      path.
+    * ``"pallas"`` — every step attends **in place** against the pool
+      through the Pallas paged-attention kernel and writes through the block
+      table; no ``[B, n_lblk*bs]`` view and no exit fold-back exist in the
+      executable. The pool is the single KV residence of the segment.
+
     Returns ``(tokens [B, steps], tok [B], pos [B], caches)`` — tok/pos/caches
     are the carry for the next segment.
     """
@@ -820,7 +846,8 @@ def decode_segment(params: dict, cfg: ModelConfig, table: jax.Array,
         prequant = prequant_decode_weights(params, cfg, table)
     rem = jnp.asarray(remaining, jnp.int32)
     paged = isinstance(caches.get("kv"), PagedKVCache)
-    if paged:
+    use_kernel = paged and paged_backend == "pallas"
+    if paged and not use_kernel:
         # block tables are fixed for the segment: gather the dense per-row
         # view once here instead of once per step inside the scan — the
         # steps read AND write only the view (the pool passes through the
@@ -836,7 +863,7 @@ def decode_segment(params: dict, cfg: ModelConfig, table: jax.Array,
         p_step = overlay_params(params,
                                 jax.tree.map(lambda a: a[pid], prequant))
         logits, cch = decode_step(p_step, cfg, bits_row, tok[:, None], pos, cch,
-                                  row_valid=live)
+                                  row_valid=live, paged_backend=paged_backend)
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         out = jnp.where(live, nxt, -1)
         feed = jnp.where(live, nxt, 0)
@@ -850,7 +877,19 @@ def decode_segment(params: dict, cfg: ModelConfig, table: jax.Array,
     carry0 = (jnp.asarray(tok0, jnp.int32), pos0.astype(jnp.int32), caches)
     (tok, pos, caches), ys = jax.lax.scan(
         step, carry0, (schedule, jnp.arange(steps, dtype=jnp.int32)))
-    if paged:
+    if use_kernel:
+        # no fold-back: every decode write already landed in the pool through
+        # the block table. Only the retirement contract remains — rows that
+        # FINISH inside this segment come back with their tables unmapped
+        # (their cache has no future reader; residual dead-row writes then
+        # drop instead of following the freed blocks to their next owner)
+        finish = (rem > 0) & (rem <= steps)
+        kv = caches["kv"]
+        nb = kv.k.shape[1]                       # [L, n_blocks, bs, ...]
+        caches = dict(caches)
+        caches["kv"] = kv._replace(
+            block_table=jnp.where(finish[None, :, None], nb, kv.block_table))
+    elif paged:
         # fold the segment's decode writes back into the persistent pool:
         # one blocked scatter per layer instead of one per step. Shared
         # prefix blocks appear in several rows' tables, but decode never
@@ -1036,7 +1075,8 @@ def prefill_extend(params: dict, cfg: ModelConfig, bits_row: jax.Array,
                    prefix_k: jax.Array, prefix_v: jax.Array,
                    prefix_len: jax.Array,
                    prefix_k_amax: Optional[jax.Array] = None,
-                   prefix_v_amax: Optional[jax.Array] = None):
+                   prefix_v_amax: Optional[jax.Array] = None,
+                   return_raw_kv: bool = False):
     """Shared-prefix prefill → (last-token logits, dense decode caches).
 
     Runs :func:`forward_extend` over the suffix only, then builds the same
@@ -1052,6 +1092,11 @@ def prefill_extend(params: dict, cfg: ModelConfig, bits_row: jax.Array,
     them, match the cold path. The caller scatters the resulting rows into
     pool blocks, skipping the shared ones (copy-on-write: shared blocks are
     never written, divergent content lands in private blocks).
+
+    ``return_raw_kv`` additionally returns the pre-quantization suffix K/V
+    (``(k, v)`` each ``[L, B, Sb, Hkv, hd]``, padded column coordinates) —
+    what chunked prefill accumulates host-side so the *next* chunk can
+    replay this one as its prefix masters at int KV precisions.
     """
     hidden, kv_col = forward_extend(params, cfg, bits_row, batch,
                                     prefix_k, prefix_v, prefix_len)
@@ -1110,4 +1155,6 @@ def prefill_extend(params: dict, cfg: ModelConfig, bits_row: jax.Array,
                                   prefix_k, prefix_v,
                                   prefix_k_amax, prefix_v_amax)
     logits = _logits(cfg, params, bits_row, hidden[:, -1:])[:, 0]
+    if return_raw_kv:
+        return logits, caches, kv_col
     return logits, caches

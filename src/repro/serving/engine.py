@@ -80,6 +80,15 @@ class ServingConfig:
     only); ``prefix_capacity`` bounds registered entries (LRU — note one
     prompt registers its whole block-aligned prefix chain, one entry per
     length, so later prompts can match at any block boundary).
+    ``paged_backend`` — how decode reads the paged pool: ``"pallas"``
+    attends in place against the blocks through the paged-attention kernel
+    (no dense view, no fold-back — the serving hot path), ``"gather"``
+    materializes the per-segment dense view (the CPU oracle path),
+    ``"auto"`` picks pallas on TPU and gather elsewhere. ``prefill_chunk``
+    — when set, admission prompts longer than this many tokens prefill in
+    block-aligned chunks that interleave with decode segments instead of
+    one monolithic wave (full-causal stacks only), smoothing the
+    admission-wave latency spike; ``None`` disables chunking.
     """
 
     slots: int = 4096
@@ -91,6 +100,8 @@ class ServingConfig:
     pool_blocks: Optional[int] = None
     prefix_cache: bool = True
     prefix_capacity: int = 32
+    paged_backend: str = "auto"
+    prefill_chunk: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -156,6 +167,21 @@ class AdaptiveServer:
                                  logits0, pos0, caches, row_budget=row_budget,
                                  prequant=prequant)
 
+        # ---- paged decode backend ----------------------------------------
+        # "pallas" = in-place paged-attention kernel (interpret mode off-TPU,
+        # compiled on TPU); "gather" = per-segment dense view, the oracle.
+        # kv4 packs two values per byte, which the kernel does not unpack —
+        # it degrades to the gather path.
+        pb = serving.paged_backend
+        if pb not in ("auto", "pallas", "gather"):
+            raise ValueError(f"paged_backend must be auto|pallas|gather, "
+                             f"got {pb!r}")
+        if pb == "auto":
+            pb = "pallas" if jax.default_backend() == "tpu" else "gather"
+        if serving.kv_bits not in (8, 16):
+            pb = "gather"
+        self.paged_backend = pb
+
         # params / prequant are server-lifetime constants: the continuous
         # primitives close over them so a dispatch only flattens the small
         # slot-pool carry (schedule, tok, pos, caches, remaining) instead of
@@ -164,7 +190,8 @@ class AdaptiveServer:
         def segment_fn(schedule, tok, pos, caches, remaining):
             return T.decode_segment(self.params, cfg, jnp.asarray(table),
                                     schedule, tok, pos, caches, remaining,
-                                    prequant=self._prequant)
+                                    prequant=self._prequant,
+                                    paged_backend=self.paged_backend)
 
         def admit_fn(profile_id, batch, slots_idx, tok, pos, caches):
             # one admission wave = one dispatch: ragged prefill of every
@@ -201,11 +228,26 @@ class AdaptiveServer:
         self.slots_p = self.n_lblk * self.block_size   # virtual row length
         self.prefix_sharing = bool(serving.prefix_cache
                                    and T.supports_prefix_sharing(cfg))
+        # chunked prefill rides the continuation-prefill machinery
+        # (prefill_extend at absolute positions), which is exact only where
+        # prefix sharing is: full causal attention, no SSM/MoE coupling.
+        # Chunk length rounds down to a block multiple so every chunk
+        # boundary is a block boundary (the kv16 path gathers the processed
+        # prefix straight from the row's own whole blocks).
+        self.chunk_tokens: Optional[int] = None
+        if serving.prefill_chunk and T.supports_prefix_sharing(cfg):
+            self.chunk_tokens = max(
+                self.block_size,
+                (int(serving.prefill_chunk) // self.block_size)
+                * self.block_size)
         # full-precision prefix masters are only needed when the pool's
         # storage is lossy (int KV): a bf16 pool *is* its own master, so
         # kv16 shared admissions gather the prefix straight from the shared
-        # blocks and the registry stores nothing but block ids
-        self._collect_masters = self.prefix_sharing and serving.kv_bits != 16
+        # blocks and the registry stores nothing but block ids. Chunked
+        # prefill needs them for the same reason (each chunk replays the
+        # previous ones as its prefix).
+        self._collect_masters = serving.kv_bits != 16 and bool(
+            self.prefix_sharing or self.chunk_tokens)
 
         def admit_paged_fn(profile_id, batch, slots_idx, dest, tok, pos,
                            caches):
@@ -248,11 +290,16 @@ class AdaptiveServer:
             # out-of-range on the shared blocks (never written; ``bt_rows``
             # still maps them) and private on everything after the
             # divergence point: that skipped write IS the copy-on-write.
+            # Chunked prefill reuses this executable verbatim: a chunk's
+            # "prefix" is simply the row's own previously processed chunks.
             bits = jnp.asarray(table)[profile_id]
-            logits, rows = T.prefill_extend(
+            out = T.prefill_extend(
                 self.params, cfg, bits, batch, self.slots_p,
                 kv_bits=serving.kv_bits, prefix_k=kpre, prefix_v=vpre,
-                prefix_len=prefix_len, prefix_k_amax=ka, prefix_v_amax=va)
+                prefix_len=prefix_len, prefix_k_amax=ka, prefix_v_amax=va,
+                return_raw_kv=self._collect_masters)
+            logits, rows = out[0], out[1]
+            raw = out[2] if self._collect_masters else None
             tok0 = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             caches = dict(caches)
             caches["kv"] = self._scatter_blocks(caches["kv"], rows["kv"],
@@ -260,7 +307,7 @@ class AdaptiveServer:
                                                 bt_rows=bt_rows)
             plen = jnp.asarray(prefix_len, jnp.int32) + \
                 jnp.asarray(batch["prompt_len"], jnp.int32)
-            return (tok0,
+            return (tok0, raw,
                     tok.at[slots_idx].set(tok0, mode="drop"),
                     pos.at[slots_idx].set(plen, mode="drop"),
                     caches)
@@ -310,7 +357,9 @@ class AdaptiveServer:
         # paged continuous-batching primitives: same sharing story as above
         # (compiled once per server; the scheduler owns the donated pool)
         self._admit_paged = jax.jit(admit_paged_fn, donate_argnums=(4, 5, 6))
-        if not self.prefix_sharing:
+        # shared-prefix admissions and chunked-prefill continuations share
+        # the same continuation executable
+        if not (self.prefix_sharing or self.chunk_tokens):
             self._admit_shared = None
         elif serving.kv_bits == 16:
             self._admit_shared = jax.jit(admit_shared_pool_fn,

@@ -85,8 +85,14 @@ class BlockAllocator:
 
     @property
     def used_blocks(self) -> int:
-        """Blocks with at least one live reference."""
-        return self.n_blocks - len(self._free)
+        """Blocks with at least one live reference — derived from the
+        refcounts themselves (the ground truth), not from the free-list
+        length, so occupancy stats cannot drift from the reference state."""
+        return int((self._ref > 0).sum())
+
+    def refcounts(self) -> np.ndarray:
+        """Copy of the per-block reference counts (occupancy reporting)."""
+        return self._ref.copy()
 
     def alloc(self, n: int) -> Optional[list[int]]:
         """Take ``n`` blocks (refcount 1 each); ``None`` if fewer are free —
@@ -239,6 +245,21 @@ class PrefixRegistry:
         allocatable or nothing evictable remains."""
         while self.alloc.free_blocks < n_needed and self._evict_one():
             pass
+
+    def pinned_counts(self, n_blocks: int) -> np.ndarray:
+        """Per-block registry pin counts (one pin per entry retaining the
+        block). The occupancy-reporting counterpart of
+        :meth:`BlockAllocator.refcounts`: a block whose refcount equals its
+        pin count is held *only* by registered prefixes — resident pool
+        pressure that survives its last sharer's retirement, never free
+        capacity. Kept here so both sides of the one-retain-per-entry
+        invariant live in one module."""
+        pin = np.zeros(n_blocks, np.int32)
+        for e in self._entries.values():
+            if e.block_ids is not None:
+                for b in e.block_ids:
+                    pin[b] += 1
+        return pin
 
     def nbytes(self) -> int:
         """Device bytes pinned by prefix masters (counted by the bench as

@@ -125,6 +125,13 @@ class ContinuousScheduler:
             self._slot_blocks: list = [None] * nslots  # (private_ids, entry)
             self._prefix_keys: dict[int, list[bytes]] = {}
             self.peak_used_blocks = 0
+            # chunked prefill: long cold prompts prefill in block-aligned
+            # chunks that interleave with decode segments instead of one
+            # monolithic admission wave. A mid-admission row occupies its
+            # slot + blocks but is not yet live (remaining == 0); its state
+            # lives here until the final chunk lands.
+            self.chunk = server.chunk_tokens
+            self._chunk_state: dict[int, dict] = {}    # slot -> progress
         else:
             self._caches = T.init_caches(cfg, nslots, scfg.slots,
                                          kv_bits=scfg.kv_bits)
@@ -161,16 +168,36 @@ class ContinuousScheduler:
                    -(-(prompt_len + max_new) // self.block_size))
 
     def paged_stats(self) -> dict:
-        """Block-pool occupancy + prefix-registry counters (bench JSON)."""
+        """Block-pool occupancy + prefix-registry counters (bench JSON).
+
+        Occupancy is **refcount-accurate**: ``used_blocks`` derives from the
+        allocator's per-block reference counts (not the free-list length)
+        and splits into ``live_blocks`` (at least one live-row reference)
+        vs ``registry_only_blocks`` (blocks a registered prefix keeps
+        resident after their last sharer retired — still pool pressure,
+        not free capacity, which is what the bench's saving assertion must
+        measure).
+        """
         if not self.paged:
             return {"paged": False,
                     "kv_bytes": T.cache_bytes(self._caches)}
+        ref = self.allocator.refcounts()
+        pin = (self.registry.pinned_counts(self.allocator.n_blocks)
+               if self.registry is not None else np.zeros_like(ref))
+        used = int((ref > 0).sum())
+        registry_only = int(((ref > 0) & (ref <= pin)).sum())
         out = {
             "paged": True,
             "block_size": self.block_size,
             "pool_blocks": self.allocator.n_blocks,
-            "used_blocks": self.allocator.used_blocks,
+            "used_blocks": used,
+            "live_blocks": used - registry_only,
+            "registry_only_blocks": registry_only,
             "peak_used_blocks": self.peak_used_blocks,
+            # deliberately the free-LIST length, while used_blocks derives
+            # from refcounts: used + free == pool is then a real cross-check
+            # between the two bookkeeping structures (the bench asserts it),
+            # not an arithmetic identity
             "free_blocks": self.allocator.free_blocks,
             "kv_bytes": T.cache_bytes(self._caches),
             "registry_bytes": 0,
@@ -324,20 +351,52 @@ class ContinuousScheduler:
         return take
 
     def _admit_paged_waves(self) -> int:
-        """FIFO claim of slots *and* blocks, then ≤2 dispatches (cold/shared)."""
-        free = [s for s in range(self.n_slots) if self.slot_req[s] is None]
-        cold, shared = [], []
+        """FIFO claim of slots *and* blocks, then ≤3 dispatches per round
+        (cold+first-chunk wave / shared wave / chunk-continuation wave;
+        the rare deferred-registration-failure fallback adds one more
+        combined cold wave).
+
+        Candidates classify four ways: registry hits join the *shared*
+        wave; cold prompts longer than ``chunk`` become *chunked* (their
+        first chunk rides the cold wave, the rest follows one chunk per
+        admission round); a cold candidate whose prefix will be registered
+        by an earlier candidate of THIS round's cold wave is *deferred* —
+        intra-wave prefix dedup: it resolves against the registry right
+        after the cold wave dispatches (and registers), so two identical
+        prompts arriving in the same cold wave no longer both prefill the
+        prefix. Everything else is plain cold.
+
+        One FIFO caveat rides on deferral: if the registered prefix turns
+        out shorter than assumed AND the top-up allocation fails, the
+        deferred request rolls back to the queue head for the next round —
+        requests behind it in this round's waves were already dispatched.
+        Rollbacks keep their relative order; the strict stop-at-first-
+        failure contract otherwise holds.
+        """
+        free = [s for s in range(self.n_slots)
+                if self.slot_req[s] is None and s not in self._chunk_state]
+        cold, shared, deferred, chunked = [], [], [], []
+        pending: dict[bytes, int] = {}   # key -> n_tokens this wave registers
         while free and self.queue:
             rid = self.queue[0]
             req = self._reqs[rid]
-            need = self._blocks_needed(len(req.tokens), req.max_new)
-            entry, n_shared = None, 0
+            plen = len(req.tokens)
+            need = self._blocks_needed(plen, req.max_new)
+            keys = self._prefix_keys.get(rid, [])
+            entry, wait, n_shared = None, False, 0
             if self.registry is not None:
-                entry = self.registry.lookup(self._prefix_keys.get(rid, []))
+                entry = self.registry.lookup(keys)
             if entry is not None:
                 self.registry.acquire(entry)     # pins it through eviction
                 if entry.block_ids is not None:  # kv16: map, don't re-store
                     n_shared = entry.n_tokens // self.block_size
+            elif pending:
+                for k in keys:                   # longest-first, like lookup
+                    if k in pending:
+                        wait = True
+                        if self.srv.scfg.kv_bits == 16:
+                            n_shared = pending[k] // self.block_size
+                        break
             n_priv = need - n_shared
             if self.allocator.free_blocks < n_priv and \
                     self.registry is not None:
@@ -349,20 +408,71 @@ class ContinuousScheduler:
                 break
             self.queue.popleft()
             slot = free.pop(0)
-            if self.registry is not None:
+            if self.registry is not None and not wait:
                 self.registry.record_admission(entry)
             if entry is not None:
                 shared.append((rid, slot, entry, blocks))
+            elif wait:
+                deferred.append((rid, slot, blocks, keys))
+            elif self.chunk and plen > self.chunk:
+                chunked.append((rid, slot, blocks))
             else:
                 cold.append((rid, slot, blocks))
+                if self.registry is not None:
+                    j_max = (plen - 1) // self.block_size
+                    for i, k in enumerate(keys):     # chain, longest first
+                        pending.setdefault(
+                            k, (j_max - i) * self.block_size)
         n = 0
-        if cold:
-            n += self._dispatch_cold(cold)
+        if cold or chunked:
+            n += self._dispatch_cold(cold, chunked)
+        rollback: list[int] = []
+        fb_cold, fb_chunked = [], []     # registration-failure fallbacks,
+        for rid, slot, blocks, keys in deferred:   # batched into ONE wave
+            # the cold wave above has dispatched and registered its chains;
+            # a deferred candidate now hits the registry like any other.
+            # The entry actually registered may cover a different prefix
+            # length than the deferral assumed (LRU capacity), so square up
+            # the private-block allocation before dispatching.
+            req = self._reqs[rid]
+            need = self._blocks_needed(len(req.tokens), req.max_new)
+            entry = self.registry.lookup(keys)
+            n_shared = (entry.n_tokens // self.block_size
+                        if entry is not None and entry.block_ids is not None
+                        else 0)
+            n_priv = need - n_shared
+            if len(blocks) > n_priv:
+                self.allocator.release(blocks[n_priv:])
+                blocks = blocks[:n_priv]
+            elif len(blocks) < n_priv:
+                extra = self.allocator.alloc(n_priv - len(blocks))
+                if extra is None:
+                    self.allocator.release(blocks)   # roll the request back
+                    rollback.append(rid)             # (requeued in order
+                    continue                         # after the loop)
+                blocks = blocks + extra
+            if entry is not None:
+                self.registry.acquire(entry)
+                self.registry.record_admission(entry)
+                shared.append((rid, slot, entry, blocks))
+            else:   # registration failed (capacity full of in-use entries)
+                self.registry.record_admission(None)
+                if self.chunk and len(req.tokens) > self.chunk:
+                    # a long prompt falling back cold still chunks — the
+                    # monolithic-wave stall is what chunking exists to avoid
+                    fb_chunked.append((rid, slot, blocks))
+                else:
+                    fb_cold.append((rid, slot, blocks))
+        if fb_cold or fb_chunked:
+            n += self._dispatch_cold(fb_cold, fb_chunked)
+        for rid in reversed(rollback):      # preserve their relative order
+            self.queue.appendleft(rid)
         if shared:
             n += self._dispatch_shared(shared)
         if n:
             self.peak_used_blocks = max(self.peak_used_blocks,
                                         self.allocator.used_blocks)
+        self._advance_chunks()
         return n
 
     def _bill(self, reqs) -> int:
@@ -383,21 +493,32 @@ class ContinuousScheduler:
         out[:len(slots)] = slots
         return jnp.asarray(out)
 
-    def _dispatch_cold(self, rows) -> int:
-        """One ``_admit_paged`` wave: full ragged prefill + block scatter."""
-        reqs = [self._reqs[rid] for rid, _, _ in rows]
-        bucket = _next_pow2(max(self.bucket_min,
-                                max(len(r.tokens) for r in reqs)))
-        a = _next_pow2(len(rows))
+    def _dispatch_cold(self, rows, chunked=()) -> int:
+        """One ``_admit_paged`` wave: full ragged prefill + block scatter.
+
+        ``chunked`` rows ride the same wave but prefill only their FIRST
+        ``chunk`` tokens; the rest of the prompt follows one chunk per
+        admission round through :meth:`_advance_chunks` continuation waves.
+        A chunked row holds its slot and blocks from here on but is not yet
+        live (``remaining`` stays 0 — the done-mask keeps it frozen through
+        the decode segments that run between its chunks).
+        """
+        allrows = list(rows) + list(chunked)
+        n_cold = len(rows)
+        reqs = [self._reqs[rid] for rid, _, _ in allrows]
+        lens = [len(r.tokens) if j < n_cold else min(len(r.tokens), self.chunk)
+                for j, r in enumerate(reqs)]
+        bucket = _next_pow2(max(self.bucket_min, max(lens)))
+        a = _next_pow2(len(allrows))
         nb_oob = self.allocator.n_blocks
         prompts = np.zeros((a, bucket), np.int32)
         plen = np.zeros((a,), np.int32)
         sidx = np.full((a,), self.n_slots, np.int32)
         dest = np.full((a, self.n_lblk), nb_oob, np.int32)
-        for j, (rid, slot, blocks) in enumerate(rows):
-            t = np.asarray(reqs[j].tokens, np.int32)
-            prompts[j, bucket - len(t):] = t                 # left-pad
-            plen[j] = len(t)
+        for j, (rid, slot, blocks) in enumerate(allrows):
+            t = np.asarray(reqs[j].tokens, np.int32)[:lens[j]]
+            prompts[j, bucket - lens[j]:] = t                # left-pad
+            plen[j] = lens[j]
             sidx[j] = slot
             dest[j, :len(blocks)] = blocks
         pid = self._bill(reqs)
@@ -407,12 +528,37 @@ class ContinuousScheduler:
              "prompt_len": jnp.asarray(plen)},
             jnp.asarray(sidx), jnp.asarray(dest),
             self._tok, self._pos, self._caches)
-        if self.registry is not None:
-            self._register_prefixes(rows, reqs, raw, bucket)
+        if self.registry is not None and rows:
+            self._register_prefixes(rows, reqs[:n_cold], raw, bucket)
+        for off, (rid, slot, blocks) in enumerate(chunked):
+            j = n_cold + off
+            st = {"rid": rid, "blocks": blocks, "done": lens[j],
+                  "fresh": True,   # chunk 2 waits for the next round — one
+                                   # chunk wave per row per admission round
+                  "pid": pid,      # profile pinned for the WHOLE prompt:
+                                   # a monolithic admission prefills under
+                                   # one profile, so chunks must too or the
+                                   # row's KV would mix precisions no cold
+                                   # path can produce (token identity)
+                  "mk": None, "mv": None, "ka": None, "va": None}
+            if raw is not None:
+                # int KV: keep the chunk's pre-quantization K/V + running
+                # amax so the next chunk can replay it as its prefix
+                # masters (the exact-scale recalibration path)
+                k_all, v_all = raw
+                c0 = bucket - lens[j]
+                st["mk"] = k_all[:, j, c0:].astype(jnp.float32)
+                st["mv"] = v_all[:, j, c0:].astype(jnp.float32)
+                st["ka"] = jnp.max(jnp.abs(st["mk"]), axis=(1, 3))
+                st["va"] = jnp.max(jnp.abs(st["mv"]), axis=(1, 3))
+            self._chunk_state[slot] = st
+            self.results[rid] = {"tokens": [], "profile_trace": []}
+            if self.record_events:
+                self.admission_log.append(rid)
         self._post_admission(tok0, self.srv.engine.profile_names[pid],
                              [(j, rid, slot, blocks, None)
                               for j, (rid, slot, blocks) in enumerate(rows)])
-        return len(rows)
+        return len(allrows)
 
     def _register_prefixes(self, rows, reqs, raw, bucket: int) -> None:
         """Pin each new prompt's longest block-aligned prefix for reuse.
@@ -441,36 +587,97 @@ class ContinuousScheduler:
         for j, (rid, slot, blocks) in enumerate(rows):
             t = np.asarray(reqs[j].tokens, np.int32)
             j_max = (len(t) - 1) // bs
-            keys = self._prefix_keys.get(rid)
-            if j_max < 1 or not keys:
-                continue
             mk = mv = None
-            if not kv16:
+            if not kv16 and j_max >= 1:
                 k_all, v_all = raw
                 c0 = bucket - len(t)
                 mk = k_all[:, j, c0:c0 + j_max * bs].astype(jnp.float32)
                 mv = v_all[:, j, c0:c0 + j_max * bs].astype(jnp.float32)
-            for i, key in enumerate(keys):       # longest first
-                if self.registry.contains(key):
-                    continue
-                n_blk = j_max - i
-                n_tok = n_blk * bs
-                if kv16:
-                    self.registry.register(key, n_tok, blocks[:n_blk],
-                                           None, None, None, None)
-                else:
-                    # amax is per entry length; the master arrays are the
-                    # SAME device buffers for the whole chain (entries
-                    # slice by their n_tokens at dispatch) — O(chain), not
-                    # O(chain²), device memory
-                    ka = jnp.max(jnp.abs(mk[:, :n_tok]), axis=(1, 3))
-                    va = jnp.max(jnp.abs(mv[:, :n_tok]), axis=(1, 3))
-                    self.registry.register(key, n_tok, None, mk, mv, ka, va)
+            self._register_chain(rid, j_max, blocks, mk, mv)
+
+    def _register_chain(self, rid: int, j_max: int, blocks,
+                        mk, mv) -> None:
+        """Offer every key of one prompt's prefix chain to the registry —
+        the single home of the chain invariants (see
+        :meth:`_register_prefixes`): every key is offered because LRU
+        evicts single entries; kv16 entries pin ``blocks[:n_blk]`` (the
+        pool is its own master); int-KV entries share the ONE master
+        buffer ``mk``/``mv`` (already truncated to ``j_max`` blocks) and
+        snapshot per-length raw amax — O(chain), not O(chain²), memory.
+        Used by cold-wave registration and chunked-admission completion.
+        """
+        keys = self._prefix_keys.get(rid)
+        if j_max < 1 or not keys:
+            return
+        bs = self.block_size
+        for i, key in enumerate(keys):           # longest first
+            if self.registry.contains(key):
+                continue
+            n_blk = j_max - i
+            n_tok = n_blk * bs
+            if mk is None:                       # kv16: pin pool blocks
+                self.registry.register(key, n_tok, blocks[:n_blk],
+                                       None, None, None, None)
+            else:
+                ka = jnp.max(jnp.abs(mk[:, :n_tok]), axis=(1, 3))
+                va = jnp.max(jnp.abs(mv[:, :n_tok]), axis=(1, 3))
+                self.registry.register(key, n_tok, None, mk, mv, ka, va)
+
+    def _call_admit_shared(self, pid, batch, sidx, dest, bt_rows, plen_pre,
+                           pp: int, pre: list):
+        """Assemble the prefix operands and dispatch one ``_admit_shared``
+        wave — the single place that knows the continuation executable's
+        calling convention, shared by registry-hit admissions
+        (:meth:`_dispatch_shared`) and chunk continuations
+        (:meth:`_dispatch_chunks`).
+
+        ``pre``: one ``(n_tok, block_ids, mk, mv, ka, va)`` tuple per wave
+        row. At kv16 the prefix is gathered in-jit from ``block_ids`` (the
+        bf16 pool is its own master); at int KV the full-precision masters
+        ``mk``/``mv`` (sliced to ``n_tok`` — chain entries share one
+        buffer — and padded to the ``pp`` bucket) are replayed with their
+        raw amax. Returns ``(tok0, raw)``.
+        """
+        cfg = self.srv.cfg
+        a = dest.shape[0]
+        nb_oob = self.allocator.n_blocks
+        if self.srv.scfg.kv_bits == 16:
+            pb = pp // self.block_size
+            pre_bids = np.full((a, pb), nb_oob, np.int32)
+            for j, (n_tok, bids, *_rest) in enumerate(pre):
+                nbl = n_tok // self.block_size
+                pre_bids[j, :nbl] = bids[:nbl]
+            tok0, raw, self._tok, self._pos, self._caches = \
+                self._admit_shared(
+                    pid, batch, jnp.asarray(sidx), jnp.asarray(dest),
+                    jnp.asarray(bt_rows), jnp.asarray(pre_bids),
+                    jnp.asarray(plen_pre), self._tok, self._pos,
+                    self._caches)
+            return tok0, raw
+
+        def padm(m, n_tok):
+            m = m[:, :n_tok].astype(jnp.float32)
+            return (m if n_tok == pp else
+                    jnp.pad(m, ((0, 0), (0, pp - n_tok), (0, 0), (0, 0))))
+
+        zk = jnp.zeros((cfg.n_layers, pp, cfg.n_kv, cfg.hd), jnp.float32)
+        za = jnp.zeros((cfg.n_layers, cfg.n_kv), jnp.float32)
+        npad = a - len(pre)
+        kpre = jnp.stack([padm(mk, n) for n, _, mk, _, _, _ in pre]
+                         + [zk] * npad, axis=1)
+        vpre = jnp.stack([padm(mv, n) for n, _, _, mv, _, _ in pre]
+                         + [zk] * npad, axis=1)
+        ka = jnp.stack([ka_ for *_x, ka_, _va in pre] + [za] * npad, axis=1)
+        va = jnp.stack([va_ for *_x, va_ in pre] + [za] * npad, axis=1)
+        tok0, raw, self._tok, self._pos, self._caches = self._admit_shared(
+            pid, batch, jnp.asarray(sidx), jnp.asarray(dest),
+            jnp.asarray(bt_rows), kpre, vpre, ka, va,
+            jnp.asarray(plen_pre), self._tok, self._pos, self._caches)
+        return tok0, raw
 
     def _dispatch_shared(self, rows) -> int:
         """One ``_admit_shared`` wave: suffix-only continuation prefill."""
         bs = self.block_size
-        cfg = self.srv.cfg
         reqs = [self._reqs[rid] for rid, _, _, _ in rows]
         sufs = [np.asarray(r.tokens, np.int32)[e.n_tokens:]
                 for r, (_, _, e, _) in zip(reqs, rows)]
@@ -499,45 +706,139 @@ class ContinuousScheduler:
         pid = self._bill(reqs)
         batch = {"tokens": jnp.asarray(prompts),
                  "prompt_len": jnp.asarray(slen)}
-        if self.srv.scfg.kv_bits == 16:
-            # bf16: prefix gathered from the shared pool blocks in-jit
-            pb = pp // bs
-            pre_bids = np.full((a, pb), nb_oob, np.int32)
-            for j, e in enumerate(ents):
-                nbl = e.n_tokens // bs
-                pre_bids[j, :nbl] = e.block_ids[:nbl]
-            tok0, self._tok, self._pos, self._caches = self._admit_shared(
-                pid, batch, jnp.asarray(sidx), jnp.asarray(dest),
-                jnp.asarray(bt_rows), jnp.asarray(pre_bids),
-                jnp.asarray(plen_pre), self._tok, self._pos, self._caches)
-        else:
-            # int KV: prefix replayed from full-precision registry masters
-            # (chain entries share one master buffer — slice to the entry's
-            # own prefix length before padding to the wave bucket)
-            def padm(m, n_tok):
-                m = m[:, :n_tok].astype(jnp.float32)
-                return (m if n_tok == pp else
-                        jnp.pad(m, ((0, 0), (0, pp - n_tok),
-                                    (0, 0), (0, 0))))
-
-            zk = jnp.zeros((cfg.n_layers, pp, cfg.n_kv, cfg.hd), jnp.float32)
-            za = jnp.zeros((cfg.n_layers, cfg.n_kv), jnp.float32)
-            npad = a - len(rows)
-            kpre = jnp.stack([padm(e.master_k, e.n_tokens) for e in ents]
-                             + [zk] * npad, axis=1)
-            vpre = jnp.stack([padm(e.master_v, e.n_tokens) for e in ents]
-                             + [zk] * npad, axis=1)
-            ka = jnp.stack([e.k_amax for e in ents] + [za] * npad, axis=1)
-            va = jnp.stack([e.v_amax for e in ents] + [za] * npad, axis=1)
-            tok0, self._tok, self._pos, self._caches = self._admit_shared(
-                pid, batch, jnp.asarray(sidx), jnp.asarray(dest),
-                jnp.asarray(bt_rows), kpre, vpre, ka, va,
-                jnp.asarray(plen_pre), self._tok, self._pos, self._caches)
+        tok0, _ = self._call_admit_shared(
+            pid, batch, sidx, dest, bt_rows, plen_pre, pp,
+            [(e.n_tokens, e.block_ids, e.master_k, e.master_v,
+              e.k_amax, e.v_amax) for e in ents])
         self._post_admission(tok0, self.srv.engine.profile_names[pid],
                              [(j, rid, slot, blocks, e)
                               for j, (rid, slot, e, blocks)
                               in enumerate(rows)])
         return len(rows)
+
+    def _advance_chunks(self) -> None:
+        """Advance every mid-admission chunked row by one prompt chunk.
+
+        Called once per admission round, BETWEEN decode segments — that
+        interleaving is the whole point: a 4-chunk prompt costs four small
+        continuation dispatches with decode quanta in between instead of
+        one monolithic wave that stalls every live row for the full
+        prompt's prefill.
+        """
+        if not self._chunk_state:
+            return
+        waves: dict[int, list] = {}          # rows grouped by pinned profile
+        for slot in sorted(self._chunk_state):
+            st = self._chunk_state[slot]
+            if st.pop("fresh", False):       # admitted this round: a decode
+                continue                     # segment runs before chunk 2
+            t = np.asarray(self._reqs[st["rid"]].tokens, np.int32)
+            clen = min(self.chunk, len(t) - st["done"])
+            waves.setdefault(st["pid"], []).append(
+                (slot, st, t[st["done"]:st["done"] + clen]))
+        for pid, rows in waves.items():
+            self._dispatch_chunks(pid, rows)
+
+    def _dispatch_chunks(self, pid: int, rows) -> None:
+        """One continuation wave over ``(slot, state, chunk_tokens)`` rows,
+        all pinned to profile ``pid`` (the one their first chunk billed).
+
+        Reuses the shared-prefix executable verbatim: the "prefix" is the
+        row's own previously processed tokens — gathered from its own pool
+        blocks at kv16 (chunk boundaries are block-aligned by
+        construction), replayed from the accumulated full-precision
+        masters at int KV. ``dest`` rewrites ALL of the row's blocks each
+        chunk, which both lands the new chunk and scrubs any junk a frozen
+        row's residual decode writes parked there between chunks. Rows
+        whose final chunk lands go live (``remaining = max_new − 1``) with
+        their first generated token coming from this wave's argmax —
+        exactly the cold admission contract.
+        """
+        bs = self.block_size
+        sb = _next_pow2(max(self.bucket_min,
+                            max(len(c) for _, _, c in rows)))
+        pp = bs * _next_pow2(max(st["done"] // bs for _, st, _ in rows))
+        a = _next_pow2(len(rows))
+        nb_oob = self.allocator.n_blocks
+        prompts = np.zeros((a, sb), np.int32)
+        slen = np.zeros((a,), np.int32)
+        plen_pre = np.zeros((a,), np.int32)
+        sidx = np.full((a,), self.n_slots, np.int32)
+        dest = np.full((a, self.n_lblk), nb_oob, np.int32)
+        bt_rows = np.full((a, self.n_lblk), nb_oob, np.int32)
+        for j, (slot, st, chunk) in enumerate(rows):
+            prompts[j, sb - len(chunk):] = chunk             # left-pad
+            slen[j] = len(chunk)
+            plen_pre[j] = st["done"]
+            sidx[j] = slot
+            blocks = st["blocks"]
+            bt_rows[j, :len(blocks)] = blocks
+            dest[j, :len(blocks)] = blocks   # all private: rewrite wholesale
+        # continuation waves reuse the pinned profile and bill nothing new —
+        # the request was billed its one prefill inference at the first
+        # chunk, and re-selecting here could mix precisions within one
+        # prompt's KV (no monolithic admission can produce that state)
+        batch = {"tokens": jnp.asarray(prompts),
+                 "prompt_len": jnp.asarray(slen)}
+        tok0, raw = self._call_admit_shared(
+            pid, batch, sidx, dest, bt_rows, plen_pre, pp,
+            [(st["done"], st["blocks"], st["mk"], st["mv"],
+              st["ka"], st["va"]) for _, st, _ in rows])
+        entry = {"kind": "admit", "toks": tok0,
+                 "name": self.srv.engine.profile_names[pid],
+                 "rows": [], "completes": []}
+        clear = []
+        for j, (slot, st, chunk) in enumerate(rows):
+            st["done"] += len(chunk)
+            if raw is not None:
+                k_all, v_all = raw
+                c0 = sb - len(chunk)
+                new_k = k_all[:, j, c0:].astype(jnp.float32)
+                new_v = v_all[:, j, c0:].astype(jnp.float32)
+                st["mk"] = jnp.concatenate([st["mk"], new_k], axis=1)
+                st["mv"] = jnp.concatenate([st["mv"], new_v], axis=1)
+                st["ka"] = jnp.maximum(
+                    st["ka"], jnp.max(jnp.abs(new_k), axis=(1, 3)))
+                st["va"] = jnp.maximum(
+                    st["va"], jnp.max(jnp.abs(new_v), axis=(1, 3)))
+            rid = st["rid"]
+            req = self._reqs[rid]
+            if st["done"] < len(req.tokens):
+                continue                       # more chunks to go
+            # final chunk: the row goes live exactly like a cold admission
+            del self._chunk_state[slot]
+            entry["rows"].append((j, rid))
+            self._register_chunked(rid, st)
+            if req.max_new == 1:               # done on arrival
+                entry["completes"].append(rid)
+                self.allocator.release(st["blocks"])
+                clear.append(slot)
+                continue
+            self.slot_req[slot] = rid
+            self._slot_crit[slot] = req.accuracy_critical
+            self.remaining[slot] = req.max_new - 1
+            self._slot_blocks[slot] = (st["blocks"], None)
+        if clear:
+            self._caches = self._clear(self._pad_slot_idx(clear),
+                                       self._caches)
+        if entry["rows"]:
+            self._inflight.append(entry)
+
+    def _register_chunked(self, rid: int, st: dict) -> None:
+        """Register a finished chunked prompt's prefix chain for reuse —
+        same chain discipline as :meth:`_register_prefixes`, sourced from
+        the row's own blocks (kv16) / accumulated masters (int KV)."""
+        if self.registry is None:
+            return
+        t = np.asarray(self._reqs[rid].tokens, np.int32)
+        j_max = (len(t) - 1) // self.block_size
+        mk = mv = None
+        if self.srv.scfg.kv_bits != 16 and j_max >= 1:
+            # one master buffer for the whole chain, truncated to the
+            # registrable span (entries slice by their own n_tokens)
+            mk = st["mk"][:, :j_max * self.block_size]
+            mv = st["mv"][:, :j_max * self.block_size]
+        self._register_chain(rid, j_max, st["blocks"], mk, mv)
 
     def _post_admission(self, tok0, pname: str, rows) -> None:
         """Common post-dispatch bookkeeping for paged admission waves.
@@ -653,14 +954,17 @@ class ContinuousScheduler:
     # ------------------------------------------------------------------ drive
     def step(self) -> bool:
         """Admit then run one segment, keeping one segment in flight.
-        Returns False once fully drained (all tokens materialized)."""
+        Returns False once fully drained (all tokens materialized).
+        Mid-admission chunked rows keep the loop alive: each step's
+        ``admit`` advances them one chunk between decode segments."""
         self.admit()
         if self.live_rows:
             self.run_segment()
             self._flush(keep=1)
         else:
             self._flush()
-        return bool(self.live_rows or self.queue or self._inflight)
+        return bool(self.live_rows or self.queue or self._inflight
+                    or (self.paged and self._chunk_state))
 
     def run(self) -> list[dict]:
         """Drain queue + pool; results in submission order (entries already

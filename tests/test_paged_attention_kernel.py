@@ -1,0 +1,329 @@
+"""In-place Pallas paged-attention kernel + chunked prefill.
+
+The load-bearing properties of the serving hot-path rewrite:
+
+* the kernel (interpret mode) matches the gather-view ``decode_attention``
+  oracle to float precision at kv16 and kv8, across block-boundary cache
+  lengths, fragmented/out-of-order block tables, and dead rows (both the
+  ``-1`` and the ``>= n_blocks`` unmapped sentinels);
+* the ``pallas`` segment backend is token-identical to the ``gather``
+  backend / solo generation at kv16 and kv8 — including shared-prefix
+  copy-on-write rows — while materializing **no** ``[B, n_lblk*bs]`` view
+  and no exit fold-back (guarded at the dispatch level and in the jaxpr);
+* chunked prefill emits exactly the tokens of an unchunked admission.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core.engine import AdaptiveEngine, QuantIndex
+from repro.core.profiles import paper_profiles
+from repro.kernels import ref
+from repro.kernels.paged_attention import paged_attention_pallas
+from repro.models import transformer as T
+from repro.serving.engine import AdaptiveServer, Request, ServingConfig
+from repro.serving.scheduler import ContinuousScheduler
+
+
+def _build(arch="granite-3-2b"):
+    cfg = get_smoke(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    names = T.quant_layer_names(cfg)
+    profs = paper_profiles(names, inner_layers=[])
+    eng = AdaptiveEngine(tuple(profs), QuantIndex(names),
+                         lambda p, br, b: T.train_loss(p, cfg, br, b))
+    return cfg, params, eng
+
+
+@pytest.fixture(scope="module")
+def dense_parts():
+    return _build()
+
+
+def _solo_tokens(parts, req, kv_bits=16, slots=64):
+    cfg, params, eng = parts
+    srv = AdaptiveServer(cfg, params, eng,
+                         ServingConfig(slots=slots, max_batch=4,
+                                       kv_bits=kv_bits))
+    return srv.generate(req.tokens[None, :], req.max_new)["tokens"][0]
+
+
+# ---------------------------------------------------------------------------
+# kernel vs gather-view oracle (interpret mode)
+# ---------------------------------------------------------------------------
+
+def _pool_case(seed, lengths, *, n_blocks=16, bs=8, n_lblk=4, hkv=2, hg=2,
+               d=16, kv_bits=16, dead_sentinels=()):
+    """Fragmented paged state: per-row out-of-order physical blocks, cache
+    lengths straddling block boundaries, optional dead rows whose tables
+    hold only unmapped sentinels."""
+    rng = np.random.default_rng(seed)
+    b = len(lengths) + len(dead_sentinels)
+    q = jnp.asarray(rng.normal(size=(b, hkv, hg, d)), jnp.float32)
+    if kv_bits == 8:
+        kp = jnp.asarray(rng.integers(-127, 128, (n_blocks, bs, hkv, d)),
+                         jnp.int8)
+        vp = jnp.asarray(rng.integers(-127, 128, (n_blocks, bs, hkv, d)),
+                         jnp.int8)
+        ks = jnp.asarray(rng.uniform(0.01, 0.1, (b, hkv)), jnp.float32)
+        vs = jnp.asarray(rng.uniform(0.01, 0.1, (b, hkv)), jnp.float32)
+    else:
+        kp = jnp.asarray(rng.normal(size=(n_blocks, bs, hkv, d)),
+                         jnp.float32).astype(jnp.bfloat16)
+        vp = jnp.asarray(rng.normal(size=(n_blocks, bs, hkv, d)),
+                         jnp.float32).astype(jnp.bfloat16)
+        ks = vs = jnp.ones((b, hkv), jnp.float32)
+    # fragmented, out-of-order physical placement (one block per row+lblk)
+    perm = rng.permutation(n_blocks)
+    tidx = np.full((n_blocks, bs), -1, np.int32)
+    bt = np.full((b, n_lblk), n_blocks, np.int32)
+    pos = np.zeros((b,), np.int32)
+    nxt = 0
+    for r, ln in enumerate(lengths):
+        pos[r] = ln - 1                       # current token = last written
+        for lb in range(-(-ln // bs)):
+            p = int(perm[nxt]); nxt += 1
+            bt[r, lb] = p
+            nv = min(ln - lb * bs, bs)
+            tidx[p, :nv] = lb * bs + np.arange(nv)
+    for i, sent in enumerate(dead_sentinels):
+        bt[len(lengths) + i, :] = sent        # -1 or n_blocks: both unmapped
+    return (q, kp, vp, ks, vs, jnp.asarray(tidx), jnp.asarray(bt),
+            jnp.asarray(pos))
+
+
+@pytest.mark.parametrize("kv_bits", [16, 8])
+def test_kernel_matches_gather_oracle(kv_bits):
+    """Block-boundary lengths 7/8/9/16/17 through fragmented out-of-order
+    tables + two dead rows (−1 and ≥ n_blocks sentinels): the kernel's
+    output equals the gather-view oracle to float precision, and dead rows
+    flush exact zeros on both paths."""
+    case = _pool_case(3, (7, 8, 9, 16, 17), n_blocks=24, kv_bits=kv_bits,
+                      dead_sentinels=(-1, 24))
+    out_k = paged_attention_pallas(*case, bits=kv_bits, interpret=True)
+    out_r = ref.paged_attention_ref(*case, bits=kv_bits)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               atol=2e-5, rtol=1e-5)
+    assert np.all(np.asarray(out_k)[-2:] == 0)      # dead rows: exact zeros
+    assert np.all(np.asarray(out_r)[-2:] == 0)
+
+
+def test_kernel_windowed_matches_oracle():
+    """Sliding-window masking (ring semantics via token_idx) agrees."""
+    case = _pool_case(11, (9, 17, 23), n_blocks=16, kv_bits=16)
+    out_k = paged_attention_pallas(*case, bits=16, window=8, interpret=True)
+    out_r = ref.paged_attention_ref(*case, bits=16, window=8)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               atol=2e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# pallas segment backend: token identity + no-view guard
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kv_bits", [16, 8])
+def test_pallas_backend_token_identity(dense_parts, kv_bits):
+    """The in-place kernel backend emits exactly the gather/solo tokens for
+    prompts straddling block boundaries, at bf16 and int8 KV."""
+    cfg, params, eng = dense_parts
+    scfg = ServingConfig(slots=64, max_batch=4, kv_bits=kv_bits,
+                         block_size=8, paged_backend="pallas")
+    srv = AdaptiveServer(cfg, params, eng, scfg)
+    assert srv.paged_backend == "pallas"
+    sched = ContinuousScheduler(srv, quantum=4)
+    rng = np.random.default_rng(13)
+    reqs = [Request(tokens=rng.integers(0, cfg.vocab, n).astype(np.int32),
+                    max_new=mn)
+            for n, mn in [(7, 6), (9, 5), (17, 6)]]
+    for r in reqs:
+        sched.submit(r)
+    results = sched.run()
+    for req, res in zip(reqs, results):
+        assert res["tokens"] == _solo_tokens(dense_parts, req, kv_bits)
+
+
+def test_pallas_backend_shared_cow_identity(dense_parts):
+    """Shared-prefix CoW rows decode through the kernel against blocks they
+    map but must never write: both sharers match solo and the shared
+    blocks' bytes are untouched."""
+    cfg, params, eng = dense_parts
+    scfg = ServingConfig(slots=64, max_batch=4, block_size=8,
+                         paged_backend="pallas")
+    srv = AdaptiveServer(cfg, params, eng, scfg)
+    sched = ContinuousScheduler(srv, quantum=2)
+    rng = np.random.default_rng(29)
+    sys_prompt = rng.integers(0, cfg.vocab, 16).astype(np.int32)
+    r1 = Request(tokens=np.concatenate(
+        [sys_prompt, rng.integers(0, cfg.vocab, 4).astype(np.int32)]),
+        max_new=8)
+    r2 = Request(tokens=np.concatenate(
+        [sys_prompt, rng.integers(0, cfg.vocab, 7).astype(np.int32)]),
+        max_new=6)
+    sched.submit(r1)
+    sched.step()                              # r1 admitted cold + registered
+    entry = max(sched.registry._entries.values(), key=lambda e: e.n_tokens)
+    bids = np.asarray(entry.block_ids)
+    pool = sched._caches["kv"]
+    snap_k = np.asarray(pool.k[:, bids]).copy()
+    sched.submit(r2)                          # shares while r1 is still live
+    while sched.step():
+        pass
+    assert sched.registry.hits == 1
+    pool = sched._caches["kv"]
+    assert np.array_equal(np.asarray(pool.k[:, bids]), snap_k)
+    results = sched.run()
+    for req, res in zip((r1, r2), results):
+        assert res["tokens"] == _solo_tokens(dense_parts, req)
+
+
+def _segment_jaxpr(parts, backend, *, b=3, slots=40, bs=8, steps=4):
+    """Trace decode_segment on a paged pool and return (jaxpr, slots_p)."""
+    cfg, params, eng = parts
+    caches = T.init_paged_caches(cfg, b, slots, block_size=bs)
+    table = jnp.asarray(eng.table)
+    prequant = T.prequant_decode_weights(params, cfg, table)
+
+    def seg(schedule, tok, pos, cch, remaining):
+        return T.decode_segment(params, cfg, table, schedule, tok, pos, cch,
+                                remaining, prequant=prequant,
+                                paged_backend=backend)
+
+    jaxpr = jax.make_jaxpr(seg)(
+        jnp.zeros((steps,), jnp.int32), jnp.zeros((b,), jnp.int32),
+        jnp.zeros((b,), jnp.int32), caches, jnp.zeros((b,), jnp.int32))
+    return jaxpr, -(-min(slots, 10 ** 9) // bs) * bs
+
+
+def _has_view_shaped_aval(jaxpr, b, slots_p):
+    """Recursively scan every equation's outputs for an intermediate whose
+    shape contains the (B, n_lblk*bs) dense-view signature."""
+    def shapes(jx, acc):
+        for eqn in jx.eqns:
+            for v in eqn.outvars:
+                aval = getattr(v, "aval", None)
+                if aval is not None and hasattr(aval, "shape"):
+                    acc.append(tuple(aval.shape))
+            for p in eqn.params.values():
+                for sub in (p if isinstance(p, (list, tuple)) else [p]):
+                    inner = getattr(sub, "jaxpr", None)
+                    if inner is not None:
+                        shapes(inner, acc)
+        return acc
+
+    def has_pair(shape):
+        return any(shape[i] == b and shape[i + 1] == slots_p
+                   for i in range(len(shape) - 1))
+
+    return any(has_pair(s) for s in shapes(jaxpr.jaxpr, []))
+
+
+def test_segment_pallas_no_view_materialization(dense_parts, monkeypatch):
+    """Dispatch + jaxpr guard for the acceptance criterion: the pallas
+    segment executable contains NO ``[B, n_lblk*bs]`` view materialization
+    or exit fold-back. ``paged_view`` is never even traced, and no
+    intermediate in the jaxpr carries the dense-view shape — while the
+    gather backend (the oracle) demonstrably produces both, proving the
+    guard detects what it claims to."""
+    import repro.models.transformer as TT
+    calls = {"n": 0}
+    orig = TT.paged_view
+
+    def counting(cache):
+        calls["n"] += 1
+        return orig(cache)
+
+    monkeypatch.setattr(TT, "paged_view", counting)
+    jaxpr_p, slots_p = _segment_jaxpr(dense_parts, "pallas")
+    assert calls["n"] == 0                      # never dispatched
+    assert not _has_view_shaped_aval(jaxpr_p, 3, slots_p)
+
+    jaxpr_g, slots_p = _segment_jaxpr(dense_parts, "gather")
+    assert calls["n"] > 0                       # oracle path gathers
+    assert _has_view_shaped_aval(jaxpr_g, 3, slots_p)
+
+
+# ---------------------------------------------------------------------------
+# intra-wave prefix dedup
+# ---------------------------------------------------------------------------
+
+def test_intra_wave_prefix_dedup(dense_parts):
+    """Two identical prompts admitted in the SAME cold wave: the second
+    defers its lookup past the wave that registers the prefix and rides
+    the shared path (registry hit) instead of prefilling the prefix again
+    — and both still match solo generation exactly."""
+    cfg, params, eng = dense_parts
+    scfg = ServingConfig(slots=64, max_batch=4, block_size=8)
+    srv = AdaptiveServer(cfg, params, eng, scfg)
+    sched = ContinuousScheduler(srv, quantum=4)
+    rng = np.random.default_rng(5)
+    sys_p = rng.integers(0, cfg.vocab, 16).astype(np.int32)
+    r1 = Request(tokens=np.concatenate(
+        [sys_p, rng.integers(0, cfg.vocab, 4).astype(np.int32)]), max_new=6)
+    r2 = Request(tokens=r1.tokens.copy(), max_new=6)        # identical
+    r3 = Request(tokens=np.concatenate(                     # same sys prefix
+        [sys_p, rng.integers(0, cfg.vocab, 3).astype(np.int32)]), max_new=5)
+    for r in (r1, r2, r3):
+        sched.submit(r)
+    assert sched.admit() == 3                 # ONE round admits all three
+    assert sched.registry.hits == 2           # r2 and r3 both deduped
+    results = sched.run()
+    for req, res in zip((r1, r2, r3), results):
+        assert res["tokens"] == _solo_tokens(dense_parts, req)
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kv_bits", [16, 8])
+def test_chunked_prefill_token_identity(dense_parts, kv_bits):
+    """Long prompts admitted in block-aligned chunks (interleaved with
+    decode segments) emit exactly the unchunked-admission tokens — at kv8
+    the accumulated-amax recalibration reproduces the cold scale."""
+    cfg, params, eng = dense_parts
+    scfg = ServingConfig(slots=64, max_batch=4, kv_bits=kv_bits,
+                         block_size=8, prefill_chunk=16)
+    srv = AdaptiveServer(cfg, params, eng, scfg)
+    assert srv.chunk_tokens == 16
+    sched = ContinuousScheduler(srv, quantum=2)
+    rng = np.random.default_rng(41)
+    reqs = [Request(tokens=rng.integers(0, cfg.vocab, n).astype(np.int32),
+                    max_new=mn)
+            for n, mn in [(40, 5), (33, 4), (6, 3)]]   # 2 chunked, 1 short
+    for r in reqs:
+        sched.submit(r)
+    sched.admit()
+    assert len(sched._chunk_state) == 2          # long prompts mid-admission
+    results = sched.run()
+    assert not sched._chunk_state
+    for req, res in zip(reqs, results):
+        assert res["tokens"] == _solo_tokens(dense_parts, req, kv_bits)
+
+
+def test_chunked_prefill_interleaves_decode(dense_parts):
+    """While a long prompt chunks in, already-live rows keep emitting: the
+    short request completes before the chunked one's admission finishes —
+    the admission-wave stall the feature removes."""
+    cfg, params, eng = dense_parts
+    scfg = ServingConfig(slots=96, max_batch=4, block_size=8,
+                         prefill_chunk=16)
+    srv = AdaptiveServer(cfg, params, eng, scfg)
+    sched = ContinuousScheduler(srv, quantum=2)
+    rng = np.random.default_rng(7)
+    short = Request(tokens=rng.integers(0, cfg.vocab, 8).astype(np.int32),
+                    max_new=4)
+    long = Request(tokens=rng.integers(0, cfg.vocab, 80).astype(np.int32),
+                   max_new=4)
+    sched.submit(short)
+    sched.submit(long)
+    sched.step()                 # both admitted: short live, long chunk 1/5
+    assert sched._chunk_state and sched.live_rows == 1
+    while sched._chunk_state:
+        sched.step()
+    done = [rid for rid, _ in sched.poll_completed()]
+    assert 0 in done             # short finished while long was still chunking
+    results = sched.run()
+    assert len(results[1]["tokens"]) == long.max_new
+    assert results[1]["tokens"] == _solo_tokens(dense_parts, long, slots=96)
