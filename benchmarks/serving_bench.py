@@ -53,6 +53,7 @@ import numpy as np
 
 from repro.configs import get_smoke
 from repro.core.engine import AdaptiveEngine, QuantIndex
+from repro.core.manager import ProfileManager, ProfileStats
 from repro.core.profiles import paper_profiles
 from repro.models import transformer as T
 from repro.serving.engine import AdaptiveServer, Request, ServingConfig
@@ -536,6 +537,209 @@ def bench_chunked_prefill(cfg, params, eng, *, n_req: int = 18,
                   "p99_short_improvement": 1.0 - c99 / m99}
 
 
+# ---------------------------------------------------------------------------
+# priority classes + preemption: mixed-class Poisson trace vs FIFO
+# ---------------------------------------------------------------------------
+
+def _mixed_class_workload(cfg, n_saver: int, n_crit: int, saver_len: int,
+                          crit_len: int, saver_new: int, crit_new: int,
+                          seed: int):
+    """Saver-class decode hogs + sparse critical requests — the contention
+    shape priority scheduling exists for: under FIFO a critical arrival
+    queues behind every earlier saver draining its whole budget; under the
+    priority policy it jumps the queue and (with preemption) evicts a
+    saver row instead."""
+    rng = np.random.default_rng(seed)
+    savers = [Request(tokens=rng.integers(0, cfg.vocab, saver_len)
+                      .astype(np.int32), max_new=saver_new, priority=1)
+              for _ in range(n_saver)]
+    crits = [Request(tokens=rng.integers(0, cfg.vocab, crit_len)
+                     .astype(np.int32), max_new=crit_new, priority=0)
+             for _ in range(n_crit)]
+    return savers, crits
+
+
+def _ledger_exact_under_preemption(cfg, params, eng, scfg, quantum: int,
+                                   seed: int) -> None:
+    """The stepwise-oracle exactness gate, with preemption in the mix: a
+    tiny closed-loop run that provably preempts, whose event log must
+    replay through a fresh manager to the same profiles and ledger, and
+    whose total billed inferences equal Σ(max_new) — suspend/resume bills
+    nothing."""
+    def manager():
+        stats = [ProfileStats(n, a, e, 1e-3) for n, a, e in [
+            ("hi", 0.99, 4.0), ("mid", 0.97, 2.0), ("lo", 0.95, 1.0)]]
+        return ProfileManager(stats, accuracy_target=0.985,
+                              accuracy_floor=0.90, budget_j=500.0,
+                              low_energy=0.5)
+
+    mgr = manager()
+    srv = AdaptiveServer(cfg, params, eng, scfg, manager=mgr)
+    sched = ContinuousScheduler(srv, quantum=quantum, record_events=True)
+    rng = np.random.default_rng(seed + 7)
+    reqs = [Request(tokens=rng.integers(0, cfg.vocab, 9).astype(np.int32),
+                    max_new=12, priority=1) for _ in range(2)]
+    for r in reqs:
+        sched.submit(r)
+    sched.step()
+    sched.step()
+    crit = Request(tokens=rng.integers(0, cfg.vocab, 6).astype(np.int32),
+                   max_new=3, priority=0)
+    reqs.append(crit)
+    sched.submit(crit)
+    while sched.step():
+        pass
+    assert sched.preemptions >= 1, "scenario failed to preempt"
+    oracle = manager()
+    for pid, n_rows, critical in sched.events:
+        assert oracle.select(accuracy_critical=critical) == pid, \
+            "ledger replay diverged from the stepwise oracle"
+        oracle.account(pid, n_rows)
+    assert abs(oracle.spent_j - mgr.spent_j) < 1e-9
+    billed = sum(n for _, n, _ in sched.events)
+    assert billed == sum(r.max_new for r in reqs), \
+        f"billed {billed} != {sum(r.max_new for r in reqs)} " \
+        f"(suspend/resume must bill nothing)"
+
+
+def bench_priority(cfg, params, eng, *, n_saver: int = 12, n_crit: int = 4,
+                   saver_len: int = 12, crit_len: int = 6,
+                   saver_new: int = 48, crit_new: int = 4,
+                   max_batch: int = 2, quantum: int = 4,
+                   overload: float = 3.0, seed: int = 0,
+                   min_speedup: float = 0.0) -> tuple[list[tuple], dict]:
+    """Priority classes + preemption vs FIFO on the same mixed-class trace.
+
+    Identical paged servers except the scheduling policy; identical
+    arrivals; best-of-3 per-request latencies (the usual CPU de-noising).
+    The saver stream arrives Poisson at ``overload``× the measured
+    closed-loop capacity — sustained contention, the regime priority
+    scheduling exists for — and the sparse critical stream arrives Poisson
+    inside the saver busy period. The headline metric is the
+    **critical-class p99**: under FIFO a critical arrival queues behind
+    every earlier saver draining its ``saver_new``-token budget; the
+    priority policy admits it first and preemption evicts a saver row when
+    the pool is full (the saver resumes bit-exactly later, paying only the
+    suspend/resume overhead — its throughput degrades gracefully, which
+    the saver-class tokens/sec ratio reports). ``min_speedup`` > 0 asserts
+    the critical-p99 improvement factor.
+    """
+    slots = saver_len + saver_new + 16
+    common = dict(slots=slots, max_batch=max_batch, block_size=16,
+                  paged_kv=True, prefix_cache=False)
+    srv_fifo = AdaptiveServer(cfg, params, eng, ServingConfig(**common))
+    srv_prio = AdaptiveServer(cfg, params, eng,
+                              ServingConfig(priority_classes=2,
+                                            preemption=True, **common))
+    savers, crits = _mixed_class_workload(cfg, n_saver, n_crit, saver_len,
+                                          crit_len, saver_new, crit_new,
+                                          seed)
+    saver_tokens = n_saver * saver_new
+    total_tokens = saver_tokens + n_crit * crit_new
+
+    for srv in (srv_fifo, srv_prio):
+        # cold waves at both length buckets × pow2 row counts; the resume
+        # wave's (prefix-bucket) executables compile on first preemption —
+        # best-of-3 washes those out like every other compile
+        rng = np.random.default_rng(2**31 - 9)
+        w = 1
+        while w <= max_batch:
+            for length in (saver_len, crit_len):
+                warm = ContinuousScheduler(srv, quantum=quantum,
+                                           record_events=False)
+                for _ in range(w):
+                    warm.submit(Request(
+                        tokens=rng.integers(0, cfg.vocab, length)
+                        .astype(np.int32), max_new=2))
+                warm.run()
+            w *= 2
+
+    def capacity(srv):
+        best = None
+        for _ in range(2):
+            sched = ContinuousScheduler(srv, quantum=quantum,
+                                        record_events=False)
+            for r in savers:
+                sched.submit(r)
+            t0 = time.perf_counter()
+            sched.run()
+            best = min(filter(None, (best, time.perf_counter() - t0)))
+        return saver_tokens / best
+
+    cap_fifo = capacity(srv_fifo)          # saver-only closed-loop tok/s
+    busy_s = saver_tokens / cap_fifo       # saver busy period if alone
+    arr_rng = np.random.default_rng(seed + 1)
+    lam_s = overload * cap_fifo / saver_new
+    arr_savers = np.cumsum(arr_rng.exponential(1.0 / lam_s, n_saver))
+    # criticals land inside the (overloaded → deepening) saver backlog:
+    # by 0.35·busy the FIFO queue already holds several whole saver
+    # budgets, which is exactly the contention the p99 gap measures
+    arr_crits = 0.35 * busy_s + np.cumsum(
+        arr_rng.exponential(0.4 * busy_s / max(1, n_crit), n_crit))
+    order = np.argsort(np.concatenate([arr_savers, arr_crits]),
+                       kind="stable")
+    allreqs = savers + crits
+    reqs = [allreqs[i] for i in order]
+    arrivals = np.sort(np.concatenate([arr_savers, arr_crits]))
+    crit_mask = np.asarray([r.priority == 0 for r in reqs])
+
+    def best_trace(srv, repeats=3):
+        lat = mk = stats = None
+        for _ in range(repeats):
+            t, m, st = _run_sched_trace(srv, reqs, arrivals, quantum)
+            lat = t if lat is None else np.minimum(lat, t)
+            mk = m if mk is None else min(mk, m)
+            if stats is None:
+                stats = st
+            else:
+                # preemption counters are per-repeat scheduler state; keep
+                # the max so a warmed final repeat that happened to dodge
+                # contention can't under-report (or flake the CI assert)
+                for k in ("preemptions", "resumes"):
+                    stats[k] = max(stats.get(k, 0), st.get(k, 0))
+        return lat, mk, stats
+
+    pri_t, pri_mk, pri_stats = best_trace(srv_prio)
+    fif_t, fif_mk, fif_stats = best_trace(srv_fifo)
+    pc50, pc99 = _percentiles((pri_t - arrivals)[crit_mask] * 1e3)
+    fc50, fc99 = _percentiles((fif_t - arrivals)[crit_mask] * 1e3)
+    saver_toks = int(sum(r.max_new for r in reqs if r.priority != 0))
+    saver_tok_s = {"priority": saver_toks / pri_mk,
+                   "fifo": saver_toks / fif_mk}
+    speedup = fc99 / pc99
+    _ledger_exact_under_preemption(
+        cfg, params, eng,
+        ServingConfig(priority_classes=2, preemption=True, **common),
+        quantum, seed)
+    if min_speedup:
+        assert speedup >= min_speedup, \
+            f"critical p99 {pc99:.1f}ms vs FIFO {fc99:.1f}ms = " \
+            f"{speedup:.2f}x < required {min_speedup:g}x"
+    tag = f"b{max_batch}_sv{saver_new}x{n_saver}_cr{crit_new}x{n_crit}"
+    rows = [
+        (f"serve_priority_{tag}", pri_mk * 1e6,
+         f"crit_p50_ms={pc50:.1f};crit_p99_ms={pc99:.1f};"
+         f"saver_tok_s={saver_tok_s['priority']:.0f};"
+         f"preemptions={pri_stats.get('preemptions', 0)};"
+         f"resumes={pri_stats.get('resumes', 0)};"
+         f"crit_p99_vs_fifo={speedup:.2f}x"),
+        (f"serve_fifo_{tag}", fif_mk * 1e6,
+         f"crit_p50_ms={fc50:.1f};crit_p99_ms={fc99:.1f};"
+         f"saver_tok_s={saver_tok_s['fifo']:.0f};"
+         f"offered_saver_tok_s={overload * cap_fifo:.0f}"),
+    ]
+    info = {"crit_p99_ms": {"priority": pc99, "fifo": fc99},
+            "crit_p50_ms": {"priority": pc50, "fifo": fc50},
+            "crit_p99_speedup": speedup,
+            "saver_tok_s": saver_tok_s,
+            "saver_throughput_ratio":
+                saver_tok_s["priority"] / saver_tok_s["fifo"],
+            "preemptions": pri_stats.get("preemptions", 0),
+            "resumes": pri_stats.get("resumes", 0),
+            "ledger_exact": True}
+    return rows, info
+
+
 def _parse_args(argv=None) -> argparse.Namespace:
     ap = argparse.ArgumentParser(
         description="Serving benchmarks: fused decode, continuous batching, "
@@ -577,22 +781,24 @@ def _parse_args(argv=None) -> argparse.Namespace:
 
 
 def _assert_occupancy_consistent(stats: dict) -> None:
-    """Occupancy must be refcount-accurate: blocks a registered prefix
-    keeps resident after their last sharer retires are *used* (pool
-    pressure), never free, and every used block is either live or
-    registry-held — the invariant the bench's saving numbers stand on."""
+    """Occupancy must be refcount-accurate and three-way: blocks with a
+    live reference (``live_blocks``, from the refcounts), retired blocks a
+    registered prefix still caches in the allocator LRU
+    (``lru_cached_blocks`` — allocatable capacity AND resurrectable
+    content), and free blocks must exactly partition the pool — the
+    cross-check between the refcount, LRU, and free-list bookkeeping that
+    the bench's saving numbers stand on."""
     if not stats.get("paged"):
         return
-    assert stats["used_blocks"] == (stats["live_blocks"]
-                                    + stats["registry_only_blocks"]), stats
-    assert stats["used_blocks"] + stats["free_blocks"] \
-        == stats["pool_blocks"], stats
+    assert stats["used_blocks"] == stats["live_blocks"], stats
+    assert stats["live_blocks"] + stats["lru_cached_blocks"] \
+        + stats["free_blocks"] == stats["pool_blocks"], stats
 
 
 def main(argv=None) -> None:
     args = _parse_args(argv)
     cfg, params, eng = _build()
-    paged_info = chunk_info = None
+    paged_info = chunk_info = prio_info = None
     if args.smoke:
         rows = bench_poisson(cfg, params, eng, n_req=8, util=args.util,
                              max_batch=4, quantum=4, seed=args.seed,
@@ -616,6 +822,16 @@ def main(argv=None) -> None:
             cfg, params, eng, n_req=8, long_len=96, long_every=4, chunk=32,
             max_batch=4, quantum=4, util=args.util, seed=args.seed)
         rows += crows
+        # mixed-class preemption point: saver hogs + periodic critical
+        # arrivals on a 2-row pool. Asserts critical p99 beats the FIFO
+        # baseline and the ledger replays exactly against the stepwise
+        # oracle (with ≥1 preemption provably in the event log); the tuned
+        # ≥2× contention number runs in the full bench → BENCH_5.json
+        prows2, prio_info = bench_priority(
+            cfg, params, eng, n_saver=8, n_crit=3, saver_new=24,
+            max_batch=2, quantum=4, seed=args.seed, min_speedup=1.2)
+        rows += prows2
+        assert prio_info["preemptions"] >= 1, prio_info
     else:
         rows = run(QUICK_POINTS if args.quick else POINTS, iters=args.iters)
         rows += bench_poisson(cfg, params, eng, n_req=args.n_req,
@@ -631,6 +847,12 @@ def main(argv=None) -> None:
         crows, chunk_info = bench_chunked_prefill(
             cfg, params, eng, util=min(args.util, 0.7), seed=args.seed)
         rows += crows
+        # contention point for the acceptance number: critical-class p99
+        # must improve ≥2× over FIFO while saver throughput degrades
+        # gracefully (the ratio is recorded in the JSON)
+        prows2, prio_info = bench_priority(
+            cfg, params, eng, seed=args.seed, min_speedup=2.0)
+        rows += prows2
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.3f},{derived}")
@@ -645,6 +867,8 @@ def main(argv=None) -> None:
             payload["paged"] = paged_info
         if chunk_info is not None:
             payload["chunked_prefill"] = chunk_info
+        if prio_info is not None:
+            payload["priority_preemption"] = prio_info
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2, default=int)
         print(f"# json written to {args.json}", file=sys.stderr)

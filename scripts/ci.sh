@@ -2,11 +2,13 @@
 # Tier-1 CI gate (mirrors ROADMAP.md): the full suite must pass, then the
 # serving path is exercised end-to-end (continuous scheduler + static serve
 # under open-loop Poisson arrivals, the paged-KV shared-prefix point, which
-# asserts the >=30% KV-footprint saving and refcount-accurate block-pool
-# occupancy, and a chunked-prefill point), then the paged-attention kernel
-# gate (token identity vs the gather path + strictly fewer bytes per decode
-# step), and finally the docs gate smoke-executes every README/docs code
-# snippet and checks markdown links.
+# asserts the >=30% KV-footprint saving and live/LRU-cached/free block-pool
+# occupancy partition, a chunked-prefill point, and a mixed-class
+# priority+preemption point that asserts critical-class p99 beats the FIFO
+# baseline and replays the ledger exactly against the stepwise oracle),
+# then the paged-attention kernel gate (token identity vs the gather path +
+# strictly fewer bytes per decode step), and finally the docs gate
+# smoke-executes every README/docs code snippet and checks markdown links.
 #
 #   ./scripts/ci.sh            # tier-1: pytest -x -q + serving smoke + docs
 #   ./scripts/ci.sh --bench    # additionally run the full serving benchmark

@@ -142,6 +142,37 @@ class ProfileManager:
             self.account(int(sched[i]), int(live.sum()))
         return sched
 
+    def plan_schedule_classes(self, steps: int, row_remaining, row_levels,
+                              critical_levels, row_critical=None
+                              ) -> np.ndarray:
+        """Per-step ids for a *class-aware* row group → ``int32[steps]``.
+
+        The priority-class analogue of :meth:`plan_schedule_ragged`: each
+        pool row carries a priority-class ``level``, and the scheduling
+        policy binds some classes to the accuracy target
+        (``critical_levels``). Step ``i`` is planned accuracy-critical iff
+        any row live at step ``i`` belongs to a bound class or carries its
+        own per-request critical flag (``row_critical``) — so a critical-
+        class row pins high-precision profiles for exactly the steps it is
+        live, and the ledger still bills precisely the live rows (the
+        stepwise-oracle exactness contract is unchanged).
+
+        Args:
+            steps: schedule length (the decode segment's quantum).
+            row_remaining: ``[B]`` tokens each pool row still has to emit.
+            row_levels: ``[B]`` int priority-class level per row (value
+                irrelevant for idle rows — ``remaining == 0`` never bills).
+            critical_levels: class levels whose profile binding is
+                accuracy-critical (e.g. ``(0,)`` for the stock ladder).
+            row_critical: optional ``[B]`` per-request critical flags,
+                OR'd with the class binding.
+        """
+        lvl = np.asarray(row_levels)
+        crit = np.isin(lvl, np.asarray(list(critical_levels), lvl.dtype))
+        if row_critical is not None:
+            crit = crit | np.asarray(row_critical, bool)
+        return self.plan_schedule_ragged(steps, row_remaining, crit)
+
     def exhausted(self) -> bool:
         """Whether the energy budget is fully spent."""
         if not self.budget_j:           # zero budget = unconstrained (see

@@ -82,6 +82,20 @@ def main() -> None:
                          "this many tokens prefill in block-aligned chunks "
                          "interleaved with decode segments (full-causal "
                          "stacks; default: disabled)")
+    ap.add_argument("--priority-classes", type=int, default=1,
+                    help="request priority classes for the continuous "
+                         "scheduler: 1 = classless FIFO (default); >=2 "
+                         "builds the critical/.../saver ladder — class 0 "
+                         "admits first and is profile-bound to the "
+                         "accuracy target (every 3rd demo request rides "
+                         "class 0, the rest the lowest class)")
+    ap.add_argument("--preemption", action="store_true",
+                    help="arm preemptive scheduling: a critical arrival "
+                         "that cannot admit evicts saver-class rows (block "
+                         "tables + host KV masters snapshotted; they "
+                         "resume bit-exactly through the continuation-"
+                         "prefill executable). Requires --continuous, the "
+                         "paged pool, and a full-causal stack")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -97,6 +111,8 @@ def main() -> None:
     mgr = ProfileManager(stats, accuracy_target=0.985, accuracy_floor=0.95,
                          budget_j=stats[0].energy_j * args.budget_inferences,
                          low_energy=0.5)
+    if args.preemption and not args.continuous:
+        raise SystemExit("--preemption needs --continuous (the slot pool)")
     srv = AdaptiveServer(cfg, params, engine,
                          ServingConfig(slots=256, kv_bits=args.kv_bits,
                                        max_batch=4, paged_kv=args.paged_kv,
@@ -104,12 +120,16 @@ def main() -> None:
                                        pool_blocks=args.pool_blocks,
                                        prefix_cache=args.prefix_cache,
                                        paged_backend=args.paged_backend,
-                                       prefill_chunk=args.prefill_chunk),
+                                       prefill_chunk=args.prefill_chunk,
+                                       priority_classes=args.priority_classes,
+                                       preemption=args.preemption),
                          manager=mgr)
     rng = np.random.default_rng(args.seed)
+    n_cls = max(1, args.priority_classes)
     reqs = [Request(tokens=rng.integers(0, cfg.vocab, int(n)).astype(np.int32),
                     max_new=args.max_new,
-                    accuracy_critical=(i % 3 == 0))
+                    accuracy_critical=(i % 3 == 0),
+                    priority=(0 if i % 3 == 0 else n_cls - 1))
             for i, n in enumerate(rng.integers(4, 24, args.requests))]
     import time
     t0 = time.perf_counter()
@@ -127,7 +147,10 @@ def main() -> None:
         st = sched.paged_stats()
         print(f"[serve] paged KV: peak {st['peak_used_blocks']}/"
               f"{st['pool_blocks']} blocks of {st['block_size']} tokens, "
-              f"prefix hits {st.get('registry_hits', 0)}")
+              f"prefix hits {st.get('registry_hits', 0)}, "
+              f"lru cached {st['lru_cached_blocks']}, "
+              f"preemptions {st['preemptions']} "
+              f"(resumed {st['resumes']})")
     n_tok = sum(len(r["tokens"]) for r in results)
     for i, r in enumerate(results):
         print(f"[serve] req{i}: {len(r['tokens'])} tokens, "

@@ -46,6 +46,7 @@ __all__ = ["ModelConfig", "init_params", "quant_layer_names", "forward",
            "train_loss", "init_caches", "init_paged_caches", "decode_step",
            "decode_many", "decode_segment", "prefill", "prefill_extend",
            "forward_extend", "cache_bytes", "supports_prefix_sharing",
+           "paged_row_masters", "amax_for_scale",
            "prequant_decode_weights", "overlay_params",
            "param_count", "active_param_count"]
 
@@ -563,6 +564,85 @@ def supports_prefix_sharing(cfg: ModelConfig) -> bool:
     """
     return (cfg.has_attn and not cfg.has_ssm and cfg.family != "moe"
             and not cfg.sliding_window and cfg.causal)
+
+
+def paged_row_masters(kv_pool, slot: int, block_ids, n_tok: int):
+    """Full-precision K/V masters of one paged row's first ``n_tok`` tokens.
+
+    The preemption snapshot: gathers the row's mapped pool blocks
+    (``block_ids``, logical order — shared CoW prefix blocks included) and
+    returns ``(mk, mv)`` as ``[L, n_tok, Hkv, hd]`` float32, dequantized
+    under the row's *current* per-``[L, Hkv]`` scales. For int KV that is
+    not the historically-written value of early tokens (the running-max
+    scale moved after they were quantized) — it is exactly the value whose
+    re-quantization under the same scale reproduces the stored ints
+    bit-for-bit, which is the roundtrip :meth:`ContinuousScheduler.
+    evict_row`/resume needs: replaying these masters through the
+    continuation-prefill executable rebuilds the row's cache state
+    byte-identically. Runs eagerly on the host side between segments (a
+    handful of gathers per eviction — preemption is the exceptional path);
+    row *eviction* itself needs no dispatch beyond the existing
+    fixed-shape table clear, exactly like in-graph retirement.
+    """
+    from .attention import _dequantize_kv
+    bs = kv_pool.k.shape[2]                  # [L, n_blocks, bs, Hkv, hd]
+    nb = -(-n_tok // bs)
+    bids = jnp.asarray(np.asarray(list(block_ids)[:nb], np.int32)
+                       .reshape(nb))
+
+    def gather(pool, scale):
+        g = jnp.take(pool, bids, axis=1)     # [L, nb, bs, Hkv, hd']
+        g = g.reshape(g.shape[0], nb * bs, *g.shape[3:])[:, :n_tok]
+        if kv_pool.bits in (4, 8):
+            return _dequantize_kv(g, scale, kv_pool.bits)
+        return g.astype(jnp.float32)
+
+    return (gather(kv_pool.k, kv_pool.k_scale[:, slot]),
+            gather(kv_pool.v, kv_pool.v_scale[:, slot]))
+
+
+def amax_for_scale(scale: np.ndarray, qmax: float) -> np.ndarray:
+    """Invert the int-KV scale calibration ``s = amax/qmax + 1e-9``, f32-exact.
+
+    The preemption restore wave re-quantizes a suspended row's masters
+    through ``prefill_extend``'s calibration ``max(suffix_amax, amax)/qmax
+    + 1e-9``; passing an ``amax`` whose forward image is bit-equal to the
+    row's suspended scale makes the restored scale — and with it every
+    re-quantized int — identical to the uninterrupted row's. Every scale
+    in the system has that form (prefill calibration and the decode
+    running-max update both produce ``a/qmax + 1e-9`` for some observed
+    float32 ``a``), so an exact preimage exists within a few ulp of
+    ``(s − 1e-9)·qmax``; this searches per element and fails loudly if the
+    image cannot be matched (a scale that the calibration could never have
+    produced).
+    """
+    s = np.asarray(scale, np.float32)
+    qmax32, eps = np.float32(qmax), np.float32(1e-9)
+
+    def fwd(a):
+        return np.float32(np.float32(a / qmax32) + eps)
+
+    out = np.empty_like(s)
+    it = np.nditer(s, flags=["multi_index"])
+    for sv in it:
+        sv = np.float32(sv)
+        a = np.float32(np.float32(sv - eps) * qmax32)
+        lo = hi = a
+        for _ in range(64):
+            if fwd(a) == sv:
+                break
+            hi = np.nextafter(hi, np.float32(np.inf), dtype=np.float32)
+            if fwd(hi) == sv:
+                a = hi
+                break
+            lo = np.nextafter(lo, np.float32(-np.inf), dtype=np.float32)
+            if fwd(lo) == sv:
+                a = lo
+                break
+        else:
+            raise ValueError(f"no amax preimage for scale {sv!r}")
+        out[it.multi_index] = a
+    return out
 
 
 def decode_step(params: dict, cfg: ModelConfig, bits_row: jax.Array,

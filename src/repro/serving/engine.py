@@ -89,6 +89,20 @@ class ServingConfig:
     block-aligned chunks that interleave with decode segments instead of
     one monolithic wave (full-causal stacks only), smoothing the
     admission-wave latency spike; ``None`` disables chunking.
+
+    Scheduling-policy knobs (:mod:`repro.serving.policy`):
+
+    ``priority_classes`` — number of request priority classes; 1 keeps the
+    classless FIFO, ≥2 builds the stock ladder (class 0 = ``critical``:
+    admitted first and profile-bound to the accuracy target; the last
+    class = ``saver``: preemptible). Requests pick their class with
+    :attr:`Request.priority`. ``preemption`` — arm preemptive scheduling:
+    a critical arrival that cannot admit (no free slot, or the block
+    allocator is dry) evicts saver-class rows — their block tables and
+    host-side KV masters are snapshotted (:meth:`~repro.serving.scheduler.
+    ContinuousScheduler.evict_row`) and they resume later through the
+    continuation-prefill executable, token-identically. Requires the paged
+    pool on a ``supports_prefix_sharing`` stack.
     """
 
     slots: int = 4096
@@ -102,6 +116,8 @@ class ServingConfig:
     prefix_capacity: int = 32
     paged_backend: str = "auto"
     prefill_chunk: Optional[int] = None
+    priority_classes: int = 1
+    preemption: bool = False
 
 
 @dataclasses.dataclass
@@ -112,11 +128,17 @@ class Request:
     request retires after exactly ``max_new`` generated tokens (greedy, no
     EOS short-circuit). ``accuracy_critical`` — pins profile selection to
     the accuracy target even in the battery-saver regime (paper §4.4).
+    ``priority`` — priority-class index under a class-aware scheduling
+    policy (0 = most urgent, clamped into the configured ladder; ignored
+    by the classless FIFO). Class membership also binds the profile
+    policy: rows of an accuracy-critical class pin selection like
+    ``accuracy_critical`` does.
     """
 
     tokens: np.ndarray
     max_new: int = 32
     accuracy_critical: bool = False
+    priority: int = 1
 
 
 class AdaptiveServer:
@@ -371,6 +393,29 @@ class AdaptiveServer:
             self._admit_shared = jax.jit(_admit_shared_body,
                                          donate_argnums=(10, 11, 12))
         self._clear_rows = jax.jit(clear_rows_fn, donate_argnums=(1,))
+        # preemption restore: a suspended row re-admits by replaying its own
+        # processed tokens as the continuation prefix — always from the
+        # host-side masters its eviction snapshotted (the row's blocks were
+        # released to the pool), so the master-replay continuation body is
+        # the restore executable at EVERY precision. At int KV that is
+        # literally self._admit_shared (same jit object, zero extra
+        # compiles); at kv16 the pool-gather shared wave cannot serve (there
+        # are no blocks left to gather from), so the master body gets its
+        # own jit — one more admission-side executable per server, while the
+        # pool-lifetime single-_segment invariant is untouched.
+        if serving.preemption and not (serving.paged_kv
+                                       and T.supports_prefix_sharing(cfg)):
+            raise ValueError(
+                "preemption requires the paged KV pool on a full-causal "
+                "attention stack (supports_prefix_sharing): suspended rows "
+                "resume through the continuation-prefill executable")
+        if not serving.preemption:
+            self._admit_restore = None
+        elif serving.kv_bits != 16 and self._admit_shared is not None:
+            self._admit_restore = self._admit_shared
+        else:
+            self._admit_restore = jax.jit(_admit_shared_body,
+                                          donate_argnums=(10, 11, 12))
 
     def _scatter_blocks(self, pool, rows, dest, sidx, bt_rows=None):
         """Scatter dense admission rows into the paged pool (traced helper).

@@ -6,21 +6,33 @@ tables that are plain int32 *data*. Everything that decides **which** physical
 block backs which logical block lives here, on the host, between decode
 segments:
 
-* :class:`BlockAllocator` — a free list with reference counts. A block with
-  ``refcount > 1`` is shared (a registered prefix and/or several live rows map
-  it); it returns to the free list only when the last reference drops. The
-  allocator never touches the device: exhaustion surfaces as ``alloc()``
-  returning ``None``, which the scheduler turns into queue backpressure
-  instead of corrupting a live row.
+* :class:`BlockAllocator` — a free list with reference counts *and a
+  retired-block LRU*. A block with ``refcount > 1`` is shared (several live
+  rows map it); at refcount 0 it either returns to the plain free list or —
+  when a registered prefix still wants its content — parks in the **LRU
+  cached list**: still holding its bytes, immediately reclaimable under
+  allocation pressure (oldest first, with an ``on_reclaim`` callback so the
+  registry drops entries whose backing just vanished), and *resurrectable*
+  by a later admission that hash-matches the retired prompt
+  (:meth:`activate`). Retired prefixes are therefore never hard pool
+  pressure: ``alloc`` sees ``free + lru`` capacity. The allocator never
+  touches the device; exhaustion surfaces as ``alloc()`` returning ``None``,
+  which the scheduler turns into queue backpressure (or a preemption
+  decision) instead of corrupting a live row. Releasing an already-free
+  block raises ``RuntimeError`` — loudly, not as a strippable ``assert`` —
+  because a silent double-release would corrupt the refcounts of whatever
+  request owns the block next.
 * :class:`PrefixRegistry` — content-addressed prefix reuse. Prompts are
   hashed at *block granularity* (the hash of a prefix covers every token in
   it, so two prompts map the same entry iff their first ``k·block_size``
   tokens are identical), and a hit lets admission skip re-running the
   backbone over the prefix and (at kv16) map the already-resident blocks
-  instead of re-storing them. Entries snapshot the full-precision prefix K/V
-  masters + raw max-|K|/|V| so a shared admission can replay *exactly* the
-  attention reads and int-KV scale calibration a cold prefill would have
-  done — what keeps shared admission token-identical to cold.
+  instead of re-storing them — **even after the owning row retired**, as
+  long as real allocation pressure has not reclaimed the LRU-cached blocks.
+  Entries snapshot the full-precision prefix K/V masters + raw max-|K|/|V|
+  so a shared admission can replay *exactly* the attention reads and int-KV
+  scale calibration a cold prefill would have done — what keeps shared
+  admission token-identical to cold.
 
 This mirrors the paper's decoupling of logical computation from physical
 resource binding (the MDC/NN2CAM datapath-merging discipline): the traced
@@ -30,11 +42,52 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Any, Optional
+from typing import Any, Callable, Optional
 
 import numpy as np
 
-__all__ = ["BlockAllocator", "PrefixRegistry", "PrefixEntry", "prefix_keys"]
+__all__ = ["BlockAllocator", "PrefixRegistry", "PrefixEntry", "RowSnapshot",
+           "prefix_keys"]
+
+
+@dataclasses.dataclass
+class RowSnapshot:
+    """Everything a preempted row needs to resume **bit-exactly**.
+
+    Captured by :meth:`ContinuousScheduler.evict_row` the moment a victim
+    is suspended — after which its blocks flow back into the allocator (the
+    LRU free-list for registered prefixes, the free list for the rest) and
+    its slot refills. ``master_k``/``master_v`` (``[L, n_done, Hkv, hd]``
+    float32) are ALL ``n_done`` KV positions the row had written,
+    dequantized from its pool blocks under its then-current scales — at
+    bf16 the float32 upcast round-trips, and for int KV the value whose
+    re-quantization under the same scale reproduces the stored ints
+    bit-for-bit. The resume wave replays them as the *whole* continuation
+    prefix with an **empty suffix**: the restore is pure data movement
+    through the existing continuation-prefill executable — nothing is
+    recomputed, so the restored row is byte-identical to the suspended one
+    by construction, not by floating-point luck (the repo's recompute-based
+    continuation paths are exact only up to bf16 master rounding).
+    ``last_tok`` is the last token the row *emitted* (already delivered):
+    with an empty suffix the wave's argmax is meaningless, so the
+    scheduler re-points the decode carry at the recorded value — together
+    with ``pos = n_done`` that is exactly the carry an uninterrupted row
+    holds. ``pid`` pins the wave to the profile of the row's last
+    pre-eviction step (billing bookkeeping only — with an empty suffix no
+    profile-dependent compute lands in the cache). ``k_amax``/``v_amax``
+    (``[L, Hkv]``, int-KV only) are the exact scale preimages
+    (:func:`repro.models.transformer.amax_for_scale`) that make the
+    restore recalibration land on the suspended scales bit-exactly.
+    """
+
+    rid: int
+    n_done: int
+    last_tok: int
+    pid: int
+    master_k: Any
+    master_v: Any
+    k_amax: Any
+    v_amax: Any
 
 
 def prefix_keys(tokens: np.ndarray, block_size: int) -> list[bytes]:
@@ -62,13 +115,15 @@ def prefix_keys(tokens: np.ndarray, block_size: int) -> list[bytes]:
 
 
 class BlockAllocator:
-    """Refcounted free list over the physical block pool.
+    """Refcounted free list + retired-block LRU over the physical pool.
 
     ``alloc`` hands out blocks at refcount 1 (the owning row); ``retain``
-    adds references (a registry pin, each additional sharer); ``release``
-    drops one reference per block and returns fully-released blocks to the
-    free list. All O(1)-per-block host operations — the device pool is never
-    read or written here.
+    adds references (each additional sharer); ``release`` drops one
+    reference per block and sends fully-released blocks to the free list —
+    or, for ids named in its ``cache`` set, to the LRU cached list, where
+    their content stays resurrectable (:meth:`activate`) until allocation
+    pressure reclaims them oldest-first. All O(1)-per-block host operations
+    — the device pool is never read or written here.
     """
 
     def __init__(self, n_blocks: int, block_size: int):
@@ -77,11 +132,28 @@ class BlockAllocator:
         self.block_size = int(block_size)
         self._free: list[int] = list(range(self.n_blocks - 1, -1, -1))
         self._ref = np.zeros(self.n_blocks, np.int32)
+        self._lru: dict[int, None] = {}      # insertion order = oldest first
+        # called with each block id the moment pressure reclaims it from the
+        # LRU (before the id is handed to its new owner) — the registry
+        # hooks this to drop entries whose backing content just vanished
+        self.on_reclaim: Optional[Callable[[int], None]] = None
+        self.reclaimed_blocks = 0
 
     @property
     def free_blocks(self) -> int:
-        """Blocks immediately available to ``alloc``."""
+        """Blocks with neither a reference nor cached content."""
         return len(self._free)
+
+    @property
+    def lru_blocks(self) -> int:
+        """Retired blocks parked in the LRU: content still resurrectable,
+        capacity still allocatable — cached, not used, not quite free."""
+        return len(self._lru)
+
+    @property
+    def available_blocks(self) -> int:
+        """What ``alloc`` can satisfy: free blocks plus reclaimable LRU."""
+        return len(self._free) + len(self._lru)
 
     @property
     def used_blocks(self) -> int:
@@ -95,26 +167,81 @@ class BlockAllocator:
         return self._ref.copy()
 
     def alloc(self, n: int) -> Optional[list[int]]:
-        """Take ``n`` blocks (refcount 1 each); ``None`` if fewer are free —
-        the caller's backpressure signal, never a partial allocation."""
-        if n > len(self._free):
+        """Take ``n`` blocks (refcount 1 each); ``None`` if fewer than ``n``
+        are free-or-cached — the caller's backpressure signal, never a
+        partial allocation. Free blocks go first; only then does pressure
+        reclaim LRU-cached content, oldest first, announcing each casualty
+        through ``on_reclaim`` so prefix entries backed by it die with it.
+        """
+        if n > len(self._free) + len(self._lru):
             return None
-        ids = [self._free.pop() for _ in range(n)]
-        self._ref[ids] = 1
+        ids: list[int] = []
+        # free and LRU are re-consulted every draw: reclaiming one block can
+        # kill an entry whose OTHER blocks then move LRU → free (uncache of
+        # newly-orphaned companions), and those must be preferred over
+        # reclaiming more cached content. free+lru is conserved by that
+        # move, so the up-front capacity check stays sufficient.
+        while len(ids) < n:
+            if self._free:
+                ids.append(self._free.pop())
+                continue
+            bid = next(iter(self._lru))              # oldest cached block
+            del self._lru[bid]
+            if self.on_reclaim is not None:
+                self.on_reclaim(bid)
+            self.reclaimed_blocks += 1
+            ids.append(bid)
+        for b in ids:
+            self._ref[b] = 1
         return ids
 
     def retain(self, ids) -> None:
-        """Add one reference to each block (registry pin / extra sharer)."""
+        """Add one reference to each live block (an extra sharer)."""
         for b in ids:
-            assert self._ref[b] > 0, f"retain of free block {b}"
+            if self._ref[b] <= 0:
+                raise RuntimeError(f"retain of free block {b}")
             self._ref[b] += 1
 
-    def release(self, ids) -> None:
-        """Drop one reference per block; fully-released blocks become free."""
+    def activate(self, ids) -> bool:
+        """All-or-nothing claim of possibly-retired blocks: live blocks gain
+        a reference, LRU-cached blocks resurrect at refcount 1. ``False``
+        (and no state change) if any id was already reclaimed — the
+        registry-hit-on-retired-blocks path's validity check."""
         for b in ids:
-            assert self._ref[b] > 0, f"release of free block {b}"
+            if self._ref[b] <= 0 and b not in self._lru:
+                return False
+        for b in ids:
+            if self._ref[b] > 0:
+                self._ref[b] += 1
+            else:
+                del self._lru[b]
+                self._ref[b] = 1
+        return True
+
+    def release(self, ids, cache=()) -> None:
+        """Drop one reference per block. Fully-released blocks become free —
+        or park in the LRU cached list when named in ``cache`` (a registered
+        prefix still wants their content). Releasing an id that is already
+        free (including the same id twice in one call) raises
+        ``RuntimeError`` instead of silently corrupting the refcount of the
+        block's next owner."""
+        for b in ids:
+            if self._ref[b] <= 0:
+                raise RuntimeError(
+                    f"double release of block {b} (refcount already 0)")
             self._ref[b] -= 1
             if self._ref[b] == 0:
+                if b in cache:
+                    self._lru[int(b)] = None         # MRU end
+                else:
+                    self._free.append(int(b))
+
+    def uncache(self, ids) -> None:
+        """Drop cached content claims (a registry entry died): LRU-parked
+        ids move to the plain free list; live or already-free ids no-op."""
+        for b in ids:
+            if b in self._lru:
+                del self._lru[b]
                 self._free.append(int(b))
 
 
@@ -125,11 +252,14 @@ class PrefixEntry:
     ``block_ids`` are the pool blocks holding the prefix KV (kv16 only —
     int-KV rows carry per-row scales, so their blocks are not bit-shareable
     across rows and shared admissions requantize from the masters instead).
-    ``master_k``/``master_v`` (per layer ``[L, n_tokens, Hkv, hd]``, full
-    precision) and ``k_amax``/``v_amax`` (``[L, Hkv]`` raw max-abs over the
-    prefix) let a shared admission reproduce the cold path exactly.
-    ``sharers`` counts live rows currently mapping ``block_ids``; an entry is
-    evictable only at zero.
+    They are a *soft* claim: while any sharer is live the blocks carry
+    references; after the last sharer retires they park in the allocator's
+    LRU, where a later hit resurrects them — and real allocation pressure
+    reclaims them, killing the entry. ``master_k``/``master_v`` (per layer
+    ``[L, n_tokens, Hkv, hd]``, full precision) and ``k_amax``/``v_amax``
+    (``[L, Hkv]`` raw max-abs over the prefix) let a shared admission
+    reproduce the cold path exactly. ``sharers`` counts live rows currently
+    mapping ``block_ids``; an entry is capacity-evictable only at zero.
     """
 
     key: bytes
@@ -146,10 +276,13 @@ class PrefixEntry:
 class PrefixRegistry:
     """LRU registry of reusable prompt prefixes.
 
-    ``capacity`` bounds host+device memory held by masters; when the
-    allocator runs dry, :meth:`evict_for` additionally drops idle entries to
-    hand their pinned blocks back. Lookup order is longest-prefix-first over
-    the hashes computed at enqueue (:func:`prefix_keys`).
+    ``capacity`` bounds host+device memory held by masters. Block-backed
+    (kv16) entries hold their blocks softly through the allocator's
+    retired-block LRU: registration pins nothing, retirement parks, real
+    pressure reclaims (the allocator's ``on_reclaim`` callback drops the
+    affected entries the moment their backing goes). Lookup order is
+    longest-prefix-first over the hashes computed at enqueue
+    (:func:`prefix_keys`).
     """
 
     def __init__(self, allocator: BlockAllocator, capacity: int = 8):
@@ -157,8 +290,11 @@ class PrefixRegistry:
         self.alloc = allocator
         self.capacity = int(capacity)
         self._entries: dict[bytes, PrefixEntry] = {}   # insertion = LRU order
+        self._by_block: dict[int, set[bytes]] = {}     # bid -> entry keys
         self.hits = 0
         self.misses = 0
+        self.invalidated = 0           # entries killed by block reclaim
+        allocator.on_reclaim = self._block_reclaimed
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -173,7 +309,8 @@ class PrefixRegistry:
         Pure read: hit/miss counters and LRU recency move only when an
         admission actually commits (:meth:`record_admission`) — a request
         re-looked-up on every scheduler tick while backpressured must not
-        inflate the stats or churn the eviction order.
+        inflate the stats or churn the eviction order. Block-backed entries
+        are always resident when returned: reclaim invalidates eagerly.
         """
         for key in keys:
             e = self._entries.get(key)
@@ -196,70 +333,128 @@ class PrefixRegistry:
     def register(self, key: bytes, n_tokens: int,
                  block_ids: Optional[list[int]],
                  master_k, master_v, k_amax, v_amax) -> Optional[PrefixEntry]:
-        """Pin a prefix for reuse (no-op if already registered).
+        """Record a prefix for reuse (no-op if already registered).
 
-        ``block_ids`` get one extra reference so they outlive the owning
-        row's retirement. Over-capacity registration evicts the least
-        recently used idle entry first; if every entry is in live use the
-        new one is simply not registered.
+        ``block_ids`` are claimed *softly*: no refcount moves here — the
+        owning row's live references keep them resident now, and its
+        retirement parks them in the allocator LRU (the scheduler passes
+        :meth:`covered` ids to ``release``). Over-capacity registration
+        evicts the least recently used idle entry first; if every entry is
+        in live use the new one is simply not registered.
         """
         if key in self._entries:
             return self._entries[key]
         while len(self._entries) >= self.capacity:
             if not self._evict_one():
                 return None
-        if block_ids is not None:
-            self.alloc.retain(block_ids)
         e = PrefixEntry(key=key, n_tokens=n_tokens,
                         block_ids=None if block_ids is None
                         else list(block_ids),
                         master_k=master_k, master_v=master_v,
                         k_amax=k_amax, v_amax=v_amax)
         self._entries[key] = e
+        for b in (e.block_ids or ()):
+            self._by_block.setdefault(int(b), set()).add(key)
         return e
 
+    def register_chain(self, keys: list[bytes], j_max: int, blocks,
+                       mk, mv) -> None:
+        """Offer every key of one prompt's block-aligned prefix chain,
+        longest first — key ``i`` of ``keys`` covers ``(j_max − i)``
+        blocks. Every key is offered (``register`` no-ops on present ones)
+        because LRU/reclaim eviction removes single entries, so a present
+        long key does NOT imply its shorter companions survived. At kv16
+        (``mk is None``) each entry claims the row's leading blocks softly
+        — the pool's bf16 blocks double as the masters, nothing else is
+        stored. At int KV precisions entries share the ONE master buffer
+        ``mk``/``mv`` (already truncated to ``j_max`` blocks) and snapshot
+        per-length raw amax — O(chain), not O(chain²), memory.
+        """
+        if j_max < 1 or not keys:
+            return
+        import jax.numpy as jnp
+        bs = self.alloc.block_size
+        for i, key in enumerate(keys):           # longest first
+            if self.contains(key):
+                continue
+            n_blk = j_max - i
+            n_tok = n_blk * bs
+            if mk is None:                       # kv16: pool blocks = masters
+                self.register(key, n_tok, blocks[:n_blk],
+                              None, None, None, None)
+            else:
+                ka = jnp.max(jnp.abs(mk[:, :n_tok]), axis=(1, 3))
+                va = jnp.max(jnp.abs(mv[:, :n_tok]), axis=(1, 3))
+                self.register(key, n_tok, None, mk, mv, ka, va)
+
     def acquire(self, entry: PrefixEntry) -> None:
-        """A row starts mapping the entry's blocks (kv16: refcount them)."""
+        """A row starts mapping the entry's blocks: live blocks gain a
+        reference, retired-but-cached ones resurrect from the LRU. Entries
+        handed out by :meth:`lookup` are resident by construction (eager
+        invalidation), so activation cannot fail."""
         entry.sharers += 1
         if entry.block_ids is not None:
-            self.alloc.retain(entry.block_ids)
+            ok = self.alloc.activate(entry.block_ids)
+            if not ok:                           # unreachable by contract
+                raise RuntimeError(
+                    f"registry entry {entry.key.hex()[:8]} outlived its "
+                    f"blocks — reclaim invalidation failed")
 
     def release(self, entry: PrefixEntry) -> None:
-        """A sharing row retired; drop its references."""
+        """A sharing row retired; its block references drop — and blocks
+        reaching refcount 0 park in the allocator LRU (the entry still
+        wants them) instead of the free list."""
         entry.sharers -= 1
         assert entry.sharers >= 0
         if entry.block_ids is not None:
-            self.alloc.release(entry.block_ids)
+            self.alloc.release(entry.block_ids,
+                               cache=self.covered(entry.block_ids))
+
+    def covered(self, ids) -> set:
+        """The subset of ``ids`` some registered entry still claims — the
+        ``cache`` set for :meth:`BlockAllocator.release`: covered blocks
+        park in the LRU at refcount 0, uncovered ones go straight free."""
+        return {int(b) for b in ids if int(b) in self._by_block}
+
+    def _unindex(self, e: PrefixEntry) -> None:
+        """Remove an entry's block claims; blocks left wholly unclaimed
+        lose their LRU parking spot (content nobody can ever hit again)."""
+        orphans = []
+        for b in (e.block_ids or ()):
+            keys = self._by_block.get(int(b))
+            if keys is None:
+                continue
+            keys.discard(e.key)
+            if not keys:
+                del self._by_block[int(b)]
+                orphans.append(int(b))
+        if orphans:
+            self.alloc.uncache(orphans)
+
+    def _block_reclaimed(self, bid: int) -> None:
+        """Allocator callback: pressure reclaimed a cached block — every
+        entry backed by it is now unreproducible and dies with it. Entries
+        with live sharers are unreachable here (their blocks carry
+        references and cannot sit in the LRU)."""
+        for key in list(self._by_block.get(int(bid), ())):
+            e = self._entries.pop(key, None)
+            if e is None:
+                continue
+            assert e.sharers == 0, "live-shared entry backed by LRU block"
+            self.invalidated += 1
+            # the reclaimed id itself is being handed out by alloc();
+            # only the entry's *other* blocks need their claims dropped
+            e.block_ids = [b for b in e.block_ids if int(b) != int(bid)]
+            self._unindex(e)
+        self._by_block.pop(int(bid), None)
 
     def _evict_one(self) -> bool:
         for key, e in self._entries.items():
             if e.sharers == 0:
                 self._entries.pop(key)
-                if e.block_ids is not None:
-                    self.alloc.release(e.block_ids)
+                self._unindex(e)
                 return True
         return False
-
-    def evict_for(self, n_needed: int) -> None:
-        """Free idle entries (LRU first) until ``n_needed`` blocks are
-        allocatable or nothing evictable remains."""
-        while self.alloc.free_blocks < n_needed and self._evict_one():
-            pass
-
-    def pinned_counts(self, n_blocks: int) -> np.ndarray:
-        """Per-block registry pin counts (one pin per entry retaining the
-        block). The occupancy-reporting counterpart of
-        :meth:`BlockAllocator.refcounts`: a block whose refcount equals its
-        pin count is held *only* by registered prefixes — resident pool
-        pressure that survives its last sharer's retirement, never free
-        capacity. Kept here so both sides of the one-retain-per-entry
-        invariant live in one module."""
-        pin = np.zeros(n_blocks, np.int32)
-        for e in self._entries.values():
-            if e.block_ids is not None:
-                for b in e.block_ids:
-                    pin[b] += 1
-        return pin
 
     def nbytes(self) -> int:
         """Device bytes pinned by prefix masters (counted by the bench as

@@ -1,0 +1,267 @@
+"""Scheduling policy layer: priority classes, profile binding, preemption.
+
+The paper's runtime adaptivity (§4.4) is a *per-request-class* trade of
+accuracy against energy — which the serving layer can only realize if the
+scheduler knows about classes at all. This module is that knowledge,
+factored out of the execution core (:class:`repro.serving.scheduler.
+ContinuousScheduler`, which keeps only wave dispatch, segment running and
+flush):
+
+* :class:`PriorityClass` — one request class: an urgency ``level`` (lower =
+  more urgent), a **profile binding** (``accuracy_critical`` pins the
+  :class:`~repro.core.manager.ProfileManager` selection to the accuracy
+  target even in the battery-saver regime — the paper's "critical
+  circumstances" made first-class), and the preemption contract
+  (``preemptible`` / ``can_preempt``).
+* :class:`SchedulingPolicy` — the pluggable queue discipline. The execution
+  core never touches request ordering directly: it asks the policy for the
+  next admission candidate (:meth:`head`), reports waves for billing
+  semantics (:meth:`wave_critical`), and hands over preemption decisions
+  (:meth:`pick_victims`). :class:`FifoPolicy` reproduces the pre-policy
+  scheduler exactly (single FIFO, no classes, no preemption);
+  :class:`PriorityPolicy` runs per-class FIFOs with strict
+  lowest-level-first admission.
+* Victim selection is itself pluggable (``victim_picker``): the default
+  picks the lowest class first and, within a class, the row with the
+  fewest generated tokens — the cheapest row to suspend and resume, since
+  the snapshot/replay cost of :meth:`ContinuousScheduler.evict_row` grows
+  with the tokens processed. Selection is all-or-nothing: evicting rows
+  without admitting the arrival would burn suspend/resume work for
+  nothing.
+
+Nothing in here touches the device: policies are pure host-side decision
+objects, so swapping one (or unit-testing one) never recompiles anything.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, NamedTuple, Optional, Sequence
+
+__all__ = ["PriorityClass", "RowState", "SchedulingPolicy", "FifoPolicy",
+           "PriorityPolicy", "default_classes", "default_victim_picker",
+           "make_policy"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PriorityClass:
+    """One request priority class.
+
+    ``level`` orders admission (lower = more urgent; class 0 is served
+    first). ``accuracy_critical`` is the class's *profile binding*: every
+    wave or decode step with a live row of this class selects profiles with
+    ``accuracy_critical=True``, pinning the ProfileManager to the accuracy
+    target even in battery-saver mode. ``preemptible`` marks rows of this
+    class as evictable; ``can_preempt`` lets arrivals of this class evict
+    strictly-lower classes when slots or KV blocks run dry.
+    """
+
+    name: str
+    level: int
+    accuracy_critical: bool = False
+    preemptible: bool = True
+    can_preempt: bool = False
+
+
+def default_classes(n: int) -> tuple[PriorityClass, ...]:
+    """The stock ``n``-class ladder (``--priority-classes n``).
+
+    One class degrades to the classless FIFO contract. Two gives
+    ``critical`` (accuracy-pinned, non-preemptible, may preempt) over
+    ``saver``. Three and more insert ``standard`` tiers in between —
+    preemptible by critical arrivals but never preempting anyone.
+    """
+    if n <= 1:
+        return (PriorityClass("standard", 0),)
+    crit = PriorityClass("critical", 0, accuracy_critical=True,
+                         preemptible=False, can_preempt=True)
+    saver = PriorityClass("saver", n - 1)
+    mids = tuple(PriorityClass(f"standard{i}" if n > 3 else "standard", i)
+                 for i in range(1, n - 1))
+    return (crit,) + mids + (saver,)
+
+
+class RowState(NamedTuple):
+    """Preemption-relevant view of one live pool row (host bookkeeping)."""
+
+    slot: int
+    rid: int
+    level: int
+    generated: int        # tokens emitted so far (snapshot/resume cost)
+    blocks: int           # private blocks eviction would return to the pool
+    preemptible: bool
+
+
+def default_victim_picker(arrival_level: int, rows: Sequence[RowState],
+                          need_slots: int, need_blocks: int
+                          ) -> list[RowState]:
+    """Lowest class first, fewest generated tokens first, all-or-nothing.
+
+    Only rows of a *strictly lower* class (``level > arrival_level``) are
+    candidates — equal-class traffic never preempts itself, so a class
+    cannot starve under its own load. Returns the shortest victim prefix
+    that frees ``need_slots`` slots and ``need_blocks`` blocks, or ``[]``
+    if no prefix does (partial eviction would suspend rows without
+    admitting anyone).
+    """
+    cands = sorted((r for r in rows
+                    if r.preemptible and r.level > arrival_level),
+                   key=lambda r: (-r.level, r.generated))
+    out: list[RowState] = []
+    got_blocks = 0
+    for r in cands:
+        if len(out) >= need_slots and got_blocks >= need_blocks:
+            break
+        out.append(r)
+        got_blocks += r.blocks
+    if len(out) >= need_slots and got_blocks >= need_blocks:
+        return out
+    return []
+
+
+class SchedulingPolicy:
+    """Queue discipline + class semantics behind the execution core.
+
+    Subclasses own the pending-request ordering; the scheduler only ever
+    calls :meth:`enqueue` / :meth:`head` / :meth:`pop_head` /
+    :meth:`push_front` (the rollback/resume path re-inserts at the front of
+    the request's class so relative order within a class is preserved).
+    """
+
+    classes: tuple[PriorityClass, ...] = (PriorityClass("standard", 0),)
+    preemptive: bool = False
+
+    def klass(self, request) -> PriorityClass:
+        """The class a request belongs to (``request.priority`` clamped
+        into the table — FIFO policies map everything to class 0)."""
+        i = min(max(int(getattr(request, "priority", 0)), 0),
+                len(self.classes) - 1)
+        return self.classes[i]
+
+    def bind_critical(self, request) -> bool:
+        """Resolved accuracy-critical flag: the class's profile binding
+        OR'd with the request's own flag (a critical request in a saver
+        class still pins accuracy — the paper's per-request escape hatch)."""
+        return bool(request.accuracy_critical
+                    or self.klass(request).accuracy_critical)
+
+    def wave_critical(self, requests) -> bool:
+        """Profile binding of one admission wave (any bound row pins it)."""
+        return any(self.bind_critical(r) for r in requests)
+
+    # ---- queue discipline (subclass responsibility) ----------------------
+    def enqueue(self, rid: int, request) -> None:
+        raise NotImplementedError
+
+    def head(self) -> Optional[int]:
+        """Next admission candidate's rid (None when nothing waits)."""
+        raise NotImplementedError
+
+    def pop_head(self) -> int:
+        raise NotImplementedError
+
+    def push_front(self, rid: int, request) -> None:
+        """Re-insert at the front of the request's class (rollback of a
+        failed admission, or a suspended row queued for resume)."""
+        raise NotImplementedError
+
+    def __len__(self) -> int:
+        raise NotImplementedError
+
+    # ---- preemption ------------------------------------------------------
+    def pick_victims(self, request, rows: Sequence[RowState],
+                     need_slots: int, need_blocks: int) -> list[RowState]:
+        """Victim rows to evict so ``request`` can admit; ``[]`` = don't."""
+        return []
+
+
+class FifoPolicy(SchedulingPolicy):
+    """The pre-policy scheduler, verbatim: one FIFO, no classes, no
+    preemption. ``priority`` fields are ignored; profile binding reduces to
+    each request's own ``accuracy_critical`` flag."""
+
+    def __init__(self):
+        self.classes = (PriorityClass("standard", 0),)
+        self._q: deque[int] = deque()
+
+    def klass(self, request) -> PriorityClass:
+        return self.classes[0]
+
+    def enqueue(self, rid: int, request) -> None:
+        self._q.append(rid)
+
+    def head(self) -> Optional[int]:
+        return self._q[0] if self._q else None
+
+    def pop_head(self) -> int:
+        return self._q.popleft()
+
+    def push_front(self, rid: int, request) -> None:
+        self._q.appendleft(rid)
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+
+class PriorityPolicy(SchedulingPolicy):
+    """Per-class FIFOs, served strictly lowest-level-first.
+
+    Within a class, order is submission order (resumed / rolled-back
+    requests re-enter at the front of their class). ``preemptive`` arms
+    :meth:`pick_victims`; ``victim_picker`` is the pluggable selection
+    strategy (:func:`default_victim_picker` unless overridden).
+    """
+
+    def __init__(self, classes: Sequence[PriorityClass],
+                 preemptive: bool = False,
+                 victim_picker: Optional[Callable] = None):
+        assert classes, "at least one priority class"
+        self.classes = tuple(sorted(classes, key=lambda c: c.level))
+        assert [c.level for c in self.classes] == list(range(len(
+            self.classes))), "class levels must be 0..n-1"
+        self.preemptive = bool(preemptive)
+        self.victim_picker = victim_picker or default_victim_picker
+        self._q: dict[int, deque[int]] = {c.level: deque()
+                                          for c in self.classes}
+
+    def enqueue(self, rid: int, request) -> None:
+        self._q[self.klass(request).level].append(rid)
+
+    def head(self) -> Optional[int]:
+        for lvl in range(len(self.classes)):
+            if self._q[lvl]:
+                return self._q[lvl][0]
+        return None
+
+    def pop_head(self) -> int:
+        for lvl in range(len(self.classes)):
+            if self._q[lvl]:
+                return self._q[lvl].popleft()
+        raise IndexError("pop from empty policy queue")
+
+    def push_front(self, rid: int, request) -> None:
+        self._q[self.klass(request).level].appendleft(rid)
+
+    def __len__(self) -> int:
+        return sum(len(q) for q in self._q.values())
+
+    def pick_victims(self, request, rows: Sequence[RowState],
+                     need_slots: int, need_blocks: int) -> list[RowState]:
+        if not self.preemptive:
+            return []
+        k = self.klass(request)
+        if not k.can_preempt:
+            return []
+        return self.victim_picker(k.level, rows, need_slots, need_blocks)
+
+
+def make_policy(scfg) -> SchedulingPolicy:
+    """Policy for a :class:`~repro.serving.engine.ServingConfig`:
+    ``priority_classes > 1`` (or ``preemption``) builds the stock
+    :class:`PriorityPolicy` ladder, anything else the exact legacy
+    :class:`FifoPolicy`."""
+    n = int(getattr(scfg, "priority_classes", 1) or 1)
+    if n > 1 or getattr(scfg, "preemption", False):
+        return PriorityPolicy(default_classes(max(2, n)),
+                              preemptive=bool(scfg.preemption))
+    return FifoPolicy()

@@ -1,11 +1,18 @@
-"""Continuous-batching scheduler over the fused decode scan.
+"""Continuous-batching execution core over the fused decode scan.
 
 The paper's runtime (§4.4, Fig. 4) is an adaptive inference engine that keeps
 serving under a shifting energy budget — which presumes the serving layer
 keeps the device *busy* under real, heterogeneous traffic. Static grouped
 ``serve()`` can't: a group must finish entirely before the next one starts, so
 every finished row burns decode steps as dead padding and every queued request
-waits for the whole group. This module replaces that with continuous batching:
+waits for the whole group. This module replaces that with continuous batching.
+
+Since the policy refactor this class is the **execution core** only: it owns
+wave dispatch, segment running, flush, and the paged-block bookkeeping.
+*Which* request admits next, which class binds which profile, and who gets
+preempted for whom live in :mod:`repro.serving.policy`; the physical block
+economy (refcounts, the retired-block LRU, prefix registration) lives in
+:mod:`repro.serving.paged`.
 
 **Slot pool.** The scheduler owns a fixed ``[max_batch]`` row pool whose
 decode state (last token, position, KV/SSM caches) lives on device and is
@@ -19,7 +26,7 @@ capacity dispatch drops them via ``row_valid``).
 dispatch, all shapes static in ``(max_batch, quantum)``, so every segment of
 the server's lifetime reuses ONE compiled executable no matter which rows are
 live. The quantum is the admission latency knob: between segments, retired
-rows are refilled from the FIFO queue by an *admission wave* — one ragged
+rows are refilled from the policy queue by an *admission wave* — one ragged
 prefill of every waiting request (rows bucketed to a power of two, prompts
 left-padded to a power-of-two length bucket with ``prompt_len`` riding as
 data → compile count log² rather than one executable per shape) whose
@@ -37,23 +44,43 @@ design): a row holds only the blocks its ``prompt + max_new`` actually
 touch instead of a whole ``[slots]`` reservation, hash-matched prompt
 prefixes are admitted with a suffix-only prefill against blocks that are
 mapped rather than recomputed and re-stored, and a dry allocator turns into
-FIFO queue backpressure rather than corruption.
+queue backpressure — or, under a preemptive policy, a preemption decision —
+rather than corruption.
+
+**Preemption.** With :class:`ServingConfig.preemption`, an urgent arrival
+that cannot admit evicts policy-chosen victim rows: :meth:`evict_row`
+flushes, snapshots the victim's block table + host-side KV masters
+(:class:`~repro.serving.paged.RowSnapshot`), releases its blocks (registered
+prefixes park in the allocator's retired-block LRU), unmaps its table, and
+requeues it at the front of its class. The suspended row later *resumes*
+through the existing continuation-prefill executable — its whole written
+span replayed as the prefix with an empty suffix, pure data movement that
+rebuilds cache bytes, scales and carry **bit-exactly** — so a resumed row
+continues token-identically to an uninterrupted run by construction, at
+kv16 and kv8, shared-CoW rows included. An admission
+round dispatches at most TWO prefill waves (cold / shared / resume — a
+third kind waits a round), and every decode segment still runs the one
+pool-lifetime ``_segment`` executable; ``tests/test_scheduler_policy.py``
+guards both.
 
 **Why re-planning per segment keeps the ledger exact.** The
 :class:`ProfileManager` policy is deterministic given its energy ledger, so
 profile ids can be precomputed as data — but only as far ahead as the set of
 live rows is known. A whole-generation schedule would bill rows that finish
 (or get admitted) mid-flight. Planning exactly one segment ahead, with
-:meth:`ProfileManager.plan_schedule_ragged` over the *actual* per-row
-remaining budgets, bills step ``i`` for precisely the rows live at step ``i``
-— the same ledger evolution as a per-step select/account oracle (admission
-prefills are billed like the stepwise engine bills prefill: one inference).
-Every billing event is recorded in :attr:`ContinuousScheduler.events` so the
-tests can replay the ledger against that oracle.
+:meth:`ProfileManager.plan_schedule_classes` over the *actual* per-row
+remaining budgets and priority-class bindings, bills step ``i`` for precisely
+the rows live at step ``i`` — the same ledger evolution as a per-step
+select/account oracle (admission prefills are billed like the stepwise
+engine bills prefill: one inference). Suspension and resume bill **nothing
+new**: the resume wave recomputes a token the row already emitted (and was
+billed for), so a request's total billed inferences are invariant under
+preemption. Every billing event is recorded in
+:attr:`ContinuousScheduler.events` so the tests can replay the ledger
+against that oracle.
 """
 from __future__ import annotations
 
-from collections import deque
 from typing import Optional
 
 import jax.numpy as jnp
@@ -61,16 +88,22 @@ import numpy as np
 
 from repro.models import transformer as T
 from .engine import AdaptiveServer, Request, _next_pow2
-from .paged import BlockAllocator, PrefixRegistry, prefix_keys
+from .paged import BlockAllocator, PrefixRegistry, RowSnapshot, prefix_keys
+from .policy import RowState, SchedulingPolicy, make_policy
 
 __all__ = ["ContinuousScheduler"]
 
 
 class ContinuousScheduler:
-    """FIFO continuous batching on an :class:`AdaptiveServer`'s slot pool.
+    """Continuous batching on an :class:`AdaptiveServer`'s slot pool.
 
     ``quantum`` = decode steps per segment (admission latency vs dispatch
-    overhead); ``prefill_bucket`` = minimum power-of-two prompt padding.
+    overhead); ``prefill_bucket`` = minimum power-of-two prompt padding;
+    ``policy`` = the :class:`~repro.serving.policy.SchedulingPolicy` that
+    owns request ordering, class→profile binding and preemption (defaults
+    to the one :func:`~repro.serving.policy.make_policy` derives from the
+    server's :class:`ServingConfig` — the exact legacy FIFO unless
+    ``priority_classes``/``preemption`` say otherwise).
 
     With ``ServingConfig.paged_kv`` (the default for attention stacks) the
     pool's KV state is *paged*: a global pool of fixed-size blocks plus
@@ -78,9 +111,12 @@ class ContinuousScheduler:
     Admission allocates exactly the blocks a request will touch
     (``ceil((prompt + max_new) / block_size)``, capped at the row's logical
     table) from a refcounted :class:`~repro.serving.paged.BlockAllocator`;
-    retirement returns them. When the allocator cannot satisfy the FIFO
-    head, admission simply stops for this wave — queue backpressure, never
-    corruption of a live row — and resumes as rows retire (a request that
+    retirement returns them — blocks a registered prefix still wants park
+    in the allocator's retired-block LRU, where a later hash-matched
+    admission resurrects them and real pressure reclaims them. When the
+    allocator cannot satisfy the head of the policy queue, admission simply
+    stops for this wave — queue backpressure, never corruption of a live
+    row — unless a preemptive policy elects victims instead (a request that
     could never fit the whole pool is rejected at :meth:`submit`). With
     ``prefix_cache``, prompts are block-hashed at enqueue and matched
     against a :class:`~repro.serving.paged.PrefixRegistry` at admission:
@@ -89,7 +125,8 @@ class ContinuousScheduler:
     """
 
     def __init__(self, server: AdaptiveServer, quantum: int = 8,
-                 prefill_bucket: int = 8, record_events: bool = True):
+                 prefill_bucket: int = 8, record_events: bool = True,
+                 policy: Optional[SchedulingPolicy] = None):
         """Build a scheduler (pool state + host bookkeeping) on ``server``.
 
         The jitted executables live on the server and are shared; the
@@ -108,6 +145,13 @@ class ContinuousScheduler:
         cfg, scfg = server.cfg, server.scfg
         nslots = self.n_slots = scfg.max_batch
         self.paged = bool(scfg.paged_kv) and cfg.has_attn
+        self.policy = policy if policy is not None else make_policy(scfg)
+        if self.policy.preemptive and (not self.paged
+                                       or server._admit_restore is None):
+            raise ValueError(
+                "a preemptive policy needs the paged pool and a server "
+                "built with ServingConfig.preemption=True (the restore "
+                "executable) on a supports_prefix_sharing stack")
         # device-resident pool state (donated through every jit below)
         if self.paged:
             self.block_size = server.block_size
@@ -125,11 +169,12 @@ class ContinuousScheduler:
             self._slot_blocks: list = [None] * nslots  # (private_ids, entry)
             self._prefix_keys: dict[int, list[bytes]] = {}
             self.peak_used_blocks = 0
-            # chunked prefill: long cold prompts prefill in block-aligned
-            # chunks that interleave with decode segments instead of one
-            # monolithic admission wave. A mid-admission row occupies its
-            # slot + blocks but is not yet live (remaining == 0); its state
-            # lives here until the final chunk lands.
+            # chunked prefill: long cold prompts (and registry hits with a
+            # long unique suffix) prefill in block-aligned chunks that
+            # interleave with decode segments instead of one monolithic
+            # admission wave. A mid-admission row occupies its slot +
+            # blocks but is not yet live (remaining == 0); its state lives
+            # here until the final chunk lands.
             self.chunk = server.chunk_tokens
             self._chunk_state: dict[int, dict] = {}    # slot -> progress
         else:
@@ -143,10 +188,13 @@ class ContinuousScheduler:
         self.remaining = np.zeros((nslots,), np.int64)   # tokens left to emit
         self.slot_req: list[Optional[int]] = [None] * nslots
         self._slot_crit = np.zeros((nslots,), bool)
-        self.queue: deque[int] = deque()                 # FIFO pending rids
+        self._slot_level = np.zeros((nslots,), np.int32)
         self._reqs: dict[int, Request] = {}
+        self._suspended: dict[int, RowSnapshot] = {}     # rid -> snapshot
         self.results: dict[int, dict] = {}
         self._n = 0
+        self.preemptions = 0
+        self.resumes = 0
         self.admission_log: list[int] = []               # rids, admission order
         self.events: list[tuple[int, int, bool]] = []    # (pid, n_rows, crit)
         self._done: list[int] = []                       # completions, in order
@@ -157,6 +205,7 @@ class ContinuousScheduler:
         self._admit = server._admit
         self._admit_paged = server._admit_paged
         self._admit_shared = server._admit_shared
+        self._admit_restore = server._admit_restore
         self._clear = server._clear_rows
 
     # ------------------------------------------------------------- paged util
@@ -167,38 +216,43 @@ class ContinuousScheduler:
         return min(self.n_lblk,
                    -(-(prompt_len + max_new) // self.block_size))
 
+    def _release_blocks(self, blocks) -> None:
+        """Return a row's private blocks: ones a registered prefix still
+        covers park in the allocator's retired-block LRU (resurrectable by
+        a later hash-matched admission, reclaimable under real pressure);
+        the rest go straight to the free list."""
+        self.allocator.release(
+            blocks, cache=(self.registry.covered(blocks)
+                           if self.registry is not None else ()))
+
     def paged_stats(self) -> dict:
         """Block-pool occupancy + prefix-registry counters (bench JSON).
 
-        Occupancy is **refcount-accurate**: ``used_blocks`` derives from the
-        allocator's per-block reference counts (not the free-list length)
-        and splits into ``live_blocks`` (at least one live-row reference)
-        vs ``registry_only_blocks`` (blocks a registered prefix keeps
-        resident after their last sharer retired — still pool pressure,
-        not free capacity, which is what the bench's saving assertion must
-        measure).
+        Occupancy is **refcount-accurate** and three-way: ``live_blocks``
+        (at least one live-row reference, derived from the allocator's
+        refcounts — ``used_blocks`` is its alias), ``lru_cached_blocks``
+        (retired blocks whose content a registered prefix still wants:
+        allocatable capacity AND resurrectable cache, the retired-block
+        LRU), and ``free_blocks`` (neither). The three always partition
+        the pool — the bench asserts it as a cross-check between the
+        refcount, LRU, and free-list bookkeeping.
         """
         if not self.paged:
             return {"paged": False,
                     "kv_bytes": T.cache_bytes(self._caches)}
-        ref = self.allocator.refcounts()
-        pin = (self.registry.pinned_counts(self.allocator.n_blocks)
-               if self.registry is not None else np.zeros_like(ref))
-        used = int((ref > 0).sum())
-        registry_only = int(((ref > 0) & (ref <= pin)).sum())
+        live = self.allocator.used_blocks
         out = {
             "paged": True,
             "block_size": self.block_size,
             "pool_blocks": self.allocator.n_blocks,
-            "used_blocks": used,
-            "live_blocks": used - registry_only,
-            "registry_only_blocks": registry_only,
+            "used_blocks": live,
+            "live_blocks": live,
+            "lru_cached_blocks": self.allocator.lru_blocks,
+            "reclaimed_blocks": self.allocator.reclaimed_blocks,
             "peak_used_blocks": self.peak_used_blocks,
-            # deliberately the free-LIST length, while used_blocks derives
-            # from refcounts: used + free == pool is then a real cross-check
-            # between the two bookkeeping structures (the bench asserts it),
-            # not an arithmetic identity
             "free_blocks": self.allocator.free_blocks,
+            "preemptions": self.preemptions,
+            "resumes": self.resumes,
             "kv_bytes": T.cache_bytes(self._caches),
             "registry_bytes": 0,
         }
@@ -206,12 +260,13 @@ class ContinuousScheduler:
             out.update(registry_entries=len(self.registry),
                        registry_hits=self.registry.hits,
                        registry_misses=self.registry.misses,
+                       registry_invalidated=self.registry.invalidated,
                        registry_bytes=self.registry.nbytes())
         return out
 
     # ------------------------------------------------------------------ queue
     def submit(self, request: Request) -> int:
-        """Enqueue a request (FIFO). Returns its request id.
+        """Enqueue a request with the scheduling policy. Returns its id.
 
         Paged pools validate the request up front: one that could never fit
         (more blocks than the whole pool provisions, or — when prefix
@@ -219,8 +274,9 @@ class ContinuousScheduler:
         which would let its post-retirement ring position wrap onto a
         potentially shared block) raises ``ValueError`` here, cleanly,
         rather than corrupting live rows later. Transient fullness is *not*
-        an error: the request queues and admission backpressure holds it
-        until blocks free up.
+        an error: the request queues and admission backpressure (or
+        preemption, under a preemptive policy) holds it until blocks free
+        up.
         """
         if self.paged and request.max_new > 0:
             plen = len(request.tokens)
@@ -249,7 +305,7 @@ class ContinuousScheduler:
             # dictionary-matches them against the registry
             self._prefix_keys[rid] = prefix_keys(
                 np.asarray(request.tokens, np.int32), self.block_size)
-        self.queue.append(rid)
+        self.policy.enqueue(rid, request)
         return rid
 
     @property
@@ -259,8 +315,9 @@ class ContinuousScheduler:
 
     @property
     def pending(self) -> int:
-        """Requests queued but not yet admitted (FIFO depth)."""
-        return len(self.queue)
+        """Requests queued but not yet admitted (policy-queue depth;
+        suspended rows waiting to resume count — they hold no slot)."""
+        return len(self.policy)
 
     def poll_completed(self) -> list[tuple[int, dict]]:
         """``(rid, result)`` pairs finished since the last poll (completion
@@ -278,7 +335,7 @@ class ContinuousScheduler:
 
     # -------------------------------------------------------------- admission
     def admit(self) -> int:
-        """Fill free slots from the FIFO queue; returns #requests admitted.
+        """Fill free slots from the policy queue; returns #requests admitted.
 
         One admission *wave* is ONE device dispatch: every admitted request
         rides in a single ragged prefill (left-padded to a shared pow2 prompt
@@ -286,25 +343,21 @@ class ContinuousScheduler:
         tokens come from an on-device argmax, and each prefilled row is
         scattered into its free pool slot, all inside the server's donated
         admit jit. The wave's prefills are billed like the stepwise engine
-        bills prefill: one inference per admitted request.
+        bills prefill: one inference per admitted request, under the
+        policy-bound profile (an accuracy-critical class pins the wave).
 
-        Paged pools add two twists. Admission is gated on *blocks* as well
-        as slots: candidates are taken strictly FIFO and the wave stops at
-        the first request the allocator cannot satisfy (backpressure).
-        And a candidate whose enqueue-time prefix hashes hit the registry
-        joins a separate *shared* wave — one ``_admit_shared`` dispatch
-        that prefills only the suffixes (prefix KV replayed from the
-        registered masters) and maps the shared blocks copy-on-write —
-        while cold candidates ride the usual full-prefill wave; at most two
-        dispatches per admission round.
+        Paged pools add the wave taxonomy: admission is gated on *blocks*
+        as well as slots, candidates are taken strictly in policy order,
+        and each round dispatches at most two prefill waves — see
+        :meth:`_admit_paged_waves`.
         """
         if self.paged:
             return self._admit_paged_waves()
         free = [s for s in range(self.n_slots) if self.slot_req[s] is None]
-        take = min(len(free), len(self.queue))
+        take = min(len(free), len(self.policy))
         if not take:
             return 0
-        rids = [self.queue.popleft() for _ in range(take)]
+        rids = [self.policy.pop_head() for _ in range(take)]
         slots = free[:take]
         reqs = [self._reqs[r] for r in rids]
         bucket = _next_pow2(max(self.bucket_min,
@@ -320,13 +373,7 @@ class ContinuousScheduler:
             prompts[j, bucket - len(t):] = t             # left-pad
             plen[j] = len(t)
             sidx[j] = slots[j]
-        mgr = self.srv.manager
-        crit = any(r.accuracy_critical for r in reqs)
-        pid = 0 if mgr is None else mgr.select(crit)
-        if mgr is not None:
-            mgr.account(pid, take)
-        if self.record_events:
-            self.events.append((pid, take, crit))
+        pid = self._bill(reqs)
         tok0, self._tok, self._pos, self._caches = self._admit(
             pid,
             {"tokens": jnp.asarray(prompts),
@@ -345,41 +392,67 @@ class ContinuousScheduler:
                 entry["completes"].append(rid)
                 continue
             self.slot_req[slot] = rid
-            self._slot_crit[slot] = req.accuracy_critical
+            self._slot_crit[slot] = self.policy.bind_critical(req)
+            self._slot_level[slot] = self.policy.klass(req).level
             self.remaining[slot] = req.max_new - 1
         self._inflight.append(entry)
         return take
 
     def _admit_paged_waves(self) -> int:
-        """FIFO claim of slots *and* blocks, then ≤3 dispatches per round
-        (cold+first-chunk wave / shared wave / chunk-continuation wave;
-        the rare deferred-registration-failure fallback adds one more
-        combined cold wave).
+        """Policy-ordered claim of slots *and* blocks, then ≤2 prefill
+        dispatches per round.
 
-        Candidates classify four ways: registry hits join the *shared*
-        wave; cold prompts longer than ``chunk`` become *chunked* (their
-        first chunk rides the cold wave, the rest follows one chunk per
-        admission round); a cold candidate whose prefix will be registered
-        by an earlier candidate of THIS round's cold wave is *deferred* —
-        intra-wave prefix dedup: it resolves against the registry right
-        after the cold wave dispatches (and registers), so two identical
-        prompts arriving in the same cold wave no longer both prefill the
-        prefix. Everything else is plain cold.
+        Candidates classify by the wave *kind* they need — **cold** (full
+        ragged prefill; long prompts chunk their first chunk in), **shared**
+        (registry hits and intra-wave-dedup deferrals: suffix-only
+        continuation prefill; hits with a long unique suffix chunk too),
+        or **resume** (suspended rows replaying their snapshot through the
+        restore executable, grouped by their pinned profile). A round
+        commits to at most TWO kinds: a head candidate needing a third
+        waits for the next round — that cap, plus rolling
+        deferred-registration failures back to the class head instead of
+        dispatching a fallback wave, is the ≤2-dispatches-per-admission-
+        round invariant the policy tests guard. Before any classification,
+        a preemptive policy gets the chance to evict victims for an urgent
+        head that would otherwise not fit (:meth:`_maybe_preempt`).
 
-        One FIFO caveat rides on deferral: if the registered prefix turns
-        out shorter than assumed AND the top-up allocation fails, the
-        deferred request rolls back to the queue head for the next round —
-        requests behind it in this round's waves were already dispatched.
-        Rollbacks keep their relative order; the strict stop-at-first-
-        failure contract otherwise holds.
+        Intra-wave prefix dedup survives the refactor: a cold candidate
+        whose prefix will be registered by an earlier candidate of THIS
+        round's cold wave is *deferred* — it resolves against the registry
+        right after the cold wave dispatches (and registers), then rides
+        the shared wave, so two identical prompts arriving in the same
+        cold wave no longer both prefill the prefix. Rollbacks keep their
+        relative order; the strict stop-at-first-failure contract
+        otherwise holds within each class. (Chunk *continuation* waves —
+        :meth:`_advance_chunks`, at most one per in-flight pinned profile
+        per round — ride outside the two-kind admission cap, as before.)
         """
+        self._maybe_preempt()
         free = [s for s in range(self.n_slots)
                 if self.slot_req[s] is None and s not in self._chunk_state]
         cold, shared, deferred, chunked = [], [], [], []
+        shared_chunked, resume = [], []
+        resume_pid: Optional[int] = None
+        kinds: set = set()
         pending: dict[bytes, int] = {}   # key -> n_tokens this wave registers
-        while free and self.queue:
-            rid = self.queue[0]
+        while free and len(self.policy):
+            rid = self.policy.head()
             req = self._reqs[rid]
+            if rid in self._suspended:
+                if "resume" not in kinds and len(kinds) >= 2:
+                    break                # a third wave kind waits a round
+                snap = self._suspended[rid]
+                if resume and snap.pid != resume_pid:
+                    break                # one pinned-pid resume group/round
+                blocks = self.allocator.alloc(
+                    self._blocks_needed(len(req.tokens), req.max_new))
+                if blocks is None:
+                    break                # backpressure: head waits
+                self.policy.pop_head()
+                resume.append((rid, free.pop(0), blocks))
+                resume_pid = snap.pid
+                kinds.add("resume")
+                continue
             plen = len(req.tokens)
             need = self._blocks_needed(plen, req.max_new)
             keys = self._prefix_keys.get(rid, [])
@@ -387,8 +460,8 @@ class ContinuousScheduler:
             if self.registry is not None:
                 entry = self.registry.lookup(keys)
             if entry is not None:
-                self.registry.acquire(entry)     # pins it through eviction
-                if entry.block_ids is not None:  # kv16: map, don't re-store
+                self.registry.acquire(entry)     # references (or resurrects
+                if entry.block_ids is not None:  # from the LRU) its blocks
                     n_shared = entry.n_tokens // self.block_size
             elif pending:
                 for k in keys:                   # longest-first, like lookup
@@ -397,21 +470,26 @@ class ContinuousScheduler:
                         if self.srv.scfg.kv_bits == 16:
                             n_shared = pending[k] // self.block_size
                         break
-            n_priv = need - n_shared
-            if self.allocator.free_blocks < n_priv and \
-                    self.registry is not None:
-                self.registry.evict_for(n_priv)
-            blocks = self.allocator.alloc(n_priv)
+            kind = "shared" if (entry is not None or wait) else "cold"
+            if kind not in kinds and len(kinds) >= 2:
+                if entry is not None:
+                    self.registry.release(entry)
+                break                            # third kind: next round
+            blocks = self.allocator.alloc(need - n_shared)
             if blocks is None:                   # backpressure: head waits,
-                if entry is not None:            # FIFO order preserved
+                if entry is not None:            # policy order preserved
                     self.registry.release(entry)
                 break
-            self.queue.popleft()
+            self.policy.pop_head()
             slot = free.pop(0)
+            kinds.add(kind)
             if self.registry is not None and not wait:
                 self.registry.record_admission(entry)
             if entry is not None:
-                shared.append((rid, slot, entry, blocks))
+                if self.chunk and plen - entry.n_tokens > self.chunk:
+                    shared_chunked.append((rid, slot, entry, blocks))
+                else:
+                    shared.append((rid, slot, entry, blocks))
             elif wait:
                 deferred.append((rid, slot, blocks, keys))
             elif self.chunk and plen > self.chunk:
@@ -427,19 +505,25 @@ class ContinuousScheduler:
         if cold or chunked:
             n += self._dispatch_cold(cold, chunked)
         rollback: list[int] = []
-        fb_cold, fb_chunked = [], []     # registration-failure fallbacks,
-        for rid, slot, blocks, keys in deferred:   # batched into ONE wave
+        for rid, slot, blocks, keys in deferred:
             # the cold wave above has dispatched and registered its chains;
             # a deferred candidate now hits the registry like any other.
             # The entry actually registered may cover a different prefix
             # length than the deferral assumed (LRU capacity), so square up
-            # the private-block allocation before dispatching.
+            # the private-block allocation before dispatching. If the
+            # registration (or the top-up) failed, the candidate rolls back
+            # to its class head for the next round — no fallback wave, the
+            # ≤2-dispatch round contract holds.
             req = self._reqs[rid]
             need = self._blocks_needed(len(req.tokens), req.max_new)
             entry = self.registry.lookup(keys)
+            if entry is None:
+                self.allocator.release(blocks)
+                rollback.append(rid)
+                continue
+            self.registry.acquire(entry)
             n_shared = (entry.n_tokens // self.block_size
-                        if entry is not None and entry.block_ids is not None
-                        else 0)
+                        if entry.block_ids is not None else 0)
             n_priv = need - n_shared
             if len(blocks) > n_priv:
                 self.allocator.release(blocks[n_priv:])
@@ -447,28 +531,22 @@ class ContinuousScheduler:
             elif len(blocks) < n_priv:
                 extra = self.allocator.alloc(n_priv - len(blocks))
                 if extra is None:
-                    self.allocator.release(blocks)   # roll the request back
-                    rollback.append(rid)             # (requeued in order
-                    continue                         # after the loop)
+                    self.registry.release(entry)
+                    self.allocator.release(blocks)
+                    rollback.append(rid)
+                    continue
                 blocks = blocks + extra
-            if entry is not None:
-                self.registry.acquire(entry)
-                self.registry.record_admission(entry)
+            self.registry.record_admission(entry)
+            if self.chunk and len(req.tokens) - entry.n_tokens > self.chunk:
+                shared_chunked.append((rid, slot, entry, blocks))
+            else:
                 shared.append((rid, slot, entry, blocks))
-            else:   # registration failed (capacity full of in-use entries)
-                self.registry.record_admission(None)
-                if self.chunk and len(req.tokens) > self.chunk:
-                    # a long prompt falling back cold still chunks — the
-                    # monolithic-wave stall is what chunking exists to avoid
-                    fb_chunked.append((rid, slot, blocks))
-                else:
-                    fb_cold.append((rid, slot, blocks))
-        if fb_cold or fb_chunked:
-            n += self._dispatch_cold(fb_cold, fb_chunked)
+        if shared or shared_chunked:
+            n += self._dispatch_shared(shared, shared_chunked)
+        if resume:
+            n += self._dispatch_resume(resume)
         for rid in reversed(rollback):      # preserve their relative order
-            self.queue.appendleft(rid)
-        if shared:
-            n += self._dispatch_shared(shared)
+            self.policy.push_front(rid, self._reqs[rid])
         if n:
             self.peak_used_blocks = max(self.peak_used_blocks,
                                         self.allocator.used_blocks)
@@ -476,9 +554,12 @@ class ContinuousScheduler:
         return n
 
     def _bill(self, reqs) -> int:
-        """Select/account the wave's profile (one inference per request)."""
+        """Select/account the wave's profile (one inference per request).
+        The policy resolves the wave's accuracy binding: any row of an
+        accuracy-critical class (or with its own critical flag) pins the
+        selection to the accuracy target."""
         mgr = self.srv.manager
-        crit = any(r.accuracy_critical for r in reqs)
+        crit = self.policy.wave_critical(reqs)
         pid = 0 if mgr is None else mgr.select(crit)
         if mgr is not None:
             mgr.account(pid, len(reqs))
@@ -493,6 +574,180 @@ class ContinuousScheduler:
         out[:len(slots)] = slots
         return jnp.asarray(out)
 
+    # ------------------------------------------------------------- preemption
+    def _maybe_preempt(self) -> None:
+        """Preemption trigger: the policy-queue head belongs to a class that
+        may preempt, and the pool cannot take it — no free slot, or the
+        allocator (free + reclaimable LRU) cannot cover its blocks. The
+        policy picks victims (default: lowest class first, fewest generated
+        tokens first, all-or-nothing); each is suspended via
+        :meth:`evict_row` and all victim tables unmap in ONE fixed-shape
+        clear dispatch. Victim private-block counts are what eviction
+        actually frees (shared CoW blocks only drop references)."""
+        if not self.policy.preemptive or self._admit_restore is None:
+            return
+        rid = self.policy.head()
+        if rid is None:
+            return
+        req = self._reqs[rid]
+        need = self._blocks_needed(len(req.tokens), req.max_new)
+        if rid not in self._suspended and self.registry is not None:
+            # a registry hit maps its prefix blocks instead of allocating
+            # them — count only the private need, or a hit-holding critical
+            # arrival would evict savers the classification loop was never
+            # going to need evicted (lookup is a pure read: no LRU churn)
+            entry = self.registry.lookup(self._prefix_keys.get(rid, []))
+            if entry is not None and entry.block_ids is not None:
+                need -= entry.n_tokens // self.block_size
+        have_slot = any(self.slot_req[s] is None
+                        and s not in self._chunk_state
+                        for s in range(self.n_slots))
+        need_slots = 0 if have_slot else 1
+        need_blocks = max(0, need - self.allocator.available_blocks)
+        if not need_slots and not need_blocks:
+            return
+        rows = []
+        for slot in range(self.n_slots):
+            vrid = self.slot_req[slot]
+            if vrid is None or slot in self._chunk_state:
+                continue
+            vreq = self._reqs[vrid]
+            blocks, _reg = self._slot_blocks[slot]
+            rows.append(RowState(
+                slot=slot, rid=vrid, level=int(self._slot_level[slot]),
+                generated=len(self.results[vrid]["tokens"]),
+                blocks=len(blocks),
+                preemptible=self.policy.klass(vreq).preemptible))
+        victims = self.policy.pick_victims(req, rows, need_slots,
+                                           need_blocks)
+        if not victims:
+            return
+        for v in victims:
+            self.evict_row(v.slot)
+        self._caches = self._clear(
+            self._pad_slot_idx([v.slot for v in victims]), self._caches)
+
+    def evict_row(self, slot: int) -> int:
+        """Suspend one live pool row; returns its rid.
+
+        The preemption state machine's SUSPEND edge: flush every in-flight
+        token (the snapshot needs the row's true progress), snapshot the
+        row's block table + host-side KV masters
+        (:class:`~repro.serving.paged.RowSnapshot` — masters via
+        :func:`repro.models.transformer.paged_row_masters`, exact int-KV
+        scale preimages via :func:`~repro.models.transformer.
+        amax_for_scale`), release its blocks (registered prefixes park in
+        the retired-block LRU; a mapped CoW entry just drops this sharer's
+        references), and requeue the request at the front of its class.
+        The caller unmaps the slot's block table (``_clear_rows``) — the
+        host-side twin of in-graph retirement, so the row's residual
+        frozen-position writes can never follow the freed blocks to their
+        next owner. The row later resumes through
+        :meth:`_dispatch_resume`, token-identically.
+        """
+        rid = self.slot_req[slot]
+        assert rid is not None and slot not in self._chunk_state
+        self._flush(0)
+        req = self._reqs[rid]
+        res = self.results[rid]
+        g = len(res["tokens"])              # ≥ 1: admission emitted one
+        p_written = len(req.tokens) + g - 1  # KV positions 0..p_written-1
+        pid = self.srv.engine.profile_names.index(res["profile_trace"][-1])
+        blocks, reg = self._slot_blocks[slot]
+        ns = (reg.n_tokens // self.block_size
+              if reg is not None and reg.block_ids is not None else 0)
+        row_map = ([int(b) for b in reg.block_ids[:ns]] if ns else []) \
+            + list(blocks)
+        mk, mv = T.paged_row_masters(self._caches["kv"], slot, row_map,
+                                     p_written)
+        ka = va = None
+        kv_bits = self.srv.scfg.kv_bits
+        if kv_bits in (4, 8):
+            qmax = 127.0 if kv_bits == 8 else 7.0
+            pool = self._caches["kv"]
+            ka = jnp.asarray(T.amax_for_scale(
+                np.asarray(pool.k_scale[:, slot]), qmax))
+            va = jnp.asarray(T.amax_for_scale(
+                np.asarray(pool.v_scale[:, slot]), qmax))
+        self._suspended[rid] = RowSnapshot(
+            rid=rid, n_done=p_written,
+            last_tok=int(res["tokens"][-1]), pid=pid,
+            master_k=mk, master_v=mv, k_amax=ka, v_amax=va)
+        self._release_blocks(blocks)
+        if reg is not None:
+            self.registry.release(reg)
+        self._slot_blocks[slot] = None
+        self.slot_req[slot] = None
+        self._slot_crit[slot] = False
+        self._slot_level[slot] = 0
+        self.remaining[slot] = 0
+        self.policy.push_front(rid, req)
+        self.preemptions += 1
+        return rid
+
+    def _dispatch_resume(self, rows) -> int:
+        """One continuation wave re-admitting suspended rows — the RESUME
+        edge of the preemption state machine, riding the restore
+        executable (the master-replay continuation body; at int KV it IS
+        the shared-admission executable).
+
+        The "prefix" is EVERYTHING the row had written when evicted
+        (positions ``0..P−1``, replayed from the snapshot masters) and the
+        "suffix" is **empty** (``prompt_len = 0`` — every suffix write is
+        masked out of the scatter): the wave is pure data movement, so the
+        restored cache bytes, scales and ``token_idx`` are identical to
+        the suspended row's by construction — at kv16 the masters
+        round-trip through bf16, at int KV re-quantization under the
+        snapshot's exact scale preimage reproduces every int — never by
+        floating-point luck. It recomputes no token and **bills nothing**:
+        a request's total billed inferences are invariant under
+        preemption. All rows of the wave share the snapshot-pinned
+        profile (their last pre-eviction step's — bookkeeping only; no
+        profile-dependent compute lands in the cache). After the dispatch
+        the decode carry is re-pointed at the recorded last emitted token
+        (the empty-suffix wave's argmax is meaningless); with
+        ``pos = P`` set by the wave, the carry equals the uninterrupted
+        row's exactly, and the next segment continues it bit-for-bit.
+        """
+        bs = self.block_size
+        snaps = [self._suspended.pop(rid) for rid, _, _ in rows]
+        pid = snaps[0].pid
+        sb = _next_pow2(self.bucket_min)            # empty suffixes
+        pp = bs * _next_pow2(max(-(-s.n_done // bs) for s in snaps))
+        a = _next_pow2(len(rows))
+        nb_oob = self.allocator.n_blocks
+        prompts = np.zeros((a, sb), np.int32)
+        slen = np.zeros((a,), np.int32)             # 0: nothing prefills
+        plen_pre = np.zeros((a,), np.int32)
+        sidx = np.full((a,), self.n_slots, np.int32)
+        dest = np.full((a, self.n_lblk), nb_oob, np.int32)
+        bt_rows = np.full((a, self.n_lblk), nb_oob, np.int32)
+        for j, ((rid, slot, blocks), s) in enumerate(zip(rows, snaps)):
+            plen_pre[j] = s.n_done
+            sidx[j] = slot
+            dest[j, :len(blocks)] = blocks          # fully private rebuild
+            bt_rows[j, :len(blocks)] = blocks
+        batch = {"tokens": jnp.asarray(prompts),
+                 "prompt_len": jnp.asarray(slen)}
+        self._call_continuation(
+            self._admit_restore, pid, batch, sidx, dest, bt_rows, plen_pre,
+            pp, [(s.n_done, None, s.master_k, s.master_v, s.k_amax, s.v_amax)
+                 for s in snaps], masters=True)
+        self._tok = self._tok.at[
+            jnp.asarray(np.asarray([slot for _, slot, _ in rows], np.int32))
+        ].set(jnp.asarray(np.asarray([s.last_tok for s in snaps], np.int32)))
+        for (rid, slot, blocks), s in zip(rows, snaps):
+            req = self._reqs[rid]
+            self.slot_req[slot] = rid
+            self._slot_crit[slot] = self.policy.bind_critical(req)
+            self._slot_level[slot] = self.policy.klass(req).level
+            self.remaining[slot] = \
+                req.max_new - len(self.results[rid]["tokens"])
+            self._slot_blocks[slot] = (blocks, None)
+            self.resumes += 1
+        return len(rows)
+
+    # ------------------------------------------------------------------ waves
     def _dispatch_cold(self, rows, chunked=()) -> int:
         """One ``_admit_paged`` wave: full ragged prefill + block scatter.
 
@@ -533,6 +788,8 @@ class ContinuousScheduler:
         for off, (rid, slot, blocks) in enumerate(chunked):
             j = n_cold + off
             st = {"rid": rid, "blocks": blocks, "done": lens[j],
+                  "map": list(blocks),  # logical→physical incl. shared span
+                  "entry": None, "n_shared": 0,
                   "fresh": True,   # chunk 2 waits for the next round — one
                                    # chunk wave per row per admission round
                   "pid": pid,      # profile pinned for the WHOLE prompt:
@@ -561,26 +818,13 @@ class ContinuousScheduler:
         return len(allrows)
 
     def _register_prefixes(self, rows, reqs, raw, bucket: int) -> None:
-        """Pin each new prompt's longest block-aligned prefix for reuse.
+        """Offer each new prompt's block-aligned prefix chain for reuse.
 
-        The whole block-aligned prefix CHAIN registers, longest first —
-        key ``j`` covers ``j·bs`` tokens — because the next prompt's
-        shared span is unknown: a request whose unique tail crosses a
-        block boundary must still hit the shorter shared-prefix keys
-        (registering only the longest key would fold tail tokens into
-        every hash and never match a multi-tenant system prompt). Every
-        key of the chain is offered — ``register`` no-ops on present ones
-        — because LRU eviction removes single entries, so a present long
-        key does NOT imply its shorter companions survived.
-
-        At kv16 each entry refcounts the row's first ``j`` blocks so they
-        survive the row's retirement and later admissions can map them in
-        place — the pool's bf16 blocks double as the masters, so nothing
-        else is stored. At int KV precisions the pool rows sit on the
-        owner's quantization grid, so entries instead snapshot the wave's
-        pre-quantization K/V (one lazily-sliced device array shared by
-        the whole chain) plus per-length raw amax that re-calibrate
-        scales exactly.
+        The chain discipline lives in :meth:`~repro.serving.paged.
+        PrefixRegistry.register_chain`; this method only slices each row's
+        pre-quantization masters out of the wave (int KV — one lazily
+        sliced device array shared by the whole chain; at kv16 the pool's
+        bf16 blocks double as the masters and nothing is stored).
         """
         kv16 = self.srv.scfg.kv_bits == 16
         bs = self.block_size
@@ -593,47 +837,25 @@ class ContinuousScheduler:
                 c0 = bucket - len(t)
                 mk = k_all[:, j, c0:c0 + j_max * bs].astype(jnp.float32)
                 mv = v_all[:, j, c0:c0 + j_max * bs].astype(jnp.float32)
-            self._register_chain(rid, j_max, blocks, mk, mv)
+            self.registry.register_chain(self._prefix_keys.get(rid, []),
+                                         j_max, blocks, mk, mv)
 
-    def _register_chain(self, rid: int, j_max: int, blocks,
-                        mk, mv) -> None:
-        """Offer every key of one prompt's prefix chain to the registry —
-        the single home of the chain invariants (see
-        :meth:`_register_prefixes`): every key is offered because LRU
-        evicts single entries; kv16 entries pin ``blocks[:n_blk]`` (the
-        pool is its own master); int-KV entries share the ONE master
-        buffer ``mk``/``mv`` (already truncated to ``j_max`` blocks) and
-        snapshot per-length raw amax — O(chain), not O(chain²), memory.
-        Used by cold-wave registration and chunked-admission completion.
-        """
-        keys = self._prefix_keys.get(rid)
-        if j_max < 1 or not keys:
-            return
-        bs = self.block_size
-        for i, key in enumerate(keys):           # longest first
-            if self.registry.contains(key):
-                continue
-            n_blk = j_max - i
-            n_tok = n_blk * bs
-            if mk is None:                       # kv16: pin pool blocks
-                self.registry.register(key, n_tok, blocks[:n_blk],
-                                       None, None, None, None)
-            else:
-                ka = jnp.max(jnp.abs(mk[:, :n_tok]), axis=(1, 3))
-                va = jnp.max(jnp.abs(mv[:, :n_tok]), axis=(1, 3))
-                self.registry.register(key, n_tok, None, mk, mv, ka, va)
-
-    def _call_admit_shared(self, pid, batch, sidx, dest, bt_rows, plen_pre,
-                           pp: int, pre: list):
-        """Assemble the prefix operands and dispatch one ``_admit_shared``
-        wave — the single place that knows the continuation executable's
-        calling convention, shared by registry-hit admissions
-        (:meth:`_dispatch_shared`) and chunk continuations
-        (:meth:`_dispatch_chunks`).
+    def _call_continuation(self, fn, pid, batch, sidx, dest, bt_rows,
+                           plen_pre, pp: int, pre: list,
+                           masters: bool = False):
+        """Assemble the prefix operands and dispatch one continuation-
+        prefill wave — the single place that knows the executable's calling
+        convention, shared by registry-hit admissions
+        (:meth:`_dispatch_shared`), chunk continuations
+        (:meth:`_dispatch_chunks`) and preemption resumes
+        (:meth:`_dispatch_resume`).
 
         ``pre``: one ``(n_tok, block_ids, mk, mv, ka, va)`` tuple per wave
-        row. At kv16 the prefix is gathered in-jit from ``block_ids`` (the
-        bf16 pool is its own master); at int KV the full-precision masters
+        row. At kv16 the prefix is normally gathered in-jit from
+        ``block_ids`` (the bf16 pool is its own master); ``masters=True``
+        forces the master-replay convention regardless of precision — the
+        resume path, where the evicted row's blocks are gone and its
+        snapshot is the only source. At int KV the full-precision masters
         ``mk``/``mv`` (sliced to ``n_tok`` — chain entries share one
         buffer — and padded to the ``pp`` bucket) are replayed with their
         raw amax. Returns ``(tok0, raw)``.
@@ -641,18 +863,17 @@ class ContinuousScheduler:
         cfg = self.srv.cfg
         a = dest.shape[0]
         nb_oob = self.allocator.n_blocks
-        if self.srv.scfg.kv_bits == 16:
+        if self.srv.scfg.kv_bits == 16 and not masters:
             pb = pp // self.block_size
             pre_bids = np.full((a, pb), nb_oob, np.int32)
             for j, (n_tok, bids, *_rest) in enumerate(pre):
                 nbl = n_tok // self.block_size
                 pre_bids[j, :nbl] = bids[:nbl]
-            tok0, raw, self._tok, self._pos, self._caches = \
-                self._admit_shared(
-                    pid, batch, jnp.asarray(sidx), jnp.asarray(dest),
-                    jnp.asarray(bt_rows), jnp.asarray(pre_bids),
-                    jnp.asarray(plen_pre), self._tok, self._pos,
-                    self._caches)
+            tok0, raw, self._tok, self._pos, self._caches = fn(
+                pid, batch, jnp.asarray(sidx), jnp.asarray(dest),
+                jnp.asarray(bt_rows), jnp.asarray(pre_bids),
+                jnp.asarray(plen_pre), self._tok, self._pos,
+                self._caches)
             return tok0, raw
 
         def padm(m, n_tok):
@@ -667,24 +888,39 @@ class ContinuousScheduler:
                          + [zk] * npad, axis=1)
         vpre = jnp.stack([padm(mv, n) for n, _, _, mv, _, _ in pre]
                          + [zk] * npad, axis=1)
-        ka = jnp.stack([ka_ for *_x, ka_, _va in pre] + [za] * npad, axis=1)
-        va = jnp.stack([va_ for *_x, va_ in pre] + [za] * npad, axis=1)
-        tok0, raw, self._tok, self._pos, self._caches = self._admit_shared(
+        ka = jnp.stack([za if ka_ is None else ka_
+                        for *_x, ka_, _va in pre] + [za] * npad, axis=1)
+        va = jnp.stack([za if va_ is None else va_
+                        for *_x, va_ in pre] + [za] * npad, axis=1)
+        tok0, raw, self._tok, self._pos, self._caches = fn(
             pid, batch, jnp.asarray(sidx), jnp.asarray(dest),
             jnp.asarray(bt_rows), kpre, vpre, ka, va,
             jnp.asarray(plen_pre), self._tok, self._pos, self._caches)
         return tok0, raw
 
-    def _dispatch_shared(self, rows) -> int:
-        """One ``_admit_shared`` wave: suffix-only continuation prefill."""
+    def _dispatch_shared(self, rows, chunked=()) -> int:
+        """One ``_admit_shared`` wave: suffix-only continuation prefill.
+
+        ``chunked`` rows are registry hits whose unique suffix exceeds the
+        prefill chunk: they ride the same wave but prefill only the FIRST
+        ``chunk`` suffix tokens, then advance one chunk per admission round
+        through :meth:`_advance_chunks` exactly like a long cold prompt —
+        the prefix-chain hit just moved their starting line (closes the
+        chunk-from-hit gap: before this, a hit with a long unique suffix
+        prefilled that suffix monolithically, stalling every live row).
+        """
         bs = self.block_size
-        reqs = [self._reqs[rid] for rid, _, _, _ in rows]
-        sufs = [np.asarray(r.tokens, np.int32)[e.n_tokens:]
-                for r, (_, _, e, _) in zip(reqs, rows)]
+        allrows = list(rows) + list(chunked)
+        n_full = len(rows)
+        reqs = [self._reqs[rid] for rid, _, _, _ in allrows]
+        sufs = []
+        for j, (r, (_, _, e, _)) in enumerate(zip(reqs, allrows)):
+            s = np.asarray(r.tokens, np.int32)[e.n_tokens:]
+            sufs.append(s if j < n_full else s[:self.chunk])
         sb = _next_pow2(max(self.bucket_min, max(len(s) for s in sufs)))
         pp = bs * _next_pow2(max(-(-e.n_tokens // bs)
-                                 for _, _, e, _ in rows))
-        a = _next_pow2(len(rows))
+                                 for _, _, e, _ in allrows))
+        a = _next_pow2(len(allrows))
         nb_oob = self.allocator.n_blocks
         prompts = np.zeros((a, sb), np.int32)
         slen = np.zeros((a,), np.int32)
@@ -692,7 +928,7 @@ class ContinuousScheduler:
         sidx = np.full((a,), self.n_slots, np.int32)
         dest = np.full((a, self.n_lblk), nb_oob, np.int32)
         bt_rows = np.full((a, self.n_lblk), nb_oob, np.int32)
-        for j, ((rid, slot, e, blocks), suf) in enumerate(zip(rows, sufs)):
+        for j, ((rid, slot, e, blocks), suf) in enumerate(zip(allrows, sufs)):
             prompts[j, sb - len(suf):] = suf                 # left-pad
             slen[j] = len(suf)
             plen_pre[j] = e.n_tokens
@@ -702,19 +938,51 @@ class ContinuousScheduler:
                 bt_rows[j, :ns] = e.block_ids[:ns]           # mapped, shared
             bt_rows[j, ns:ns + len(blocks)] = blocks         # private tail
             dest[j, ns:ns + len(blocks)] = blocks            # only these get
-        ents = [e for _, _, e, _ in rows]                    # written (CoW)
+        ents = [e for _, _, e, _ in allrows]                 # written (CoW)
         pid = self._bill(reqs)
         batch = {"tokens": jnp.asarray(prompts),
                  "prompt_len": jnp.asarray(slen)}
-        tok0, _ = self._call_admit_shared(
-            pid, batch, sidx, dest, bt_rows, plen_pre, pp,
-            [(e.n_tokens, e.block_ids, e.master_k, e.master_v,
-              e.k_amax, e.v_amax) for e in ents])
+        tok0, raw = self._call_continuation(
+            self._admit_shared, pid, batch, sidx, dest, bt_rows, plen_pre,
+            pp, [(e.n_tokens, e.block_ids, e.master_k, e.master_v,
+                  e.k_amax, e.v_amax) for e in ents])
+        for off, (rid, slot, e, blocks) in enumerate(chunked):
+            j = n_full + off
+            ns = e.n_tokens // bs if e.block_ids is not None else 0
+            st = {"rid": rid, "blocks": blocks,
+                  "map": ([int(b) for b in e.block_ids[:ns]] if ns else [])
+                         + list(blocks),
+                  "entry": e, "n_shared": ns,
+                  "done": e.n_tokens + len(sufs[j]),
+                  "fresh": True, "pid": pid,
+                  "mk": None, "mv": None, "ka": None, "va": None}
+            if raw is not None:
+                # int KV: seed the accumulated masters with the ENTRY's
+                # prefix masters + this wave's raw suffix, so later chunks
+                # replay the full processed span with running-amax scales
+                k_all, v_all = raw
+                c0 = sb - len(sufs[j])
+                new_k = k_all[:, j, c0:].astype(jnp.float32)
+                new_v = v_all[:, j, c0:].astype(jnp.float32)
+                st["mk"] = jnp.concatenate(
+                    [e.master_k[:, :e.n_tokens].astype(jnp.float32), new_k],
+                    axis=1)
+                st["mv"] = jnp.concatenate(
+                    [e.master_v[:, :e.n_tokens].astype(jnp.float32), new_v],
+                    axis=1)
+                st["ka"] = jnp.maximum(
+                    e.k_amax, jnp.max(jnp.abs(new_k), axis=(1, 3)))
+                st["va"] = jnp.maximum(
+                    e.v_amax, jnp.max(jnp.abs(new_v), axis=(1, 3)))
+            self._chunk_state[slot] = st
+            self.results[rid] = {"tokens": [], "profile_trace": []}
+            if self.record_events:
+                self.admission_log.append(rid)
         self._post_admission(tok0, self.srv.engine.profile_names[pid],
                              [(j, rid, slot, blocks, e)
                               for j, (rid, slot, e, blocks)
                               in enumerate(rows)])
-        return len(rows)
+        return len(allrows)
 
     def _advance_chunks(self) -> None:
         """Advance every mid-admission chunked row by one prompt chunk.
@@ -744,15 +1012,18 @@ class ContinuousScheduler:
         all pinned to profile ``pid`` (the one their first chunk billed).
 
         Reuses the shared-prefix executable verbatim: the "prefix" is the
-        row's own previously processed tokens — gathered from its own pool
-        blocks at kv16 (chunk boundaries are block-aligned by
-        construction), replayed from the accumulated full-precision
-        masters at int KV. ``dest`` rewrites ALL of the row's blocks each
+        row's own previously processed span — gathered from its mapped
+        blocks at kv16 (for a chunk-from-hit row that includes the shared
+        CoW prefix blocks, read-only; chunk boundaries are block-aligned
+        by construction), replayed from the accumulated full-precision
+        masters at int KV. ``dest`` rewrites the row's PRIVATE blocks each
         chunk, which both lands the new chunk and scrubs any junk a frozen
-        row's residual decode writes parked there between chunks. Rows
-        whose final chunk lands go live (``remaining = max_new − 1``) with
-        their first generated token coming from this wave's argmax —
-        exactly the cold admission contract.
+        row's residual decode writes parked there between chunks (frozen
+        positions are always past the shared span, so the shared blocks
+        never need — or get — a write). Rows whose final chunk lands go
+        live (``remaining = max_new − 1``) with their first generated
+        token coming from this wave's argmax — exactly the cold admission
+        contract.
         """
         bs = self.block_size
         sb = _next_pow2(max(self.bucket_min,
@@ -771,19 +1042,19 @@ class ContinuousScheduler:
             slen[j] = len(chunk)
             plen_pre[j] = st["done"]
             sidx[j] = slot
-            blocks = st["blocks"]
-            bt_rows[j, :len(blocks)] = blocks
-            dest[j, :len(blocks)] = blocks   # all private: rewrite wholesale
+            ns = st["n_shared"]
+            bt_rows[j, :len(st["map"])] = st["map"]
+            dest[j, ns:ns + len(st["blocks"])] = st["blocks"]
         # continuation waves reuse the pinned profile and bill nothing new —
         # the request was billed its one prefill inference at the first
         # chunk, and re-selecting here could mix precisions within one
         # prompt's KV (no monolithic admission can produce that state)
         batch = {"tokens": jnp.asarray(prompts),
                  "prompt_len": jnp.asarray(slen)}
-        tok0, raw = self._call_admit_shared(
-            pid, batch, sidx, dest, bt_rows, plen_pre, pp,
-            [(st["done"], st["blocks"], st["mk"], st["mv"],
-              st["ka"], st["va"]) for _, st, _ in rows])
+        tok0, raw = self._call_continuation(
+            self._admit_shared, pid, batch, sidx, dest, bt_rows, plen_pre,
+            pp, [(st["done"], st["map"], st["mk"], st["mv"],
+                  st["ka"], st["va"]) for _, st, _ in rows])
         entry = {"kind": "admit", "toks": tok0,
                  "name": self.srv.engine.profile_names[pid],
                  "rows": [], "completes": []}
@@ -811,13 +1082,16 @@ class ContinuousScheduler:
             self._register_chunked(rid, st)
             if req.max_new == 1:               # done on arrival
                 entry["completes"].append(rid)
-                self.allocator.release(st["blocks"])
+                self._release_blocks(st["blocks"])
+                if st["entry"] is not None:
+                    self.registry.release(st["entry"])
                 clear.append(slot)
                 continue
             self.slot_req[slot] = rid
-            self._slot_crit[slot] = req.accuracy_critical
+            self._slot_crit[slot] = self.policy.bind_critical(req)
+            self._slot_level[slot] = self.policy.klass(req).level
             self.remaining[slot] = req.max_new - 1
-            self._slot_blocks[slot] = (st["blocks"], None)
+            self._slot_blocks[slot] = (st["blocks"], st["entry"])
         if clear:
             self._caches = self._clear(self._pad_slot_idx(clear),
                                        self._caches)
@@ -825,9 +1099,10 @@ class ContinuousScheduler:
             self._inflight.append(entry)
 
     def _register_chunked(self, rid: int, st: dict) -> None:
-        """Register a finished chunked prompt's prefix chain for reuse —
+        """Offer a finished chunked prompt's prefix chain for reuse —
         same chain discipline as :meth:`_register_prefixes`, sourced from
-        the row's own blocks (kv16) / accumulated masters (int KV)."""
+        the row's mapped blocks (kv16; a chunk-from-hit chain includes the
+        shared span it mapped) / accumulated masters (int KV)."""
         if self.registry is None:
             return
         t = np.asarray(self._reqs[rid].tokens, np.int32)
@@ -838,7 +1113,8 @@ class ContinuousScheduler:
             # registrable span (entries slice by their own n_tokens)
             mk = st["mk"][:, :j_max * self.block_size]
             mv = st["mv"][:, :j_max * self.block_size]
-        self._register_chain(rid, j_max, st["blocks"], mk, mv)
+        self.registry.register_chain(self._prefix_keys.get(rid, []),
+                                     j_max, st["map"], mk, mv)
 
     def _post_admission(self, tok0, pname: str, rows) -> None:
         """Common post-dispatch bookkeeping for paged admission waves.
@@ -860,13 +1136,14 @@ class ContinuousScheduler:
                 self.admission_log.append(rid)
             if req.max_new == 1:                             # done on arrival
                 entry["completes"].append(rid)
-                self.allocator.release(blocks)
+                self._release_blocks(blocks)
                 if reg is not None:
                     self.registry.release(reg)
                 clear.append(slot)
                 continue
             self.slot_req[slot] = rid
-            self._slot_crit[slot] = req.accuracy_critical
+            self._slot_crit[slot] = self.policy.bind_critical(req)
+            self._slot_level[slot] = self.policy.klass(req).level
             self.remaining[slot] = req.max_new - 1
             self._slot_blocks[slot] = (blocks, reg)
         if clear:
@@ -883,6 +1160,15 @@ class ContinuousScheduler:
         rem = self.remaining
         if mgr is None:
             sched = np.zeros((q,), np.int32)
+        elif len(self.policy.classes) > 1:
+            # per-class planning: class profile bindings pin the steps a
+            # bound row is live for (plus per-request critical flags, which
+            # _slot_crit already folds in)
+            sched = mgr.plan_schedule_classes(
+                q, rem, self._slot_level,
+                tuple(c.level for c in self.policy.classes
+                      if c.accuracy_critical),
+                row_critical=self._slot_crit)
         else:
             sched = mgr.plan_schedule_ragged(q, rem, self._slot_crit)
         if self.record_events:
@@ -909,17 +1195,19 @@ class ContinuousScheduler:
             if self.remaining[slot] == 0:                # retire → refillable
                 self.slot_req[slot] = None
                 self._slot_crit[slot] = False
+                self._slot_level[slot] = 0
                 entry["completes"].append(rid)
                 retired.append(slot)
         if self.paged and retired:
             # hand the rows' blocks back (shared prefix blocks just drop one
-            # reference); their block tables need no host dispatch — the
-            # segment already unmapped every row that finished inside it
-            # (see decode_segment's writeback), so residual dead-row writes
+            # reference; registered private blocks park in the LRU); their
+            # block tables need no host dispatch — the segment already
+            # unmapped every row that finished inside it (see
+            # decode_segment's writeback), so residual dead-row writes
             # can't follow the freed blocks to their next owner
             for slot in retired:
                 blocks, reg = self._slot_blocks[slot]
-                self.allocator.release(blocks)
+                self._release_blocks(blocks)
                 if reg is not None:
                     self.registry.release(reg)
                 self._slot_blocks[slot] = None
@@ -955,15 +1243,16 @@ class ContinuousScheduler:
     def step(self) -> bool:
         """Admit then run one segment, keeping one segment in flight.
         Returns False once fully drained (all tokens materialized).
-        Mid-admission chunked rows keep the loop alive: each step's
-        ``admit`` advances them one chunk between decode segments."""
+        Mid-admission chunked rows and suspended (preempted) requests keep
+        the loop alive: each step's ``admit`` advances chunks between
+        decode segments and resumes suspended rows as resources free."""
         self.admit()
         if self.live_rows:
             self.run_segment()
             self._flush(keep=1)
         else:
             self._flush()
-        return bool(self.live_rows or self.queue or self._inflight
+        return bool(self.live_rows or len(self.policy) or self._inflight
                     or (self.paged and self._chunk_state))
 
     def run(self) -> list[dict]:

@@ -1,0 +1,417 @@
+"""Policy-driven scheduling: priority classes, preemption, retired-block LRU.
+
+The load-bearing properties of the policy refactor:
+
+* a preempted-then-resumed row is **token-identical** to an uninterrupted
+  run at kv16 and kv8 — including rows holding shared CoW prefix blocks —
+  because the restore wave replays the suspended row's whole written span
+  as the continuation prefix with an empty suffix (pure data movement:
+  bf16 masters round-trip, int-KV re-quantization under the exact scale
+  preimage reproduces every int);
+* the pool-lifetime single-``_segment``-executable and the ≤2-prefill-
+  dispatches-per-admission-round invariants hold under preemption
+  (dispatch-count + executable-cache guard);
+* the energy ledger stays exact under suspension: replaying the event log
+  through a fresh manager reproduces profiles and ledger, and a request's
+  total billed inferences are invariant under preemption;
+* priority classes order admission (critical jumps saver queues) and bind
+  profiles (a critical-class wave pins the accuracy target even in the
+  battery-saver regime);
+* the allocator's retired-block LRU makes retired prefixes reusable-but-
+  reclaimable: a registry hit on a retired prompt's blocks survives until
+  real allocation pressure reclaims them, double-release fails loudly,
+  and ``paged_stats`` partitions the pool into live/LRU-cached/free.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core.engine import AdaptiveEngine, QuantIndex
+from repro.core.manager import ProfileManager, ProfileStats
+from repro.core.profiles import paper_profiles
+from repro.models import transformer as T
+from repro.serving.engine import AdaptiveServer, Request, ServingConfig
+from repro.serving.paged import BlockAllocator
+from repro.serving.policy import (FifoPolicy, PriorityPolicy, RowState,
+                                  default_classes, default_victim_picker,
+                                  make_policy)
+from repro.serving.scheduler import ContinuousScheduler
+
+
+def _build(arch="granite-3-2b"):
+    cfg = get_smoke(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    names = T.quant_layer_names(cfg)
+    profs = paper_profiles(names, inner_layers=[])
+    eng = AdaptiveEngine(tuple(profs), QuantIndex(names),
+                         lambda p, br, b: T.train_loss(p, cfg, br, b))
+    return cfg, params, eng
+
+
+@pytest.fixture(scope="module")
+def dense_parts():
+    return _build()
+
+
+def _solo_tokens(parts, req, kv_bits=16, slots=64):
+    cfg, params, eng = parts
+    srv = AdaptiveServer(cfg, params, eng,
+                         ServingConfig(slots=slots, max_batch=4,
+                                       kv_bits=kv_bits))
+    return srv.generate(req.tokens[None, :], req.max_new)["tokens"][0]
+
+
+def _manager():
+    stats = [ProfileStats(n, acc, e, 1e-3) for n, acc, e in [
+        ("A16-W8", 0.99, 4.0), ("A16-W4", 0.953, 2.0), ("A8-W8", 0.988, 3.0),
+        ("A8-W4", 0.953, 1.5), ("A4-W4", 0.958, 1.0), ("Mixed", 0.975, 2.0)]]
+    return ProfileManager(stats, accuracy_target=0.985, accuracy_floor=0.90,
+                          budget_j=150.0, low_energy=0.5)
+
+
+# ---------------------------------------------------------------------------
+# policy layer (pure host objects, no jax)
+# ---------------------------------------------------------------------------
+
+def test_policy_queue_disciplines():
+    """FIFO keeps submission order; the priority ladder serves strictly
+    lowest-level-first with FIFO inside a class and front re-insertion for
+    rollbacks/resumes."""
+    fifo = FifoPolicy()
+    for rid in (3, 1, 2):
+        fifo.enqueue(rid, Request(tokens=np.zeros(4, np.int32), priority=0))
+    assert [fifo.pop_head() for _ in range(3)] == [3, 1, 2]
+
+    pol = PriorityPolicy(default_classes(3))
+    reqs = {0: Request(np.zeros(4, np.int32), priority=2),    # saver
+            1: Request(np.zeros(4, np.int32), priority=2),
+            2: Request(np.zeros(4, np.int32), priority=0),    # critical
+            3: Request(np.zeros(4, np.int32), priority=1)}    # standard
+    for rid in (0, 1, 2, 3):
+        pol.enqueue(rid, reqs[rid])
+    assert pol.head() == 2 and len(pol) == 4
+    assert pol.pop_head() == 2
+    pol.push_front(1, reqs[1])            # no-op: 1 is already queued; the
+    order = []                            # API contract is front-of-class
+    while len(pol):
+        order.append(pol.pop_head())
+    assert order == [3, 1, 0, 1]          # standard < saver; 1 re-inserted
+
+
+def test_default_victim_picker_lowest_class_fewest_tokens():
+    """Victims: strictly-lower classes only, lowest class first, fewest
+    generated tokens first, all-or-nothing on the resource ask."""
+    rows = [RowState(0, 10, level=2, generated=9, blocks=3, preemptible=True),
+            RowState(1, 11, level=2, generated=2, blocks=3, preemptible=True),
+            RowState(2, 12, level=1, generated=1, blocks=3, preemptible=True),
+            RowState(3, 13, level=0, generated=0, blocks=9,
+                     preemptible=False)]
+    v = default_victim_picker(0, rows, need_slots=1, need_blocks=0)
+    assert [r.slot for r in v] == [1]            # saver with fewest tokens
+    v = default_victim_picker(0, rows, need_slots=1, need_blocks=5)
+    assert [r.slot for r in v] == [1, 0]         # accumulate blocks in order
+    # equal-class arrivals never preempt their own class
+    assert default_victim_picker(2, rows, 1, 0) == []
+    # unsatisfiable asks evict nobody (partial eviction wastes work)
+    assert default_victim_picker(0, rows, 1, 100) == []
+
+
+def test_make_policy_from_config():
+    assert isinstance(make_policy(ServingConfig()), FifoPolicy)
+    pol = make_policy(ServingConfig(priority_classes=3, preemption=True))
+    assert isinstance(pol, PriorityPolicy) and pol.preemptive
+    assert [c.name for c in pol.classes] == ["critical", "standard", "saver"]
+    assert pol.classes[0].accuracy_critical
+    assert not pol.classes[0].preemptible and pol.classes[0].can_preempt
+
+
+# ---------------------------------------------------------------------------
+# block allocator: double-release + retired-block LRU
+# ---------------------------------------------------------------------------
+
+def test_double_release_raises_loudly():
+    """Releasing an already-free id (or the same id twice in one call) is a
+    RuntimeError — never a silent refcount corruption, and not a strippable
+    ``assert``."""
+    al = BlockAllocator(4, 8)
+    ids = al.alloc(2)
+    al.release(ids)
+    with pytest.raises(RuntimeError, match="double release"):
+        al.release([ids[0]])
+    ids = al.alloc(1)
+    with pytest.raises(RuntimeError, match="double release"):
+        al.release([ids[0], ids[0]])      # duplicate within one call
+    with pytest.raises(RuntimeError):
+        al.retain([ids[0]])               # retain of the now-free block
+
+
+def test_lru_free_list_mechanics():
+    """Blocks released with a cache claim park in the LRU: still
+    allocatable (oldest reclaimed first, with the on_reclaim callback),
+    resurrectable all-or-nothing via activate()."""
+    al = BlockAllocator(4, 8)
+    a = al.alloc(2)
+    b = al.alloc(2)
+    al.release(a, cache=set(a))           # park both
+    assert al.lru_blocks == 2 and al.free_blocks == 0
+    assert al.available_blocks == 2 and al.used_blocks == 2
+    assert al.activate(a)                 # resurrect: content still there
+    assert al.lru_blocks == 0 and al.used_blocks == 4
+    al.release(a, cache=set(a))
+    reclaimed = []
+    al.on_reclaim = reclaimed.append
+    al.release(b)                         # plain free
+    got = al.alloc(3)                     # 2 free + 1 reclaimed from LRU
+    assert len(got) == 3 and reclaimed == [a[0]]   # oldest cached first
+    assert al.lru_blocks == 1 and al.used_blocks == 3
+    al.uncache([a[1]])                    # claim dropped: LRU → free
+    assert al.lru_blocks == 0 and al.free_blocks == 1
+    assert not al.activate([a[1]])        # nothing cached left: refused
+    assert al.free_blocks == 1            # …and the refusal changed nothing
+
+
+def test_registry_hit_on_retired_blocks_until_pressure(dense_parts):
+    """A prompt resubmitted after its owner retired still hits: the
+    registered blocks sit in the retired-block LRU and resurrect. Real
+    allocation pressure reclaims them (invalidating the entries), after
+    which the same prompt admits cold — correct either way."""
+    cfg, params, eng = dense_parts
+    scfg = ServingConfig(slots=64, max_batch=2, block_size=8, pool_blocks=8)
+    srv = AdaptiveServer(cfg, params, eng, scfg)
+    sched = ContinuousScheduler(srv, quantum=4)
+    rng = np.random.default_rng(21)
+    sys_p = rng.integers(0, cfg.vocab, 16).astype(np.int32)
+    r1 = Request(tokens=np.concatenate(
+        [sys_p, rng.integers(0, cfg.vocab, 5).astype(np.int32)]), max_new=3)
+    r2 = Request(tokens=np.concatenate(
+        [sys_p, rng.integers(0, cfg.vocab, 3).astype(np.int32)]), max_new=4)
+    sched.submit(r1)
+    sched.run()                           # r1 retired; prefix chain in LRU
+    st = sched.paged_stats()
+    assert st["live_blocks"] == 0 and st["lru_cached_blocks"] >= 2
+    assert (st["live_blocks"] + st["lru_cached_blocks"]
+            + st["free_blocks"] == st["pool_blocks"])
+    sched.submit(r2)
+    res = sched.run()
+    assert sched.registry.hits == 1       # hit a RETIRED prompt's blocks
+    assert res[1]["tokens"] == _solo_tokens(dense_parts, r2)
+    # real pressure: a request needing more than free+live can give forces
+    # the allocator to reclaim the LRU-cached blocks, killing the entries
+    big = Request(tokens=rng.integers(0, cfg.vocab, 40).astype(np.int32),
+                  max_new=16)             # 7 of 8 blocks
+    sched.submit(big)
+    sched.run()
+    assert sched.registry.invalidated > 0
+    assert sched.allocator.reclaimed_blocks > 0
+    hits_before = sched.registry.hits
+    sched.submit(Request(tokens=r2.tokens.copy(), max_new=4))
+    res = sched.run()
+    assert sched.registry.hits == hits_before    # entry gone: cold again
+    assert res[3]["tokens"] == _solo_tokens(dense_parts, r2)
+
+
+# ---------------------------------------------------------------------------
+# priority classes through the scheduler
+# ---------------------------------------------------------------------------
+
+def test_priority_admission_order(dense_parts):
+    """With a busy one-row pool, a critical-class submission overtakes
+    earlier saver-class submissions in the admission order (no preemption
+    needed — pure queue discipline)."""
+    cfg, params, eng = dense_parts
+    scfg = ServingConfig(slots=64, max_batch=1, priority_classes=2)
+    srv = AdaptiveServer(cfg, params, eng, scfg)
+    sched = ContinuousScheduler(srv, quantum=2)
+    rng = np.random.default_rng(5)
+    mk = lambda pr, mn: Request(tokens=rng.integers(0, cfg.vocab, 6)
+                                .astype(np.int32), max_new=mn, priority=pr)
+    r_busy = sched.submit(mk(1, 4))
+    sched.step()                          # occupies the single row
+    r_s1 = sched.submit(mk(1, 3))
+    r_s2 = sched.submit(mk(1, 3))
+    r_c = sched.submit(mk(0, 3))          # critical: jumps both savers
+    sched.run()
+    assert sched.admission_log == [r_busy, r_c, r_s1, r_s2]
+
+
+def test_critical_class_binds_profile(dense_parts):
+    """Class→profile binding: in the battery-saver regime a critical-CLASS
+    wave (no per-request flag) still selects at the accuracy target, while
+    saver-class waves drop to the floor profiles."""
+    cfg, params, eng = dense_parts
+    stats = _manager().profiles
+    mgr = ProfileManager(stats, accuracy_target=0.985, accuracy_floor=0.90,
+                         budget_j=1e9, low_energy=0.5)
+    mgr._saver = True                     # pin the saver regime
+    mgr.low_energy, mgr.hysteresis = 2.0, 0.0   # hysteresis never exits it
+    scfg = ServingConfig(slots=64, max_batch=2, priority_classes=2)
+    srv = AdaptiveServer(cfg, params, eng, scfg, manager=mgr)
+    sched = ContinuousScheduler(srv, quantum=2)
+    rng = np.random.default_rng(9)
+    sched.submit(Request(tokens=rng.integers(0, cfg.vocab, 6)
+                         .astype(np.int32), max_new=2, priority=1))
+    sched.run()
+    saver_events = list(sched.events)
+    assert all(not crit for _, _, crit in saver_events)
+    floor_pid = saver_events[0][0]
+    sched.submit(Request(tokens=rng.integers(0, cfg.vocab, 6)
+                         .astype(np.int32), max_new=2, priority=0))
+    sched.run()
+    crit_events = [e for e in sched.events[len(saver_events):] if e[1] > 0]
+    assert crit_events and all(crit for _, _, crit in crit_events)
+    assert stats[crit_events[0][0]].accuracy >= 0.985
+    assert stats[floor_pid].accuracy < 0.985
+
+
+# ---------------------------------------------------------------------------
+# preemption: token identity, invariants, ledger
+# ---------------------------------------------------------------------------
+
+def _preempt_scenario(parts, kv_bits, quantum=2):
+    """Two saver rows fill the pool and get mid-decode; a critical arrival
+    preempts one (slot pressure); everything drains. Returns (sched,
+    requests). The first saver shares CoW prefix blocks with the second."""
+    cfg, params, eng = parts
+    scfg = ServingConfig(slots=64, max_batch=2, block_size=8,
+                         kv_bits=kv_bits, priority_classes=2,
+                         preemption=True)
+    srv = AdaptiveServer(cfg, params, eng, scfg)
+    sched = ContinuousScheduler(srv, quantum=quantum)
+    rng = np.random.default_rng(17)
+    sys_p = rng.integers(0, cfg.vocab, 16).astype(np.int32)
+    s1 = Request(tokens=np.concatenate(
+        [sys_p, rng.integers(0, cfg.vocab, 4).astype(np.int32)]),
+        max_new=18, priority=1)
+    s2 = Request(tokens=np.concatenate(
+        [sys_p, rng.integers(0, cfg.vocab, 7).astype(np.int32)]),
+        max_new=16, priority=1)
+    crit = Request(tokens=rng.integers(0, cfg.vocab, 7).astype(np.int32),
+                   max_new=4, priority=0)
+    sched.submit(s1)
+    sched.step()                 # s1 cold + registers the shared prefix
+    sched.submit(s2)
+    sched.step()                 # s2 maps the prefix blocks CoW
+    sched.step()
+    sched.submit(crit)           # pool full → policy evicts a saver
+    while sched.step():
+        pass
+    return sched, [s1, s2, crit]
+
+
+@pytest.mark.parametrize("kv_bits", [16, 8])
+def test_preempt_resume_token_identity(dense_parts, kv_bits):
+    """A preempted-then-resumed row emits exactly the tokens of an
+    uninterrupted run, at bf16 and int8 KV — including the CoW sharer
+    (the victim's snapshot covers the shared span it mapped; its resume
+    rebuilds a fully private row bit-exactly)."""
+    sched, reqs = _preempt_scenario(dense_parts, kv_bits)
+    assert sched.preemptions >= 1 and sched.resumes == sched.preemptions
+    if sched.registry is not None:        # CoW sharing actually happened
+        assert sched.registry.hits >= 1
+    for rid, req in enumerate(reqs):
+        assert sched.results[rid]["tokens"] == \
+            _solo_tokens(dense_parts, req, kv_bits), f"rid={rid}"
+        assert len(sched.results[rid]["tokens"]) == req.max_new
+
+
+def test_preemption_invariants_dispatch_count_and_segment(dense_parts):
+    """The two structural invariants under preemption: every decode
+    segment of the scheduler's lifetime reuses ONE compiled executable,
+    and no admission round dispatches more than TWO prefill waves (cold /
+    shared / resume — a third kind waits a round)."""
+    cfg, params, eng = dense_parts
+    scfg = ServingConfig(slots=64, max_batch=2, block_size=8,
+                         priority_classes=2, preemption=True)
+    srv = AdaptiveServer(cfg, params, eng, scfg)
+    sched = ContinuousScheduler(srv, quantum=2)
+    counts = {"n": 0}
+
+    def wrap(fn):
+        def counting(*a, **k):
+            counts["n"] += 1
+            return fn(*a, **k)
+        return counting
+
+    for name in ("_admit_paged", "_admit_shared", "_admit_restore"):
+        fn = getattr(sched, name)
+        if fn is not None:
+            setattr(sched, name, wrap(fn))
+    per_round = []
+    orig_admit = ContinuousScheduler.admit
+
+    def admit_counted():
+        before = counts["n"]
+        r = orig_admit(sched)
+        per_round.append(counts["n"] - before)
+        return r
+
+    sched.admit = admit_counted
+    rng = np.random.default_rng(17)
+    sys_p = rng.integers(0, cfg.vocab, 16).astype(np.int32)
+    subs = [Request(tokens=np.concatenate(
+        [sys_p, rng.integers(0, cfg.vocab, k).astype(np.int32)]),
+        max_new=14, priority=1) for k in (4, 7)]
+    for r in subs:
+        sched.submit(r)
+    sched.step()
+    sched.step()
+    sched.submit(Request(tokens=rng.integers(0, cfg.vocab, 7)
+                         .astype(np.int32), max_new=4, priority=0))
+    while sched.step():
+        pass
+    assert sched.preemptions >= 1 and sched.resumes >= 1
+    assert max(per_round) <= 2, per_round     # ≤2 prefill waves per round
+    assert srv._segment._cache_size() == 1    # ONE segment executable
+
+
+def test_ledger_exact_under_preemption(dense_parts):
+    """Suspend/resume bills exactly: replaying the event log through a
+    fresh manager reproduces every profile choice and the ledger to float
+    precision, and the total billed inferences equal Σ(max_new) + nothing
+    for the resume waves — a request's bill is invariant under
+    preemption."""
+    cfg, params, eng = dense_parts
+    mgr = _manager()
+    scfg = ServingConfig(slots=64, max_batch=2, block_size=8,
+                         priority_classes=2, preemption=True)
+    srv = AdaptiveServer(cfg, params, eng, scfg, manager=mgr)
+    sched = ContinuousScheduler(srv, quantum=2)
+    rng = np.random.default_rng(31)
+    reqs = [Request(tokens=rng.integers(0, cfg.vocab, n).astype(np.int32),
+                    max_new=mn, priority=pr)
+            for n, mn, pr in [(9, 14, 1), (12, 12, 1)]]
+    for r in reqs:
+        sched.submit(r)
+    sched.step()
+    sched.step()
+    crit = Request(tokens=rng.integers(0, cfg.vocab, 6).astype(np.int32),
+                   max_new=3, priority=0)
+    reqs.append(crit)
+    sched.submit(crit)
+    while sched.step():
+        pass
+    assert sched.preemptions >= 1
+    oracle = _manager()
+    for pid, n_rows, critical in sched.events:
+        assert oracle.select(accuracy_critical=critical) == pid
+        oracle.account(pid, n_rows)
+    assert abs(oracle.spent_j - mgr.spent_j) < 1e-9
+    billed = sum(n for _, n, _ in sched.events)
+    assert billed == sum(r.max_new for r in reqs)
+
+
+def test_preemption_config_validation(dense_parts):
+    """Preemption on an unsupported stack (or without the paged pool)
+    fails loudly at server construction, and a preemptive policy on a
+    non-preemption server fails at scheduler construction."""
+    cfg, params, eng = dense_parts
+    with pytest.raises(ValueError, match="preemption"):
+        AdaptiveServer(cfg, params, eng,
+                       ServingConfig(slots=64, max_batch=2, paged_kv=False,
+                                     preemption=True))
+    srv = AdaptiveServer(cfg, params, eng,
+                         ServingConfig(slots=64, max_batch=2))
+    with pytest.raises(ValueError, match="preemptive"):
+        ContinuousScheduler(
+            srv, policy=PriorityPolicy(default_classes(2), preemptive=True))
