@@ -250,7 +250,7 @@ def _smoke_token_identity() -> dict:
             # caches can be shared across the two eager, non-donating runs:
             # decode_segment is functional, both backends read the same
             # starting state
-            ys, _, _, _ = T.decode_segment(
+            ys, _, _, _, _ = T.decode_segment(
                 params, cfg, table, sched, tok0, pos0, caches, rem,
                 paged_backend=backend)
             toks[backend] = np.asarray(ys)

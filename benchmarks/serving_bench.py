@@ -28,6 +28,15 @@ Emits ``name,us_per_call,derived`` rows (harness contract). Two experiments:
   The memory win comes from allocating only the blocks a row touches and
   storing the shared prefix once; the throughput win from admitting
   hash-matched requests with a suffix-only prefill.
+* **chaos** (``serve_chaos_*``): the fault-tolerance gate — one Poisson
+  trace with seeded NaN-logit injections into live decode rows, an
+  allocator-drought admission round, a stalled flush under the watchdog,
+  and ~10% client cancellations. Reports goodput (COMPLETED tokens over
+  the makespan), the completion-rate-by-status breakdown, and
+  detection→recovery latency of the quarantine + precision-fallback path;
+  asserts the block pool drains to zero with the paranoid per-step audit
+  clean and that a recovered request's tokens are identical to a clean
+  accuracy-critical run.
 
 CPU interpret-path numbers: what they measure is the *runtime overhead around
 the kernels* (dispatch count, host syncs, cache copies, dead-step density),
@@ -57,6 +66,7 @@ from repro.core.manager import ProfileManager, ProfileStats
 from repro.core.profiles import paper_profiles
 from repro.models import transformer as T
 from repro.serving.engine import AdaptiveServer, Request, ServingConfig
+from repro.serving.faults import FaultSchedule
 from repro.serving.scheduler import ContinuousScheduler
 
 # (batch, prompt_len, max_new, kv_bits) — batch ≥ 4 / new ≥ 32 are the
@@ -740,6 +750,223 @@ def bench_priority(cfg, params, eng, *, n_saver: int = 12, n_crit: int = 4,
     return rows, info
 
 
+# ---------------------------------------------------------------------------
+# chaos: faults + cancellations + precision-fallback recovery under load
+# ---------------------------------------------------------------------------
+
+def _chaos_manager() -> ProfileManager:
+    """Three-rung ladder pinned to battery-saver mode (``low_energy`` above
+    any remaining fraction): non-critical requests run at the floor profile,
+    so a precision-fallback escalation to the accuracy target is an
+    *observable* profile change — the regime adaptive recovery exists for.
+    The huge budget keeps the target rung eligible for the whole trace."""
+    stats = [ProfileStats(n, a, e, 1e-3) for n, a, e in [
+        ("hi", 0.99, 4.0), ("mid", 0.97, 2.0), ("lo", 0.95, 1.0)]]
+    return ProfileManager(stats, accuracy_target=0.985,
+                          accuracy_floor=0.90, budget_j=1e9,
+                          low_energy=2.0)
+
+
+def _run_chaos_trace(srv, reqs, arrivals, quantum, faults, cancel_at,
+                     retry_budget):
+    """Open-loop Poisson trace with the fault schedule armed, the paranoid
+    per-step pool audit on, and client cancellations fired from a wall-clock
+    schedule (``rid -> cancel time``); returns every terminal result."""
+    sched = ContinuousScheduler(srv, quantum=quantum, record_events=False,
+                                faults=faults, retry_budget=retry_budget,
+                                watchdog_s=1.0, paranoid=True)
+    n = len(reqs)
+    results: dict = {}
+    done_t = np.zeros((n,))
+    pending = dict(cancel_at)
+    cancelled_eff = 0
+    nxt = 0
+    t0 = time.perf_counter()
+    while len(results) < n:
+        now = time.perf_counter() - t0
+        while nxt < n and arrivals[nxt] <= now:
+            sched.submit(reqs[nxt])
+            nxt += 1
+        for rid in [r for r, at in pending.items()
+                    if r < nxt and at <= now]:
+            del pending[rid]
+            cancelled_eff += bool(sched.cancel(rid))
+        busy = sched.step()
+        if not busy and nxt < n:
+            time.sleep(min(1e-3, max(0.0, arrivals[nxt] - now)))
+        for rid, res in sched.poll_completed():
+            results[rid] = res
+            done_t[rid] = time.perf_counter() - t0
+    mk = time.perf_counter() - t0
+    return results, done_t, mk, sched, cancelled_eff
+
+
+def bench_chaos(cfg, params, eng, *, n_req: int = 24, prompt_len: int = 10,
+                max_new: int = 12, max_batch: int = 4, quantum: int = 4,
+                util: float = 0.8, cancel_frac: float = 0.10,
+                retry_budget: int = 2, p_nan: float = 0.0, seed: int = 0,
+                smoke_asserts: bool = False) -> tuple[list[tuple], dict]:
+    """Fault-tolerant serving under chaos: one Poisson trace with NaN-logit
+    injections into live decode rows, an allocator-drought admission round,
+    a flush stall under the watchdog, and ~``cancel_frac`` client
+    cancellations — measuring goodput (tokens of COMPLETED requests over
+    the makespan), the completion-rate-by-status breakdown, and
+    detection→recovery latency for the quarantine + precision-fallback
+    path. Two requests are deterministically fault-targeted on their first
+    attempt (``p_nan`` adds seeded random injections on top for the full
+    bench); the paranoid per-step audit plus a final :meth:`check` prove
+    the pool survives with zero leaked blocks.
+
+    ``smoke_asserts`` additionally requires ≥1 successful escalation
+    recovery, ≥1 effective cancellation, a clean allocator at exit, and
+    that the recovered request's tokens are identical to a clean
+    accuracy-critical run of the same prompt — the acceptance criterion
+    that fallback output is *correct*, not merely finite.
+    """
+    bs = 16
+    blocks_row = -(-(prompt_len + max_new) // bs)
+    scfg = ServingConfig(slots=prompt_len + max_new + bs,
+                         max_batch=max_batch, block_size=bs,
+                         pool_blocks=(max_batch + 1) * blocks_row,
+                         paged_kv=True, prefix_cache=False)
+    srv = AdaptiveServer(cfg, params, eng, scfg, manager=_chaos_manager())
+    rng = np.random.default_rng(seed)
+    reqs = [Request(tokens=rng.integers(0, cfg.vocab, prompt_len)
+                    .astype(np.int32), max_new=max_new)
+            for _ in range(n_req)]
+    total_tokens = n_req * max_new
+
+    # cold-wave warm at every pow2 row count, then one mini chaos run that
+    # compiles the reap-clear executable and the quarantine-retry admission
+    # (registry bypass) before anything is timed
+    wrng = np.random.default_rng(2**31 - 11)
+    w = 1
+    while w <= max_batch:
+        warm = ContinuousScheduler(srv, quantum=quantum, record_events=False)
+        for _ in range(w):
+            warm.submit(Request(tokens=wrng.integers(0, cfg.vocab, prompt_len)
+                                .astype(np.int32), max_new=2))
+        warm.run()
+        w *= 2
+    warm = ContinuousScheduler(srv, quantum=quantum, record_events=False,
+                               faults=FaultSchedule(seed, nan_at={0: (0,)}),
+                               retry_budget=retry_budget)
+    for _ in range(2):
+        warm.submit(Request(tokens=wrng.integers(0, cfg.vocab, prompt_len)
+                            .astype(np.int32), max_new=2))
+    warm.cancel(1)
+    warm.run()
+
+    def capacity():
+        best = None
+        for _ in range(2):
+            sched = ContinuousScheduler(srv, quantum=quantum,
+                                        record_events=False)
+            for r in reqs:
+                sched.submit(r)
+            t0 = time.perf_counter()
+            sched.run()
+            best = min(filter(None, (best, time.perf_counter() - t0)))
+        return total_tokens / best
+
+    cap = capacity()                        # clean closed-loop tok/s
+    busy_s = total_tokens / cap
+    arr_rng = np.random.default_rng(seed + 1)
+    lam = util * cap / max_new
+    arrivals = np.cumsum(arr_rng.exponential(1.0 / lam, n_req))
+
+    # two deterministic first-attempt NaN targets (kept out of the cancel
+    # set so the recovery path provably fires); p_nan layers seeded random
+    # injections on top in the full bench
+    targets = (1, n_req // 2)
+    faults = FaultSchedule(seed, p_nan=p_nan, max_nan=3,
+                           nan_at={t: (0,) for t in targets},
+                           alloc_at=(1,), stall_at=(0,), stall_s=0.02)
+    crng = np.random.default_rng(seed + 3)
+    cancellable = [r for r in range(n_req) if r not in targets]
+    n_cancel = min(len(cancellable), max(1, round(cancel_frac * n_req)))
+    cancel_rids = sorted(crng.choice(cancellable, size=n_cancel,
+                                     replace=False).tolist())
+    # first cancel lands AT its arrival (a queued/just-admitted kill is
+    # guaranteed effective); the rest land mid-service
+    cancel_at = {rid: arrivals[rid] + (0.0 if i == 0 else
+                                       float(crng.uniform(0, 0.5 * busy_s)))
+                 for i, rid in enumerate(cancel_rids)}
+
+    results, done_t, mk, sched, cancelled_eff = _run_chaos_trace(
+        srv, reqs, arrivals, quantum, faults, cancel_at, retry_budget)
+
+    sched.check()                           # final full pool audit
+    stats = sched.paged_stats()
+    rstats = sched.robustness_stats()
+    by_status: dict = {}
+    for res in results.values():
+        s = str(res["status"].value)
+        by_status[s] = by_status.get(s, 0) + 1
+    good_toks = sum(len(r["tokens"]) for r in results.values()
+                    if r["status"].value == "completed")
+    goodput = good_toks / mk
+    rec_ms = [1e3 * t for t in rstats["recovery_latency_s"]]
+    done_mask = np.asarray([results[r]["status"].value == "completed"
+                            for r in range(n_req)])
+    lat_ms = (done_t - arrivals)[done_mask] * 1e3
+    p50, p99 = _percentiles(lat_ms) if lat_ms.size else (0.0, 0.0)
+
+    # recovered output must match a clean accuracy-critical run exactly:
+    # the escalated retry re-prefills from the prompt at the target-bound
+    # profile, so tokens are identical — finite AND correct
+    identical = None
+    recovered_rid = next((r for r in sorted(results)
+                          if results[r]["status"].value == "completed"
+                          and results[r].get("retries", 0) >= 1), None)
+    if recovered_rid is not None:
+        clean = ContinuousScheduler(srv, quantum=quantum,
+                                    record_events=False)
+        clean.submit(Request(tokens=reqs[recovered_rid].tokens.copy(),
+                             max_new=max_new, accuracy_critical=True))
+        identical = (clean.run()[0]["tokens"]
+                     == results[recovered_rid]["tokens"])
+
+    if smoke_asserts:
+        assert stats["used_blocks"] == 0, \
+            f"leaked {stats['used_blocks']} pool blocks after drain"
+        assert rstats["recovered"] >= 1, \
+            f"no precision-fallback recovery fired: {rstats}"
+        assert cancelled_eff >= 1 and by_status.get("cancelled", 0) >= 1, \
+            f"no effective cancellation: {by_status}"
+        assert rstats["alloc_injected_rounds"] >= 1, rstats
+        assert identical is True, \
+            f"recovered rid {recovered_rid} tokens diverge from the clean " \
+            f"accuracy-critical run"
+
+    tag = f"b{max_batch}_n{n_req}x{max_new}"
+    rows = [(f"serve_chaos_{tag}", mk * 1e6,
+             f"goodput_tok_s={goodput:.0f};"
+             f"completed={by_status.get('completed', 0)};"
+             f"cancelled={by_status.get('cancelled', 0)};"
+             f"failed={by_status.get('failed', 0)};"
+             f"recovered={rstats['recovered']};"
+             f"faults_detected={rstats['faults_detected']};"
+             f"mean_recovery_ms="
+             f"{(sum(rec_ms) / len(rec_ms)) if rec_ms else 0.0:.1f}")]
+    info = {"status_counts": by_status,
+            "goodput_tok_s": goodput,
+            "delivered_tok_s": sum(len(r["tokens"])
+                                   for r in results.values()) / mk,
+            "completed_p50_ms": p50, "completed_p99_ms": p99,
+            "recovered": rstats["recovered"],
+            "recovery_latency_ms": {
+                "mean": (sum(rec_ms) / len(rec_ms)) if rec_ms else None,
+                "max": max(rec_ms) if rec_ms else None, "n": len(rec_ms)},
+            "cancels": {"scheduled": n_cancel, "effective": cancelled_eff},
+            "robustness": rstats,
+            "pool": {"used_blocks": stats["used_blocks"],
+                     "peak_used_blocks": stats["peak_used_blocks"],
+                     "allocator_clean": True},
+            "recovered_token_identical": identical}
+    return rows, info
+
+
 def _parse_args(argv=None) -> argparse.Namespace:
     ap = argparse.ArgumentParser(
         description="Serving benchmarks: fused decode, continuous batching, "
@@ -798,7 +1025,7 @@ def _assert_occupancy_consistent(stats: dict) -> None:
 def main(argv=None) -> None:
     args = _parse_args(argv)
     cfg, params, eng = _build()
-    paged_info = chunk_info = prio_info = None
+    paged_info = chunk_info = prio_info = chaos_info = None
     if args.smoke:
         rows = bench_poisson(cfg, params, eng, n_req=8, util=args.util,
                              max_batch=4, quantum=4, seed=args.seed,
@@ -832,6 +1059,18 @@ def main(argv=None) -> None:
             max_batch=2, quantum=4, seed=args.seed, min_speedup=1.2)
         rows += prows2
         assert prio_info["preemptions"] >= 1, prio_info
+        # chaos point: Poisson trace + seeded NaN-logit faults + an
+        # allocator-drought round + a flush stall + client cancellations.
+        # Asserts zero leaked pool blocks (paranoid per-step audit + final
+        # check), >=1 precision-fallback recovery, and that the recovered
+        # request's tokens match a clean accuracy-critical run — the tuned
+        # goodput/recovery numbers run in the full bench -> BENCH_6.json
+        chrows, chaos_info = bench_chaos(
+            cfg, params, eng, n_req=10, max_new=8, max_batch=4, quantum=4,
+            util=args.util, cancel_frac=0.2, seed=args.seed,
+            smoke_asserts=True)
+        rows += chrows
+        assert chaos_info["recovered"] >= 1, chaos_info
     else:
         rows = run(QUICK_POINTS if args.quick else POINTS, iters=args.iters)
         rows += bench_poisson(cfg, params, eng, n_req=args.n_req,
@@ -853,6 +1092,14 @@ def main(argv=None) -> None:
         prows2, prio_info = bench_priority(
             cfg, params, eng, seed=args.seed, min_speedup=2.0)
         rows += prows2
+        # chaos at scale: random seeded injections (p_nan) on top of the
+        # deterministic targets; goodput + completion-rate-by-status +
+        # recovery latency land in the JSON for BENCH_6
+        chrows, chaos_info = bench_chaos(
+            cfg, params, eng, n_req=max(8, args.n_req // 2),
+            util=min(args.util, 0.8), p_nan=0.05, seed=args.seed,
+            smoke_asserts=True)
+        rows += chrows
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.3f},{derived}")
@@ -869,6 +1116,8 @@ def main(argv=None) -> None:
             payload["chunked_prefill"] = chunk_info
         if prio_info is not None:
             payload["priority_preemption"] = prio_info
+        if chaos_info is not None:
+            payload["chaos"] = chaos_info
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2, default=int)
         print(f"# json written to {args.json}", file=sys.stderr)

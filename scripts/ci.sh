@@ -5,8 +5,12 @@
 # asserts the >=30% KV-footprint saving and live/LRU-cached/free block-pool
 # occupancy partition, a chunked-prefill point, and a mixed-class
 # priority+preemption point that asserts critical-class p99 beats the FIFO
-# baseline and replays the ledger exactly against the stepwise oracle),
-# then the paged-attention kernel gate (token identity vs the gather path +
+# baseline and replays the ledger exactly against the stepwise oracle, and
+# a chaos point — seeded NaN-logit faults + an allocator drought + a flush
+# stall + client cancellations — that asserts zero leaked pool blocks,
+# >=1 quarantine + precision-fallback recovery, and token-identity of the
+# recovered request vs a clean accuracy-critical run), then the
+# paged-attention kernel gate (token identity vs the gather path +
 # strictly fewer bytes per decode step), and finally the docs gate
 # smoke-executes every README/docs code snippet and checks markdown links.
 #

@@ -96,6 +96,36 @@ def main() -> None:
                          "resume bit-exactly through the continuation-"
                          "prefill executable). Requires --continuous, the "
                          "paged pool, and a full-causal stack")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request completion deadline in wall-clock ms "
+                         "from submission; queued requests past (or "
+                         "provably unable to meet) their deadline finalize "
+                         "EXPIRED, live rows are reaped at the next flush "
+                         "boundary. Requires --continuous")
+    ap.add_argument("--shed", type=int, default=None, metavar="DEPTH",
+                    help="graceful overload degradation: when the queue "
+                         "exceeds DEPTH (or the predicted deadline-miss "
+                         "count exceeds it), the lowest-priority tail "
+                         "request finalizes SHED instead of queuing. "
+                         "Requires --continuous")
+    ap.add_argument("--inject-faults", action="store_true",
+                    help="arm the seeded chaos schedule: random NaN-logit "
+                         "injections into live decode rows (detected by "
+                         "the in-segment finite check; the row is "
+                         "quarantined and retried at a higher-accuracy "
+                         "profile), plus one allocator-drought admission "
+                         "round. Requires --continuous")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed of the deterministic fault schedule "
+                         "(default: 0; only with --inject-faults)")
+    ap.add_argument("--retry-budget", type=int, default=2,
+                    help="max quarantine retries per request before it "
+                         "finalizes FAILED (default: 2)")
+    ap.add_argument("--paranoid", action="store_true",
+                    help="run the full block-pool invariant audit "
+                         "(refcounts vs free/LRU/live partition, "
+                         "BlockAllocator.check) after every scheduler "
+                         "step. Requires --continuous")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -113,6 +143,11 @@ def main() -> None:
                          low_energy=0.5)
     if args.preemption and not args.continuous:
         raise SystemExit("--preemption needs --continuous (the slot pool)")
+    if not args.continuous and (args.deadline_ms is not None
+                                or args.shed is not None
+                                or args.inject_faults or args.paranoid):
+        raise SystemExit("--deadline-ms/--shed/--inject-faults/--paranoid "
+                         "need --continuous (the fault-tolerant scheduler)")
     srv = AdaptiveServer(cfg, params, engine,
                          ServingConfig(slots=256, kv_bits=args.kv_bits,
                                        max_batch=4, paged_kv=args.paged_kv,
@@ -129,14 +164,32 @@ def main() -> None:
     reqs = [Request(tokens=rng.integers(0, cfg.vocab, int(n)).astype(np.int32),
                     max_new=args.max_new,
                     accuracy_critical=(i % 3 == 0),
-                    priority=(0 if i % 3 == 0 else n_cls - 1))
+                    priority=(0 if i % 3 == 0 else n_cls - 1),
+                    deadline_ms=args.deadline_ms)
             for i, n in enumerate(rng.integers(4, 24, args.requests))]
     import time
     t0 = time.perf_counter()
     sched = None
     if args.continuous:
+        from repro.serving.faults import FaultSchedule
+        from repro.serving.policy import ShedPolicy
         from repro.serving.scheduler import ContinuousScheduler
-        sched = ContinuousScheduler(srv, quantum=args.quantum)
+        faults = None
+        if args.inject_faults:
+            # one guaranteed recoverable fault (request 1, first attempt)
+            # plus random NaNs at ~1 per 4 requests (capped) and one
+            # drought round — every injection detected, quarantined, and
+            # retried at a higher-accuracy profile under --retry-budget
+            faults = FaultSchedule(args.fault_seed, p_nan=0.25,
+                                   max_nan=max(1, args.requests // 4),
+                                   nan_at={min(1, args.requests - 1): (0,)},
+                                   alloc_at=(2,))
+        sched = ContinuousScheduler(
+            srv, quantum=args.quantum,
+            shed=(ShedPolicy(max_queue=args.shed)
+                  if args.shed is not None else None),
+            faults=faults, retry_budget=args.retry_budget,
+            paranoid=args.paranoid)
         for r in reqs:
             sched.submit(r)
         results = sched.run()
@@ -153,8 +206,26 @@ def main() -> None:
               f"(resumed {st['resumes']})")
     n_tok = sum(len(r["tokens"]) for r in results)
     for i, r in enumerate(results):
+        status = r.get("status")
+        extra = "" if status is None else f" [{status.value}" + (
+            f": {r['reason']}]" if r.get("reason") else "]")
+        retries = r.get("retries", 0)
+        if retries:
+            extra += f" (recovered after {retries} escalated "\
+                     f"retr{'y' if retries == 1 else 'ies'})"
         print(f"[serve] req{i}: {len(r['tokens'])} tokens, "
-              f"profiles used: {sorted(set(r['profile_trace']))}")
+              f"profiles used: {sorted(set(r['profile_trace']))}{extra}")
+    if sched is not None and (args.inject_faults or args.shed is not None
+                              or args.deadline_ms is not None
+                              or args.paranoid):
+        rs = sched.robustness_stats()
+        print(f"[serve] robustness: cancelled={rs['cancelled']} "
+              f"expired={rs['expired']} shed={rs['shed']} "
+              f"failed={rs['failed']} recovered={rs['recovered']} "
+              f"faults_detected={rs['faults_detected']}")
+        sched.check()    # full pool audit (raises on any leak)
+        print("[serve] block-pool audit clean: refcounts, free list, and "
+              "LRU partition the pool exactly")
     print(f"[serve] {n_tok} tokens in {wall:.2f}s "
           f"({n_tok / wall:.0f} tok/s incl. compile; fused decode loop)")
     print(f"[serve] energy spent: {mgr.spent_j:.2e} J "

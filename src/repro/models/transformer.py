@@ -882,9 +882,9 @@ def decode_many(params: dict, cfg: ModelConfig, table: jax.Array,
     # once per call — never once per token
     if prequant is None:
         prequant = prequant_decode_weights(params, cfg, table)
-    ys, _, _, caches = decode_segment(params, cfg, table, schedule[1:],
-                                      jnp.where(live0, tok0, 0), pos0, caches,
-                                      budget - 1, prequant=prequant)
+    ys, _, _, _, caches = decode_segment(params, cfg, table, schedule[1:],
+                                         jnp.where(live0, tok0, 0), pos0,
+                                         caches, budget - 1, prequant=prequant)
     tokens = jnp.concatenate([out0[:, None], ys], axis=1)
     return tokens, schedule, caches
 
@@ -893,7 +893,8 @@ def decode_segment(params: dict, cfg: ModelConfig, table: jax.Array,
                    schedule: jax.Array, tok0: jax.Array, pos0: jax.Array,
                    caches: dict, remaining: jax.Array,
                    prequant: Optional[dict] = None,
-                   paged_backend: str = "gather"):
+                   paged_backend: str = "gather",
+                   fault_step: Optional[jax.Array] = None):
     """Fused decode *segment*: ``len(schedule)`` scan steps from an arbitrary
     mid-generation state — the continuous-batching quantum primitive.
 
@@ -919,12 +920,27 @@ def decode_segment(params: dict, cfg: ModelConfig, table: jax.Array,
       table; no ``[B, n_lblk*bs]`` view and no exit fold-back exist in the
       executable. The pool is the single KV residence of the segment.
 
-    Returns ``(tokens [B, steps], tok [B], pos [B], caches)`` — tok/pos/caches
-    are the carry for the next segment.
+    Robustness hooks (both data — the pool-lifetime single executable holds):
+
+    * ``fault_step`` ``[B]`` int32 — per-row scan step at which the row's
+      logits are replaced with NaN (−1 / out of range = never). This is the
+      deterministic fault-injection operand of the serving runtime's chaos
+      machinery (:mod:`repro.serving.faults`): it poisons the *logits* only,
+      after the KV write, so the pool is never corrupted — exactly the
+      failure mode a numerically degraded low-bit profile produces.
+    * the returned ``row_ok`` ``[B]`` bool is a per-row finite-check over
+      every live step's logits, folded into the scan carry — detection of
+      non-finite output (injected or genuine) costs no extra dispatch and
+      rides back with the segment's tokens.
+
+    Returns ``(tokens [B, steps], row_ok [B], tok [B], pos [B], caches)`` —
+    tok/pos/caches are the carry for the next segment.
     """
     if prequant is None:
         prequant = prequant_decode_weights(params, cfg, table)
     rem = jnp.asarray(remaining, jnp.int32)
+    fs = (jnp.full(jnp.shape(tok0), -1, jnp.int32) if fault_step is None
+          else jnp.asarray(fault_step, jnp.int32))
     paged = isinstance(caches.get("kv"), PagedKVCache)
     use_kernel = paged and paged_backend == "pallas"
     if paged and not use_kernel:
@@ -937,13 +953,22 @@ def decode_segment(params: dict, cfg: ModelConfig, table: jax.Array,
 
     def step(carry, xs):
         pid, i = xs
-        tok, pos, cch = carry
+        tok, pos, ok, cch = carry
         live = i < rem                       # done-mask: row still generating?
         bits_row = table[pid]
         p_step = overlay_params(params,
                                 jax.tree.map(lambda a: a[pid], prequant))
         logits, cch = decode_step(p_step, cfg, bits_row, tok[:, None], pos, cch,
                                   row_valid=live, paged_backend=paged_backend)
+        # fault injection: the targeted row's logits go NaN at its fault
+        # step — after the KV write (the pool stays clean), before the
+        # argmax and finite-check (both token and flag see the poison)
+        logits = jnp.where((i == fs)[:, None],
+                           jnp.asarray(jnp.nan, logits.dtype), logits)
+        # per-row finite-check, folded into the carry: a live row whose
+        # logits go non-finite (injected or genuine) drops its ok bit for
+        # the rest of the segment; frozen rows never count
+        ok = ok & (jnp.all(jnp.isfinite(logits), axis=-1) | ~live)
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         out = jnp.where(live, nxt, -1)
         feed = jnp.where(live, nxt, 0)
@@ -951,11 +976,12 @@ def decode_segment(params: dict, cfg: ModelConfig, table: jax.Array,
         # one slot past their last real token instead of marching around the
         # ring — with a paged cache a marching dead row would eventually wrap
         # into its first logical block, which may be a *shared* prefix block
-        return (feed, pos + live.astype(jnp.int32), cch), out
+        return (feed, pos + live.astype(jnp.int32), ok, cch), out
 
     steps = schedule.shape[0]
-    carry0 = (jnp.asarray(tok0, jnp.int32), pos0.astype(jnp.int32), caches)
-    (tok, pos, caches), ys = jax.lax.scan(
+    carry0 = (jnp.asarray(tok0, jnp.int32), pos0.astype(jnp.int32),
+              jnp.ones(jnp.shape(tok0), bool), caches)
+    (tok, pos, row_ok, caches), ys = jax.lax.scan(
         step, carry0, (schedule, jnp.arange(steps, dtype=jnp.int32)))
     if use_kernel:
         # no fold-back: every decode write already landed in the pool through
@@ -1012,7 +1038,7 @@ def decode_segment(params: dict, cfg: ModelConfig, table: jax.Array,
                 block_table=bt)
 
         caches["kv"] = jax.vmap(writeback)(caches["kv"], view)
-    return ys.T, tok, pos, caches
+    return ys.T, row_ok, tok, pos, caches
 
 
 def prefill(params: dict, cfg: ModelConfig, bits_row: jax.Array, batch: dict,

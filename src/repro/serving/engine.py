@@ -33,6 +33,7 @@ decode path contracts on the same int8 grid).
 from __future__ import annotations
 
 import dataclasses
+import enum
 from typing import Optional, Sequence
 
 import jax
@@ -43,7 +44,30 @@ from repro.core.engine import AdaptiveEngine
 from repro.core.manager import ProfileManager, ProfileStats
 from repro.models import transformer as T
 
-__all__ = ["ServingConfig", "AdaptiveServer", "Request"]
+__all__ = ["ServingConfig", "AdaptiveServer", "Request", "RequestStatus"]
+
+
+class RequestStatus(str, enum.Enum):
+    """Terminal outcome of one request — the single enum every lifecycle
+    path resolves to on ``poll_completed`` results (``result["status"]``).
+
+    ``COMPLETED`` — all ``max_new`` tokens delivered. ``CANCELLED`` — client
+    cancellation (:meth:`~repro.serving.scheduler.ContinuousScheduler.
+    cancel`); tokens generated before the cancel are delivered. ``EXPIRED``
+    — the request's ``deadline_ms`` passed (in queue, mid-generation, or
+    rejected up front as unreachable at admission — ``result["reason"]``
+    says which). ``SHED`` — dropped by the overload shedding policy
+    (:class:`~repro.serving.policy.ShedPolicy`) instead of queueing
+    unboundedly. ``FAILED`` — produced non-finite output on every attempt
+    of the quarantine/precision-fallback retry ladder. Values are plain
+    strings (``str`` subclass) so results serialize to JSON untouched.
+    """
+
+    COMPLETED = "completed"
+    CANCELLED = "cancelled"
+    EXPIRED = "expired"
+    SHED = "shed"
+    FAILED = "failed"
 
 
 def _next_pow2(n: int) -> int:
@@ -132,13 +156,18 @@ class Request:
     policy (0 = most urgent, clamped into the configured ladder; ignored
     by the classless FIFO). Class membership also binds the profile
     policy: rows of an accuracy-critical class pin selection like
-    ``accuracy_critical`` does.
+    ``accuracy_critical`` does. ``deadline_ms`` — optional client SLO in
+    milliseconds from submission: the scheduler expires the request
+    (``RequestStatus.EXPIRED``) if the deadline passes while it is queued
+    or mid-generation, and rejects it up front at admission when the
+    current throughput estimate says it cannot finish in time.
     """
 
     tokens: np.ndarray
     max_new: int = 32
     accuracy_critical: bool = False
     priority: int = 1
+    deadline_ms: Optional[float] = None
 
 
 class AdaptiveServer:
@@ -209,11 +238,16 @@ class AdaptiveServer:
         # slot-pool carry (schedule, tok, pos, caches, remaining) instead of
         # re-processing the full parameter pytree every segment — per-call
         # python overhead is what continuous batching lives or dies by
-        def segment_fn(schedule, tok, pos, caches, remaining):
+        def segment_fn(schedule, tok, pos, caches, remaining, fault_step):
+            # fault_step [B] is DATA (normally all −1): the chaos machinery's
+            # NaN-injection operand plus the per-row finite-check flag ride
+            # the one pool-lifetime segment executable — detection and
+            # injection never add a dispatch or a recompile
             return T.decode_segment(self.params, cfg, jnp.asarray(table),
                                     schedule, tok, pos, caches, remaining,
                                     prequant=self._prequant,
-                                    paged_backend=self.paged_backend)
+                                    paged_backend=self.paged_backend,
+                                    fault_step=fault_step)
 
         def admit_fn(profile_id, batch, slots_idx, tok, pos, caches):
             # one admission wave = one dispatch: ragged prefill of every

@@ -244,6 +244,61 @@ class BlockAllocator:
                 del self._lru[b]
                 self._free.append(int(b))
 
+    def check(self, expected: Optional[np.ndarray] = None) -> None:
+        """Invariant auditor: raise ``RuntimeError`` on any bookkeeping rot.
+
+        Checked invariants (the ground truth every paged-serving property
+        rests on):
+
+        * refcounts are never negative;
+        * the free list holds no duplicates and no id also parked in the
+          LRU;
+        * free-listed and LRU-cached blocks hold zero references;
+        * live (``ref > 0``) / LRU-cached / free **partition** the pool
+          exactly — in particular, a block with refcount 0 that sits in
+          neither list is a *leak* and fails here;
+        * with ``expected`` (a per-block refcount array derived from
+          external bookkeeping — the scheduler's block tables plus the
+          registry's sharer counts), the allocator's refcounts must match
+          it element-for-element.
+
+        O(pool) pure host work: cheap enough for a ``--paranoid`` serve
+        loop to run after every step, and for property tests to run after
+        every single operation.
+        """
+        ref = self._ref
+        neg = np.nonzero(ref < 0)[0]
+        if neg.size:
+            raise RuntimeError(f"negative refcount on blocks {neg.tolist()}")
+        free = [int(b) for b in self._free]
+        if len(set(free)) != len(free):
+            raise RuntimeError("duplicate ids on the free list")
+        fs, ls = set(free), {int(b) for b in self._lru}
+        both = fs & ls
+        if both:
+            raise RuntimeError(f"blocks {sorted(both)} free AND LRU-cached")
+        held = [b for b in fs | ls if ref[b] != 0]
+        if held:
+            raise RuntimeError(
+                f"free/LRU blocks {sorted(held)} hold references")
+        live = {int(b) for b in np.nonzero(ref > 0)[0]}
+        missing = set(range(self.n_blocks)) - live - fs - ls
+        if missing:
+            raise RuntimeError(
+                f"leaked blocks {sorted(missing)}: refcount 0 but on "
+                f"neither the free list nor the LRU")
+        if len(live) + len(fs) + len(ls) != self.n_blocks:
+            raise RuntimeError("live/LRU/free do not partition the pool")
+        if expected is not None:
+            exp = np.asarray(expected)
+            if exp.shape != ref.shape or not np.array_equal(exp, ref):
+                bad = np.nonzero(np.asarray(exp) != ref)[0]
+                raise RuntimeError(
+                    f"refcounts disagree with external bookkeeping on "
+                    f"blocks {bad.tolist()[:16]} "
+                    f"(allocator={ref[bad][:16].tolist()}, "
+                    f"expected={exp[bad][:16].tolist()})")
+
 
 @dataclasses.dataclass
 class PrefixEntry:
@@ -409,6 +464,17 @@ class PrefixRegistry:
         if entry.block_ids is not None:
             self.alloc.release(entry.block_ids,
                                cache=self.covered(entry.block_ids))
+
+    def add_expected_refs(self, out: np.ndarray) -> None:
+        """Accumulate the per-block references the registry's live sharers
+        account for (``sharers`` per entry block — each :meth:`acquire`
+        activated every ``block_ids`` member once) into ``out``. One half
+        of the :meth:`BlockAllocator.check` cross-audit; the scheduler adds
+        the other half from its slot block tables."""
+        for e in self._entries.values():
+            if e.block_ids is not None and e.sharers:
+                for b in e.block_ids:
+                    out[int(b)] += e.sharers
 
     def covered(self, ids) -> set:
         """The subset of ``ids`` some registered entry still claims — the

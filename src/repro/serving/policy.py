@@ -39,8 +39,8 @@ from collections import deque
 from typing import Callable, NamedTuple, Optional, Sequence
 
 __all__ = ["PriorityClass", "RowState", "SchedulingPolicy", "FifoPolicy",
-           "PriorityPolicy", "default_classes", "default_victim_picker",
-           "make_policy"]
+           "PriorityPolicy", "ShedPolicy", "default_classes",
+           "default_victim_picker", "make_policy"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -168,6 +168,22 @@ class SchedulingPolicy:
     def __len__(self) -> int:
         raise NotImplementedError
 
+    # ---- queue surgery (cancellation / expiry / shedding) ---------------
+    def remove(self, rid: int) -> bool:
+        """Remove a queued rid wherever it sits; False if not queued."""
+        raise NotImplementedError
+
+    def rids(self):
+        """All queued rids, admission order (snapshot — safe to mutate
+        the policy while iterating the returned list)."""
+        raise NotImplementedError
+
+    def shed_tail(self) -> Optional[tuple[int, int]]:
+        """The ``(rid, level)`` load shedding would drop first: the
+        *least* urgent queued request, last within its class. ``None``
+        when the queue is empty."""
+        raise NotImplementedError
+
     # ---- preemption ------------------------------------------------------
     def pick_victims(self, request, rows: Sequence[RowState],
                      need_slots: int, need_blocks: int) -> list[RowState]:
@@ -201,6 +217,19 @@ class FifoPolicy(SchedulingPolicy):
 
     def __len__(self) -> int:
         return len(self._q)
+
+    def remove(self, rid: int) -> bool:
+        try:
+            self._q.remove(rid)
+            return True
+        except ValueError:
+            return False
+
+    def rids(self):
+        return list(self._q)
+
+    def shed_tail(self) -> Optional[tuple[int, int]]:
+        return (self._q[-1], 0) if self._q else None
 
 
 class PriorityPolicy(SchedulingPolicy):
@@ -245,6 +274,25 @@ class PriorityPolicy(SchedulingPolicy):
     def __len__(self) -> int:
         return sum(len(q) for q in self._q.values())
 
+    def remove(self, rid: int) -> bool:
+        for q in self._q.values():
+            try:
+                q.remove(rid)
+                return True
+            except ValueError:
+                continue
+        return False
+
+    def rids(self):
+        return [r for lvl in range(len(self.classes))
+                for r in self._q[lvl]]
+
+    def shed_tail(self) -> Optional[tuple[int, int]]:
+        for lvl in range(len(self.classes) - 1, -1, -1):
+            if self._q[lvl]:
+                return (self._q[lvl][-1], lvl)
+        return None
+
     def pick_victims(self, request, rows: Sequence[RowState],
                      need_slots: int, need_blocks: int) -> list[RowState]:
         if not self.preemptive:
@@ -253,6 +301,37 @@ class PriorityPolicy(SchedulingPolicy):
         if not k.can_preempt:
             return []
         return self.victim_picker(k.level, rows, need_slots, need_blocks)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShedPolicy:
+    """Graceful overload degradation thresholds.
+
+    When either threshold trips at submission time, the scheduler sheds
+    the *least* urgent queued request (class tail via
+    :meth:`SchedulingPolicy.shed_tail`, or the arrival itself if it is no
+    more urgent) with :class:`~repro.serving.engine.RequestStatus.SHED` —
+    a structured refusal the client can retry elsewhere, instead of
+    admitting work that will blow every deadline in the queue.
+
+    * ``max_queue`` — queue-depth cap: shed while more than this many
+      requests wait.
+    * ``max_predicted_miss`` — deadline-pressure cap: shed when more than
+      this many queued requests are already predicted (by the scheduler's
+      per-segment wall-time EMA) to miss their deadlines.
+
+    ``None`` disables a threshold; the default instance never sheds.
+    """
+
+    max_queue: Optional[int] = None
+    max_predicted_miss: Optional[int] = None
+
+    def triggered(self, queue_depth: int, predicted_misses: int) -> bool:
+        """True when the current load calls for shedding one request."""
+        if self.max_queue is not None and queue_depth > self.max_queue:
+            return True
+        return (self.max_predicted_miss is not None
+                and predicted_misses > self.max_predicted_miss)
 
 
 def make_policy(scfg) -> SchedulingPolicy:

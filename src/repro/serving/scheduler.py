@@ -78,18 +78,42 @@ billed for), so a request's total billed inferences are invariant under
 preemption. Every billing event is recorded in
 :attr:`ContinuousScheduler.events` so the tests can replay the ledger
 against that oracle.
+
+**Fault tolerance.** Every request leaves through exactly one terminal
+:class:`~repro.serving.engine.RequestStatus` on its result dict:
+``COMPLETED`` (all tokens delivered), ``CANCELLED`` (:meth:`cancel` — queued
+requests drop immediately, live rows are reaped at the next flush boundary
+so billed inferences equal delivered tokens exactly), ``EXPIRED``
+(``Request.deadline_ms`` passed, or admission predicts — from the step-time
+EMA — that the deadline is unreachable and rejects up front), ``SHED``
+(a :class:`~repro.serving.policy.ShedPolicy` judged the pool overloaded at
+submission), or ``FAILED`` (quarantine retries exhausted). A row caught
+producing non-finite logits (the per-row finite-check rides the decode-scan
+carry — see :func:`repro.models.transformer.decode_segment`) is
+*quarantined*: its blocks are released through the same machinery as
+:meth:`evict_row`, its poisoned tokens are discarded (argmax over NaN is
+garbage — a retry must restart from the prompt to be token-identical to a
+clean run), its profile binding escalates one rung toward the accuracy
+target (``accuracy_critical=True``), and it re-queues at its class front
+after an exponential backoff, up to ``retry_budget`` attempts. Injected
+chaos (:class:`~repro.serving.faults.FaultSchedule`) and the audit
+(:meth:`check`, the ``paranoid`` mode) make all of this testable
+deterministically.
 """
 from __future__ import annotations
 
-from typing import Optional
+import dataclasses
+import time
+from typing import Callable, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models import transformer as T
-from .engine import AdaptiveServer, Request, _next_pow2
+from .engine import AdaptiveServer, Request, RequestStatus, _next_pow2
+from .faults import FaultSchedule, Watchdog
 from .paged import BlockAllocator, PrefixRegistry, RowSnapshot, prefix_keys
-from .policy import RowState, SchedulingPolicy, make_policy
+from .policy import RowState, SchedulingPolicy, ShedPolicy, make_policy
 
 __all__ = ["ContinuousScheduler"]
 
@@ -126,13 +150,29 @@ class ContinuousScheduler:
 
     def __init__(self, server: AdaptiveServer, quantum: int = 8,
                  prefill_bucket: int = 8, record_events: bool = True,
-                 policy: Optional[SchedulingPolicy] = None):
+                 policy: Optional[SchedulingPolicy] = None,
+                 shed: Optional[ShedPolicy] = None,
+                 faults: Optional[FaultSchedule] = None,
+                 retry_budget: int = 2,
+                 watchdog_s: Optional[float] = None,
+                 clock: Optional[Callable[[], float]] = None,
+                 paranoid: bool = False):
         """Build a scheduler (pool state + host bookkeeping) on ``server``.
 
         The jitted executables live on the server and are shared; the
         donated device pool (tok/pos/caches) and all queue/allocator/
         registry state are per-scheduler, so schedulers can be torn down
         and rebuilt without recompiling anything.
+
+        Robustness knobs: ``shed`` enables graceful overload degradation
+        (:class:`~repro.serving.policy.ShedPolicy` thresholds checked at
+        :meth:`submit`); ``faults`` arms deterministic chaos injection
+        (:class:`~repro.serving.faults.FaultSchedule`); ``retry_budget``
+        bounds quarantine retries before ``FAILED``; ``watchdog_s`` arms
+        the no-progress :class:`~repro.serving.faults.Watchdog` with that
+        per-step budget; ``clock`` substitutes ``time.monotonic`` (tests
+        inject virtual time to exercise deadlines without sleeping);
+        ``paranoid`` runs the full :meth:`check` audit after every step.
         """
         self.srv = server
         self.quantum = int(quantum)
@@ -199,6 +239,27 @@ class ContinuousScheduler:
         self.events: list[tuple[int, int, bool]] = []    # (pid, n_rows, crit)
         self._done: list[int] = []                       # completions, in order
         self._inflight: list[dict] = []                  # dispatched, unsynced
+        # robustness state: deadlines / cancellation / quarantine / shedding
+        self.clock = clock if clock is not None else time.monotonic
+        self.shed = shed
+        self.faults = faults
+        self.retry_budget = int(retry_budget)
+        self.watchdog = (Watchdog(float(watchdog_s))
+                         if watchdog_s is not None else None)
+        self.paranoid = bool(paranoid)
+        self._deadline: dict[int, float] = {}     # rid -> absolute deadline
+        self._to_reap: dict[int, RequestStatus] = {}     # slot -> status
+        self._nf_rows: list[int] = []             # rids w/ non-finite logits
+        self._quarantine_q: list[tuple[int, int]] = []   # (ready_round, rid)
+        self._attempts: dict[int, int] = {}       # rid -> quarantine retries
+        self._q_t0: dict[int, float] = {}         # rid -> first-fault time
+        self._round = 0
+        self._seg_dt: Optional[float] = None      # step wall-time EMA
+        self._flush_idx = 0
+        self.cancelled = self.expired = self.shed_count = self.failed = 0
+        self.recovered = self.faults_detected = 0
+        self.alloc_injected_rounds = 0
+        self.recovery_latency: list[float] = []   # seconds, fault -> done
         # the jitted segment/admit executables live on the server, so
         # schedulers can be torn down and rebuilt without recompiling
         self._segment = server._segment
@@ -296,10 +357,35 @@ class ContinuousScheduler:
         rid = self._n
         self._n += 1
         self._reqs[rid] = request
+        if request.deadline_ms is not None:
+            self._deadline[rid] = self.clock() + request.deadline_ms / 1e3
         if request.max_new <= 0:        # nothing to generate: done on arrival
-            self.results[rid] = {"tokens": [], "profile_trace": []}
+            self.results[rid] = {"tokens": [], "profile_trace": [],
+                                 "status": RequestStatus.COMPLETED}
             self._done.append(rid)
             return rid
+        if self.shed is not None and self.shed.triggered(
+                len(self.policy) + 1, self._predicted_misses()):
+            # graceful overload degradation: refuse ONE request with a
+            # structured SHED status instead of admitting doomed work. The
+            # victim is the least urgent party — the queue's class tail if
+            # it is strictly less urgent than this arrival, else the
+            # arrival itself (so a saver flood can never displace queued
+            # critical work, and a critical arrival always lands).
+            tail = self.policy.shed_tail()
+            if tail is not None and tail[1] > self.policy.klass(
+                    request).level:
+                vrid = tail[0]
+                self.policy.remove(vrid)
+                self._suspended.pop(vrid, None)
+                self._finalize(vrid, RequestStatus.SHED,
+                               reason="overload: displaced by a more "
+                                      "urgent arrival")
+            else:
+                self._finalize(rid, RequestStatus.SHED,
+                               reason="overload: queue depth or deadline "
+                                      "pressure over threshold")
+                return rid
         if self.paged and self.registry is not None:
             # hash block-aligned prefixes once, at enqueue; admission just
             # dictionary-matches them against the registry
@@ -329,8 +415,282 @@ class ContinuousScheduler:
         for rid in done:
             out.append((rid, self.results.pop(rid)))
             self._reqs.pop(rid, None)
+            self._deadline.pop(rid, None)
+            self._attempts.pop(rid, None)
+            self._q_t0.pop(rid, None)
             if self.paged and self.registry is not None:
                 self._prefix_keys.pop(rid, None)
+        return out
+
+    # ------------------------------------------- request lifecycle (terminal)
+    def _finalize(self, rid: int, status: RequestStatus,
+                  reason: Optional[str] = None) -> None:
+        """Retire a request through its one terminal status: stamp the
+        result dict, count it, and queue it for :meth:`poll_completed`.
+        Tokens already materialized stay on the result — a cancelled or
+        expired request keeps (and was billed for) exactly what it
+        actually generated."""
+        res = self.results.setdefault(rid,
+                                      {"tokens": [], "profile_trace": []})
+        res["status"] = status
+        if reason is not None:
+            res["reason"] = reason
+        if rid in self._attempts:
+            res["retries"] = self._attempts[rid]
+        self._done.append(rid)
+        if status is RequestStatus.CANCELLED:
+            self.cancelled += 1
+        elif status is RequestStatus.EXPIRED:
+            self.expired += 1
+        elif status is RequestStatus.SHED:
+            self.shed_count += 1
+        elif status is RequestStatus.FAILED:
+            self.failed += 1
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a request wherever it currently sits; True if it took.
+
+        Queued (including suspended and quarantine-backoff) requests drop
+        immediately with ``CANCELLED``. A live pool row (or mid-admission
+        chunked row) is *marked*: it is reaped at the next flush boundary
+        — every dispatched token materializes first, so the energy ledger
+        bills exactly the tokens the request actually generated, and its
+        blocks release through the same machinery as :meth:`evict_row`
+        (registry entries survive, refcounts stay exact). Returns False
+        for unknown rids and for requests already terminal — a request
+        whose last tokens are already in flight completes as
+        ``COMPLETED``, never half-cancelled.
+        """
+        if rid not in self._reqs or "status" in self.results.get(rid, {}):
+            return False
+        if self.policy.remove(rid):
+            self._suspended.pop(rid, None)
+            self._finalize(rid, RequestStatus.CANCELLED)
+            return True
+        for i, (_rdy, qrid) in enumerate(self._quarantine_q):
+            if qrid == rid:
+                del self._quarantine_q[i]
+                self._finalize(rid, RequestStatus.CANCELLED)
+                return True
+        for slot in range(self.n_slots):
+            if self.slot_req[slot] == rid:
+                if slot in self._to_reap:
+                    return False             # already marked for the reaper
+                self._to_reap[slot] = RequestStatus.CANCELLED
+                return True
+        if self.paged:
+            for slot, st in self._chunk_state.items():
+                if st["rid"] == rid:
+                    if slot in self._to_reap:
+                        return False
+                    self._to_reap[slot] = RequestStatus.CANCELLED
+                    return True
+        if rid in self._nf_rows:
+            # flagged non-finite and its slot already retired: quarantine
+            # owns it — cancellation preempts the retry
+            self._nf_rows.remove(rid)
+            self._finalize(rid, RequestStatus.CANCELLED)
+            return True
+        return False
+
+    def _eta_s(self, rid: int) -> float:
+        """Predicted seconds to finish ``rid`` if admitted now: remaining
+        tokens at the observed per-step wall-time EMA (0.0 until a first
+        segment calibrates the EMA — admission never rejects blind)."""
+        if self._seg_dt is None:
+            return 0.0
+        req = self._reqs[rid]
+        left = req.max_new - len(self.results.get(rid, {}).get("tokens", ()))
+        return -(-left // self.quantum) * self._seg_dt
+
+    def _deadline_unreachable(self, rid: int) -> bool:
+        dl = self._deadline.get(rid)
+        return dl is not None and self.clock() + self._eta_s(rid) > dl
+
+    def _predicted_misses(self) -> int:
+        """Queued requests already predicted to miss their deadlines at
+        current pool pressure (the ShedPolicy's second trigger)."""
+        if self._seg_dt is None or not self._deadline:
+            return 0
+        return sum(1 for rid in self.policy.rids()
+                   if self._deadline_unreachable(rid))
+
+    def _expire(self) -> None:
+        """Retire every request whose absolute deadline has passed:
+        queued/suspended/backoff requests finalize ``EXPIRED`` now; live
+        and chunked rows are marked for the flush-boundary reap (their
+        generated-so-far tokens are delivered with the EXPIRED result)."""
+        if not self._deadline:
+            return
+        now = self.clock()
+        for rid in self.policy.rids():
+            dl = self._deadline.get(rid)
+            if dl is not None and now > dl:
+                self.policy.remove(rid)
+                self._suspended.pop(rid, None)
+                self._finalize(rid, RequestStatus.EXPIRED)
+        if self._quarantine_q:
+            keep = []
+            for rdy, rid in self._quarantine_q:
+                dl = self._deadline.get(rid)
+                if dl is not None and now > dl:
+                    self._finalize(rid, RequestStatus.EXPIRED)
+                else:
+                    keep.append((rdy, rid))
+            self._quarantine_q = keep
+        for slot in range(self.n_slots):
+            if slot in self._to_reap:
+                continue
+            rid = self.slot_req[slot]
+            if rid is None and self.paged and slot in self._chunk_state:
+                rid = self._chunk_state[slot]["rid"]
+            if rid is None:
+                continue
+            dl = self._deadline.get(rid)
+            if dl is not None and now > dl:
+                self._to_reap[slot] = RequestStatus.EXPIRED
+
+    def _reap_marked(self) -> None:
+        """Flush-boundary reap of cancelled/expired rows: materialize every
+        dispatched token first (billed == delivered, exactly), then release
+        each marked row's blocks and unmap its table in one batched clear —
+        the same release machinery as :meth:`evict_row`, minus the snapshot
+        (nothing resumes)."""
+        if not self._to_reap:
+            return
+        self._flush(0)
+        marked, self._to_reap = self._to_reap, {}
+        clear = []
+        for slot, status in marked.items():
+            if self.paged and slot in self._chunk_state:
+                st = self._chunk_state.pop(slot)
+                rid = st["rid"]
+                self._release_blocks(st["blocks"])
+                if st["entry"] is not None:
+                    self.registry.release(st["entry"])
+                clear.append(slot)
+                if rid in self._nf_rows:
+                    self._nf_rows.remove(rid)
+                self._finalize(rid, status)
+                continue
+            rid = self.slot_req[slot]
+            if rid is None:
+                continue         # completed inside the in-flight segment
+            if rid in self._nf_rows:
+                self._nf_rows.remove(rid)    # cancel/expiry beats quarantine
+            if self.paged:
+                blocks, reg = self._slot_blocks[slot]
+                self._release_blocks(blocks)
+                if reg is not None:
+                    self.registry.release(reg)
+                self._slot_blocks[slot] = None
+                clear.append(slot)
+            self.slot_req[slot] = None
+            self._slot_crit[slot] = False
+            self._slot_level[slot] = 0
+            self.remaining[slot] = 0
+            self._finalize(rid, status)
+        if self.paged and clear:
+            self._caches = self._clear(self._pad_slot_idx(clear),
+                                       self._caches)
+
+    def _process_quarantine(self) -> None:
+        """Quarantine + precision-fallback retry for rows the decode scan
+        flagged non-finite.
+
+        The poisoned row's blocks release through the same machinery as
+        :meth:`evict_row`, but no snapshot is taken and the attempt's
+        tokens are **discarded**: everything argmaxed after the bad logits
+        is garbage, so a retry must restart from the prompt — that is what
+        makes the recovered output token-identical to a clean run at the
+        escalated profile. Escalation is one rung toward the accuracy
+        target: the retry binds ``accuracy_critical=True``, pinning the
+        ProfileManager to the highest-accuracy regime (the deterministic,
+        ledger-independent selection the oracle tests rely on). The retry
+        re-queues at its class front after an exponential backoff
+        (1, 2, 4, ... rounds); past ``retry_budget`` attempts the request
+        finalizes ``FAILED`` — never a hang, never a corrupted pool."""
+        if not self._nf_rows:
+            return
+        self._flush(0)           # may flag more rows; drain what's known
+        rows, self._nf_rows = self._nf_rows, []
+        clear = []
+        for rid in rows:
+            slot = next((s for s in range(self.n_slots)
+                         if self.slot_req[s] == rid), None)
+            if slot is not None:
+                if self.paged:
+                    blocks, reg = self._slot_blocks[slot]
+                    self._release_blocks(blocks)
+                    if reg is not None:
+                        self.registry.release(reg)
+                    self._slot_blocks[slot] = None
+                    clear.append(slot)
+                self.slot_req[slot] = None
+                self._slot_crit[slot] = False
+                self._slot_level[slot] = 0
+                self.remaining[slot] = 0
+            self.faults_detected += 1
+            attempt = self._attempts.get(rid, 0) + 1
+            self._attempts[rid] = attempt
+            self._q_t0.setdefault(rid, self.clock())
+            self.results[rid] = {"tokens": [], "profile_trace": []}
+            if attempt > self.retry_budget:
+                self._q_t0.pop(rid, None)
+                self._finalize(rid, RequestStatus.FAILED,
+                               reason="retry budget exhausted")
+                continue
+            req = self._reqs[rid]
+            if not req.accuracy_critical:
+                self._reqs[rid] = dataclasses.replace(
+                    req, accuracy_critical=True)
+            self._quarantine_q.append(
+                (self._round + (1 << (attempt - 1)), rid))
+        if self.paged and clear:
+            self._caches = self._clear(self._pad_slot_idx(clear),
+                                       self._caches)
+
+    def check(self) -> None:
+        """Full paged-pool invariant audit (no-op on non-paged pools).
+
+        Rebuilds the expected per-block refcounts from first principles —
+        one reference per live row's private block, per mid-admission
+        chunked row's private block, and per registry sharer of each
+        entry block — and hands them to
+        :meth:`~repro.serving.paged.BlockAllocator.check`, which also
+        verifies the free/LRU/live partition. Raises ``RuntimeError`` on
+        any divergence. Cheap (O(pool) host work): the ``paranoid``
+        constructor flag runs it after every step.
+        """
+        if not self.paged:
+            return
+        exp = np.zeros((self.allocator.n_blocks,), np.int64)
+        for slot in range(self.n_slots):
+            sb = self._slot_blocks[slot]
+            if sb is not None:
+                for b in sb[0]:
+                    exp[int(b)] += 1
+        for st in self._chunk_state.values():
+            for b in st["blocks"]:
+                exp[int(b)] += 1
+        if self.registry is not None:
+            self.registry.add_expected_refs(exp)
+        self.allocator.check(expected=exp)
+
+    def robustness_stats(self) -> dict:
+        """Fault-tolerance counters (bench JSON / ops surface)."""
+        out = {"cancelled": self.cancelled, "expired": self.expired,
+               "shed": self.shed_count, "failed": self.failed,
+               "recovered": self.recovered,
+               "faults_detected": self.faults_detected,
+               "alloc_injected_rounds": self.alloc_injected_rounds,
+               "recovery_latency_s": list(self.recovery_latency),
+               "watchdog_stalls": (self.watchdog.stalls
+                                   if self.watchdog is not None else 0)}
+        if self.faults is not None:
+            out.update(injected_nan=self.faults.injected_nan,
+                       injected_alloc=self.faults.injected_alloc,
+                       injected_stall=self.faults.injected_stall)
         return out
 
     # -------------------------------------------------------------- admission
@@ -350,14 +710,34 @@ class ContinuousScheduler:
         as well as slots, candidates are taken strictly in policy order,
         and each round dispatches at most two prefill waves — see
         :meth:`_admit_paged_waves`.
+
+        Admission is deadline-aware: a candidate whose deadline the
+        step-time EMA already rules unreachable is rejected here with a
+        structured ``EXPIRED`` status instead of admitted as doomed work.
+        A :class:`~repro.serving.faults.FaultSchedule` may also declare
+        the allocator dry for this round — the round skips entirely, the
+        same observable backpressure as a genuinely exhausted pool.
         """
+        if self.faults is not None and self.faults.alloc_dry(self._round):
+            self.alloc_injected_rounds += 1
+            return 0
         if self.paged:
             return self._admit_paged_waves()
         free = [s for s in range(self.n_slots) if self.slot_req[s] is None]
-        take = min(len(free), len(self.policy))
+        if not free or not len(self.policy):
+            return 0
+        rids = []
+        while len(rids) < len(free) and len(self.policy):
+            rid = self.policy.head()
+            if self._deadline_unreachable(rid):
+                self.policy.pop_head()
+                self._finalize(rid, RequestStatus.EXPIRED,
+                               reason="deadline unreachable at admission")
+                continue
+            rids.append(self.policy.pop_head())
+        take = len(rids)
         if not take:
             return 0
-        rids = [self.policy.pop_head() for _ in range(take)]
         slots = free[:take]
         reqs = [self._reqs[r] for r in rids]
         bucket = _next_pow2(max(self.bucket_min,
@@ -437,6 +817,12 @@ class ContinuousScheduler:
         pending: dict[bytes, int] = {}   # key -> n_tokens this wave registers
         while free and len(self.policy):
             rid = self.policy.head()
+            if self._deadline_unreachable(rid):
+                self.policy.pop_head()
+                self._suspended.pop(rid, None)
+                self._finalize(rid, RequestStatus.EXPIRED,
+                               reason="deadline unreachable at admission")
+                continue
             req = self._reqs[rid]
             if rid in self._suspended:
                 if "resume" not in kinds and len(kinds) >= 2:
@@ -455,7 +841,13 @@ class ContinuousScheduler:
                 continue
             plen = len(req.tokens)
             need = self._blocks_needed(plen, req.max_new)
-            keys = self._prefix_keys.get(rid, [])
+            # a quarantine retry must NOT hit the prefix registry: a match
+            # would map prompt blocks prefilled under the faulted attempt's
+            # (or any other wave's) profile, and the recovered output would
+            # no longer be token-identical to a clean run at the escalated
+            # profile — the retry recomputes its whole prompt, cold
+            keys = (self._prefix_keys.get(rid, [])
+                    if self._attempts.get(rid, 0) == 0 else [])
             entry, wait, n_shared = None, False, 0
             if self.registry is not None:
                 entry = self.registry.lookup(keys)
@@ -1176,13 +1568,24 @@ class ContinuousScheduler:
                 live_i = rem > i
                 self.events.append((int(sched[i]), int(live_i.sum()),
                                     bool((self._slot_crit & live_i).any())))
-        toks, self._tok, self._pos, self._caches = self._segment(
+        # chaos operand: normally all −1 (never fires, dead data through
+        # the one pool-lifetime executable); an armed FaultSchedule poisons
+        # a targeted row's logits at the segment's first step
+        fault = np.full((self.n_slots,), -1, np.int32)
+        if self.faults is not None:
+            for slot in range(self.n_slots):
+                rid = self.slot_req[slot]
+                if rid is None or self.remaining[slot] <= 0:
+                    continue
+                if self.faults.want_nan(rid, self._attempts.get(rid, 0)):
+                    fault[slot] = 0
+        toks, ok, self._tok, self._pos, self._caches = self._segment(
             jnp.asarray(sched), self._tok, self._pos, self._caches,
-            jnp.asarray(self.remaining, jnp.int32))
+            jnp.asarray(self.remaining, jnp.int32), jnp.asarray(fault))
         # retirement depends only on host-side remaining counts, never on
         # token *values* — so bookkeeping (and the next admission/segment
         # dispatch) proceeds without materializing ``toks``
-        entry = {"kind": "seg", "toks": toks, "sched": sched,
+        entry = {"kind": "seg", "toks": toks, "ok": ok, "sched": sched,
                  "rows": [], "completes": []}
         retired: list[int] = []
         for slot in range(self.n_slots):
@@ -1221,7 +1624,17 @@ class ContinuousScheduler:
         admission bookkeeping, and the next dispatch overlap device compute
         (async dispatch) instead of serializing on ``np.asarray`` per segment.
         A request counts as completed only once its tokens are materialized.
+
+        The flush boundary is also where fault *detection* lands on the
+        host: each segment entry carries its per-row finite-check flags,
+        and a live row that went non-finite is routed to quarantine
+        (:meth:`_process_quarantine`) instead of completing.
         """
+        if self.faults is not None and len(self._inflight) > keep:
+            s = self.faults.flush_stall(self._flush_idx)
+            self._flush_idx += 1
+            if s > 0.0:
+                time.sleep(s)            # injected stall: watchdog fodder
         names = self.srv.engine.profile_names
         while len(self._inflight) > keep:
             e = self._inflight.pop(0)
@@ -1232,28 +1645,68 @@ class ContinuousScheduler:
                     res["tokens"].append(int(arr[j]))
                     res["profile_trace"].append(e["name"])
             else:
+                okarr = (np.asarray(e["ok"])
+                         if e.get("ok") is not None else None)
                 for slot, rid, n in e["rows"]:
                     res = self.results[rid]
                     res["tokens"].extend(arr[slot, :n].tolist())
                     res["profile_trace"].extend(
                         names[p] for p in e["sched"][:n])
-            self._done.extend(e["completes"])
+                    if okarr is not None and n > 0 and not okarr[slot] \
+                            and rid not in self._nf_rows:
+                        self._nf_rows.append(rid)
+            for rid in e["completes"]:
+                if rid in self._nf_rows:
+                    continue             # quarantine owns this row now
+                res = self.results[rid]
+                res["status"] = RequestStatus.COMPLETED
+                if rid in self._attempts:
+                    res["retries"] = self._attempts[rid]
+                if rid in self._q_t0:
+                    self.recovery_latency.append(
+                        self.clock() - self._q_t0.pop(rid))
+                    self.recovered += 1
+                self._done.append(rid)
 
     # ------------------------------------------------------------------ drive
     def step(self) -> bool:
-        """Admit then run one segment, keeping one segment in flight.
-        Returns False once fully drained (all tokens materialized).
-        Mid-admission chunked rows and suspended (preempted) requests keep
-        the loop alive: each step's ``admit`` advances chunks between
-        decode segments and resumes suspended rows as resources free."""
+        """One engine round: retire deadline/cancel/fault casualties, then
+        admit and run one segment (one kept in flight). Returns False once
+        fully drained (all tokens materialized, no pending retries).
+        Mid-admission chunked rows, suspended (preempted) requests, and
+        quarantine-backoff retries keep the loop alive."""
+        self._round += 1
+        t0 = self.clock()
+        self._expire()
+        self._reap_marked()
+        self._process_quarantine()
+        if self._quarantine_q:
+            ripe = [(r, rid) for r, rid in self._quarantine_q
+                    if r <= self._round]
+            if ripe:
+                self._quarantine_q = [x for x in self._quarantine_q
+                                      if x[0] > self._round]
+                for _, rid in reversed(ripe):    # preserve relative order
+                    self.policy.push_front(rid, self._reqs[rid])
         self.admit()
+        ran = False
         if self.live_rows:
             self.run_segment()
             self._flush(keep=1)
+            ran = True
         else:
             self._flush()
+        dt = self.clock() - t0
+        if ran:         # EMA over rounds that actually ran a segment
+            self._seg_dt = (dt if self._seg_dt is None
+                            else 0.5 * dt + 0.5 * self._seg_dt)
+        if self.watchdog is not None:
+            self.watchdog.record(f"round {self._round}", dt)
+        if self.paranoid:
+            self.check()
         return bool(self.live_rows or len(self.policy) or self._inflight
-                    or (self.paged and self._chunk_state))
+                    or (self.paged and self._chunk_state)
+                    or self._to_reap or self._nf_rows or self._quarantine_q)
 
     def run(self) -> list[dict]:
         """Drain queue + pool; results in submission order (entries already

@@ -1,0 +1,179 @@
+"""BlockAllocator invariants under random operation interleavings.
+
+The paged-serving runtime's every safety property (no leaked pool blocks,
+no double-mapped blocks, prefix sharing with exact refcounts) bottoms out
+in :class:`repro.serving.paged.BlockAllocator` bookkeeping. This file
+drives the allocator through long random interleavings of
+``alloc`` / ``retain`` / ``release`` (with and without LRU caching) /
+``activate`` / ``uncache`` / pressure reclaim, mirroring every operation
+in an independent host-side model, and audits with
+:meth:`BlockAllocator.check` (refcounts + free/LRU/live pool partition)
+after **every single operation** — plus the PR-5 double-release contract:
+releasing an already-free block raises ``RuntimeError`` instead of
+corrupting the next owner's refcount.
+
+The seeded numpy driver always runs; when ``hypothesis`` is installed the
+same executor also runs under its shrinking fuzzer.
+"""
+import numpy as np
+import pytest
+
+from repro.serving.paged import BlockAllocator
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+N_BLOCKS = 12
+OPS = ("alloc", "retain", "release", "activate", "uncache",
+       "double_release", "double_release_same_call")
+
+
+def _live(ref):
+    return [int(b) for b in np.nonzero(ref > 0)[0]]
+
+
+def _apply_op(alloc, ref, lru, op, rng):
+    """Execute one operation against the allocator AND the model.
+
+    ``ref`` (np.int64 per-block refcounts) and ``lru`` (set of cached ids)
+    are the independent model; every path keeps them exactly in sync with
+    what the allocator is specified to do.
+    """
+    if op == "alloc":
+        n = int(rng.integers(1, 5))
+        avail = int((ref == 0).sum())            # free + LRU-cached
+        got = alloc.alloc(n)
+        if n > avail:
+            assert got is None, "alloc must refuse, not partially satisfy"
+        else:
+            assert got is not None and len(got) == n
+            assert len(set(got)) == n, "duplicate ids in one allocation"
+            for b in got:
+                assert ref[b] == 0, f"allocated a live block {b}"
+                ref[b] = 1
+                lru.discard(int(b))              # pressure reclaim
+    elif op == "retain":
+        live = _live(ref)
+        if live:
+            pick = [int(b) for b in rng.choice(
+                live, size=min(len(live), 2), replace=False)]
+            alloc.retain(pick)
+            for b in pick:
+                ref[b] += 1
+    elif op == "release":
+        live = _live(ref)
+        if live:
+            pick = [int(b) for b in rng.choice(
+                live, size=min(len(live), 3), replace=False)]
+            cache = {b for b in pick if rng.random() < 0.5}
+            alloc.release(pick, cache=cache)
+            for b in pick:
+                ref[b] -= 1
+                if ref[b] == 0 and b in cache:
+                    lru.add(b)
+    elif op == "activate":
+        cands = _live(ref) + sorted(lru)
+        if cands:
+            pick = [int(b) for b in rng.choice(
+                cands, size=min(len(cands), 2), replace=False)]
+            assert alloc.activate(pick) is True
+            for b in pick:
+                if ref[b] > 0:
+                    ref[b] += 1                  # extra sharer
+                else:
+                    lru.discard(b)               # resurrect from the LRU
+                    ref[b] = 1
+        free_ids = [b for b in range(len(ref))
+                    if ref[b] == 0 and b not in lru]
+        if free_ids and cands:
+            # all-or-nothing: one reclaimed/free id refuses the whole claim
+            # with NO state change (check() below proves the no-change)
+            assert alloc.activate([int(cands[0]), free_ids[0]]) is False
+    elif op == "uncache":
+        if lru:
+            b = int(rng.choice(sorted(lru)))
+            alloc.uncache([b])
+            lru.discard(b)
+        live = _live(ref)
+        if live:                                 # live ids must no-op
+            alloc.uncache([live[0]])
+    elif op == "double_release":
+        free_ids = [int(b) for b in np.nonzero(ref == 0)[0]]
+        if free_ids:
+            with pytest.raises(RuntimeError, match="double release"):
+                alloc.release([free_ids[0]])
+    elif op == "double_release_same_call":
+        singles = [b for b in _live(ref) if ref[b] == 1]
+        if singles:
+            b = int(singles[0])
+            with pytest.raises(RuntimeError, match="double release"):
+                alloc.release([b, b])
+            ref[b] = 0           # the first decrement lands before the raise
+    alloc.check(expected=ref)
+
+
+def _drain(alloc, ref):
+    """Release every reference; the pool must come back whole."""
+    for b in range(len(ref)):
+        while ref[b] > 0:
+            alloc.release([b])
+            ref[b] -= 1
+    alloc.check(expected=ref)
+    assert alloc.used_blocks == 0
+    assert alloc.available_blocks == alloc.n_blocks
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_allocator_random_interleaving(seed):
+    """250 random ops, model-checked and partition-audited after each."""
+    rng = np.random.default_rng(seed)
+    alloc = BlockAllocator(N_BLOCKS, 8)
+    reclaimed = []
+    alloc.on_reclaim = reclaimed.append
+    ref = np.zeros(N_BLOCKS, np.int64)
+    lru: set = set()
+    for _ in range(250):
+        _apply_op(alloc, ref, lru, str(rng.choice(OPS)), rng)
+    assert alloc.reclaimed_blocks == len(reclaimed)
+    _drain(alloc, ref)
+
+
+def test_check_flags_corruption():
+    """The auditor actually bites: hand-rotted state raises, specifically."""
+    alloc = BlockAllocator(4, 8)
+    alloc._free.remove(2)                        # leak block 2
+    with pytest.raises(RuntimeError, match="leaked"):
+        alloc.check()
+    alloc = BlockAllocator(4, 8)
+    got = alloc.alloc(2)
+    alloc.check(expected=[1, 1, 0, 0] if got == [0, 1] else None)
+    alloc._ref[got[0]] = 0                       # refcount lies vs free list
+    with pytest.raises(RuntimeError, match="leaked|partition"):
+        alloc.check()
+    alloc = BlockAllocator(4, 8)
+    alloc.alloc(1)
+    with pytest.raises(RuntimeError, match="disagree"):
+        alloc.check(expected=np.zeros(4, np.int64))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(ops=st.lists(st.sampled_from(OPS), max_size=120),
+           seed=st.integers(0, 2**31 - 1))
+    def test_allocator_property_hypothesis(ops, seed):
+        """Same executor under hypothesis shrinking (skipped when absent)."""
+        rng = np.random.default_rng(seed)
+        alloc = BlockAllocator(N_BLOCKS, 8)
+        ref = np.zeros(N_BLOCKS, np.int64)
+        lru: set = set()
+        for op in ops:
+            _apply_op(alloc, ref, lru, op, rng)
+        _drain(alloc, ref)
+else:                                                 # pragma: no cover
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_allocator_property_hypothesis():
+        pass

@@ -1,0 +1,331 @@
+"""Fault-tolerant serving: deadlines, cancellation, quarantine, shedding.
+
+The load-bearing properties of the robustness layer:
+
+* every request leaves through exactly ONE terminal ``RequestStatus``
+  (COMPLETED / CANCELLED / EXPIRED / SHED / FAILED) on its result;
+* cancellation and expiry mid-segment stay **oracle-exact**: replaying the
+  event log through a fresh manager reproduces every profile choice and
+  the ledger, and total billed inferences equal total delivered tokens —
+  a reaped row bills exactly what it actually generated (kv16 AND kv8,
+  shared-CoW rows included), with the ``paranoid`` allocator audit on
+  after every step;
+* deadline-aware admission rejects a request whose deadline the step-time
+  EMA already rules unreachable — structured EXPIRED, never doomed work;
+* a row caught producing non-finite logits (seeded ``FaultSchedule``
+  injection through the one pool-lifetime segment executable) is
+  quarantined, escalated one rung toward the accuracy target, retried
+  from the prompt, and completes with output **token-identical to a clean
+  run at the escalated profile**; persistent faults exhaust the bounded
+  retry budget into FAILED — never a hang, never a leaked block;
+* overload sheds the least urgent queued work with SHED (critical
+  arrivals displace saver tails, never vice versa), injected allocator
+  droughts turn into plain backpressure, and an injected flush stall
+  trips the watchdog.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core.engine import AdaptiveEngine, QuantIndex
+from repro.core.manager import ProfileManager, ProfileStats
+from repro.core.profiles import paper_profiles
+from repro.models import transformer as T
+from repro.serving.engine import (AdaptiveServer, Request, RequestStatus,
+                                  ServingConfig)
+from repro.serving.faults import FaultSchedule, Watchdog
+from repro.serving.policy import FifoPolicy, PriorityPolicy, ShedPolicy, \
+    default_classes
+from repro.serving.scheduler import ContinuousScheduler
+
+
+def _build(arch="granite-3-2b"):
+    cfg = get_smoke(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    names = T.quant_layer_names(cfg)
+    profs = paper_profiles(names, inner_layers=[])
+    eng = AdaptiveEngine(tuple(profs), QuantIndex(names),
+                         lambda p, br, b: T.train_loss(p, cfg, br, b))
+    return cfg, params, eng
+
+
+@pytest.fixture(scope="module")
+def dense_parts():
+    return _build()
+
+
+def _manager():
+    stats = [ProfileStats(n, acc, e, 1e-3) for n, acc, e in [
+        ("A16-W8", 0.99, 4.0), ("A16-W4", 0.953, 2.0), ("A8-W8", 0.988, 3.0),
+        ("A8-W4", 0.953, 1.5), ("A4-W4", 0.958, 1.0), ("Mixed", 0.975, 2.0)]]
+    return ProfileManager(stats, accuracy_target=0.985, accuracy_floor=0.90,
+                          budget_j=150.0, low_energy=0.5)
+
+
+# ---------------------------------------------------------------------------
+# pure host layer: fault schedule, watchdog, shed policy, queue surgery
+# ---------------------------------------------------------------------------
+
+def test_fault_schedule_deterministic_and_once():
+    """Injection decisions are a pure function of (seed, kind, key) — two
+    schedules with one seed agree regardless of query order — and a
+    targeted (rid, attempt) fires exactly once."""
+    a = FaultSchedule(seed=7, p_nan=0.4, p_alloc=0.3, p_stall=0.3)
+    b = FaultSchedule(seed=7, p_nan=0.4, p_alloc=0.3, p_stall=0.3)
+    keys = [(r, at) for r in range(12) for at in range(2)]
+    fwd = {k: a.want_nan(*k) for k in keys}
+    rev = {k: b.want_nan(*k) for k in reversed(keys)}
+    assert fwd == rev and any(fwd.values()) and not all(fwd.values())
+    assert [FaultSchedule(seed=7, p_alloc=0.3).alloc_dry(i)
+            for i in range(20)] == [b2.alloc_dry(i) for b2, i in
+                                    ((FaultSchedule(seed=7, p_alloc=0.3), i)
+                                     for i in range(20))]
+    tgt = FaultSchedule(nan_at={3: (1,)})
+    assert not tgt.want_nan(3, 0)
+    assert tgt.want_nan(3, 1) and not tgt.want_nan(3, 1)   # once, ever
+    assert tgt.injected_nan == 1
+    capped = FaultSchedule(seed=0, p_nan=1.0, max_nan=2)
+    assert sum(capped.want_nan(r, 0) for r in range(10)) == 2
+    st = FaultSchedule(stall_at=(2,), stall_s=0.5)
+    assert st.flush_stall(0) == 0.0 and st.flush_stall(2) == 0.5
+    wd = Watchdog(limit_s=0.1)
+    assert not wd.record("fast", 0.05) and wd.record("slow", 0.2)
+    assert wd.stalls == 1 and wd.flagged == [("slow", 0.2)]
+
+
+def test_shed_policy_and_queue_surgery():
+    """ShedPolicy thresholds, plus remove/rids/shed_tail on both queue
+    disciplines (shed_tail = least urgent class's tail)."""
+    sp = ShedPolicy(max_queue=3)
+    assert not sp.triggered(3, 0) and sp.triggered(4, 0)
+    assert ShedPolicy(max_predicted_miss=0).triggered(0, 1)
+    assert not ShedPolicy().triggered(10**6, 10**6)       # default: never
+    fifo = FifoPolicy()
+    for rid in (5, 6, 7):
+        fifo.enqueue(rid, Request(tokens=np.zeros(2, np.int32), max_new=1))
+    assert fifo.rids() == [5, 6, 7] and fifo.shed_tail() == (7, 0)
+    assert fifo.remove(6) and not fifo.remove(6)
+    assert fifo.rids() == [5, 7]
+    pol = PriorityPolicy(default_classes(2))
+    crit = Request(tokens=np.zeros(2, np.int32), max_new=1, priority=0)
+    savr = Request(tokens=np.zeros(2, np.int32), max_new=1, priority=1)
+    pol.enqueue(1, savr)
+    pol.enqueue(2, crit)
+    pol.enqueue(3, savr)
+    assert pol.rids() == [2, 1, 3]                        # critical first
+    assert pol.shed_tail() == (3, 1)                      # saver tail sheds
+    assert pol.remove(1) and pol.rids() == [2, 3]
+    pol.remove(3)
+    assert pol.shed_tail() == (2, 0)                      # only critical left
+
+
+def test_shed_at_submit_protects_critical(dense_parts):
+    """Overload sheds the least urgent party: a saver flood refuses the
+    arrival once the queue cap trips, while a critical arrival displaces
+    the queued saver tail — and never the other way around."""
+    cfg, params, eng = dense_parts
+    srv = AdaptiveServer(cfg, params, eng,
+                         ServingConfig(slots=64, max_batch=2, block_size=8,
+                                       priority_classes=2))
+    sched = ContinuousScheduler(srv, shed=ShedPolicy(max_queue=2))
+    rng = np.random.default_rng(3)
+    mk = lambda pr: Request(tokens=rng.integers(0, cfg.vocab, 6)
+                            .astype(np.int32), max_new=4, priority=pr)
+    s0, s1 = sched.submit(mk(1)), sched.submit(mk(1))
+    s2 = sched.submit(mk(1))              # depth 3 > 2: arrival sheds itself
+    assert sched.results[s2]["status"] is RequestStatus.SHED
+    assert "overload" in sched.results[s2]["reason"]
+    c0 = sched.submit(mk(0))              # critical displaces the saver tail
+    assert sched.results[s1]["status"] is RequestStatus.SHED
+    assert c0 not in sched.results and sched.policy.rids() == [c0, s0]
+    assert sched.cancel(s0) and \
+        sched.results[s0]["status"] is RequestStatus.CANCELLED
+    assert not sched.cancel(s2)           # already terminal
+    assert not sched.cancel(9999)         # unknown
+    assert sched.shed_count == 2 and sched.cancelled == 1
+    done = dict(sched.poll_completed())
+    assert {r["status"] for r in done.values()} == \
+        {RequestStatus.SHED, RequestStatus.CANCELLED}
+
+
+def test_deadline_aware_admission_rejects_doomed(dense_parts):
+    """A request the step-time EMA rules unreachable is rejected at
+    admission with structured EXPIRED — it never occupies a slot and
+    never dispatches."""
+    cfg, params, eng = dense_parts
+    srv = AdaptiveServer(cfg, params, eng,
+                         ServingConfig(slots=64, max_batch=2, block_size=8))
+    box = [0.0]
+    sched = ContinuousScheduler(srv, quantum=2, clock=lambda: box[0])
+    sched._seg_dt = 5.0                   # calibrated: 5 s per segment
+    rng = np.random.default_rng(4)
+    rid = sched.submit(Request(tokens=rng.integers(0, cfg.vocab, 6)
+                               .astype(np.int32), max_new=8,
+                               deadline_ms=1000.0))   # needs ~20 s
+    sched.step()
+    res = sched.results[rid]
+    assert res["status"] is RequestStatus.EXPIRED
+    assert "unreachable" in res["reason"] and res["tokens"] == []
+    assert rid not in sched.admission_log and sched.expired == 1
+
+
+# ---------------------------------------------------------------------------
+# execution core: cancellation / expiry stay oracle-exact (kv16 + kv8)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kv_bits", [16, 8])
+def test_cancel_expiry_mid_segment_oracle_exact(dense_parts, kv_bits):
+    """Cancel a live shared-prefix row mid-generation and expire another
+    via an injected clock; the survivors complete, every terminal result
+    carries its status, replaying the event log reproduces the ledger
+    exactly, and billed inferences == delivered tokens — reaped rows bill
+    precisely what they generated. Paranoid allocator audit on every
+    step; pool fully released at drain."""
+    cfg, params, eng = dense_parts
+    mgr = _manager()
+    srv = AdaptiveServer(cfg, params, eng,
+                         ServingConfig(slots=64, max_batch=4, block_size=8,
+                                       kv_bits=kv_bits), manager=mgr)
+    box = [0.0]
+    sched = ContinuousScheduler(srv, quantum=2, clock=lambda: box[0],
+                                paranoid=True)
+    rng = np.random.default_rng(11)
+    base = rng.integers(0, cfg.vocab, 16).astype(np.int32)
+    reqs = [
+        Request(tokens=rng.integers(0, cfg.vocab, 9).astype(np.int32),
+                max_new=10),
+        Request(tokens=np.concatenate([base, rng.integers(
+            0, cfg.vocab, 3).astype(np.int32)]), max_new=12),
+        Request(tokens=np.concatenate([base, rng.integers(
+            0, cfg.vocab, 5).astype(np.int32)]), max_new=12),
+        Request(tokens=rng.integers(0, cfg.vocab, 7).astype(np.int32),
+                max_new=40, deadline_ms=5000.0),
+    ]
+    rids = [sched.submit(r) for r in reqs]
+    queued = sched.submit(Request(
+        tokens=rng.integers(0, cfg.vocab, 6).astype(np.int32), max_new=6))
+    assert sched.cancel(queued)           # never admitted: drops clean
+    sched.step()
+    sched.step()
+    assert sched.cancel(rids[2])          # live CoW-sharing row, mid-segment
+    assert not sched.cancel(rids[2])      # idempotent: already marked →
+    box[0] = 10.0                         # terminal at the next boundary
+    while sched.step():
+        pass
+    res = {rid: sched.results[rid] for rid in rids}
+    assert res[rids[0]]["status"] is RequestStatus.COMPLETED
+    assert len(res[rids[0]]["tokens"]) == 10
+    assert res[rids[1]]["status"] is RequestStatus.COMPLETED
+    assert res[rids[2]]["status"] is RequestStatus.CANCELLED
+    assert 0 < len(res[rids[2]]["tokens"]) < 12      # partial, materialized
+    assert res[rids[3]]["status"] is RequestStatus.EXPIRED
+    assert 0 < len(res[rids[3]]["tokens"]) < 40
+    assert sched.results[queued]["tokens"] == []
+    # the ledger-oracle replay: profile choices and spend are reproduced,
+    # and the engine billed exactly the tokens it delivered
+    oracle = _manager()
+    for pid, n_rows, critical in sched.events:
+        assert oracle.select(accuracy_critical=critical) == pid
+        oracle.account(pid, n_rows)
+    assert abs(oracle.spent_j - mgr.spent_j) < 1e-9
+    billed = sum(n for _, n, _ in sched.events)
+    delivered = sum(len(r["tokens"]) for r in sched.results.values())
+    assert billed == delivered
+    sched.check()
+    assert sched.allocator.used_blocks == 0
+
+
+# ---------------------------------------------------------------------------
+# fault injection -> quarantine -> precision-fallback recovery
+# ---------------------------------------------------------------------------
+
+def test_quarantine_escalates_and_recovers_token_identical(dense_parts):
+    """The acceptance property: a row poisoned with NaN logits is detected
+    by the in-scan finite-check, quarantined (blocks released, poisoned
+    tokens discarded), escalated to the accuracy target, retried from the
+    prompt — and the recovered output is token-identical to a clean run
+    at that profile. Zero leaked blocks, recovery latency recorded."""
+    cfg, params, eng = dense_parts
+    srv = AdaptiveServer(cfg, params, eng,
+                         ServingConfig(slots=64, max_batch=2, block_size=8),
+                         manager=_manager())
+    rng = np.random.default_rng(21)
+    prompt = rng.integers(0, cfg.vocab, 11).astype(np.int32)
+    faults = FaultSchedule(nan_at={0: (0,)})      # first attempt poisoned
+    sched = ContinuousScheduler(srv, quantum=4, faults=faults,
+                                retry_budget=2, paranoid=True)
+    rid = sched.submit(Request(tokens=prompt, max_new=8))
+    res = sched.run()[rid]
+    assert res["status"] is RequestStatus.COMPLETED and res["retries"] == 1
+    assert len(res["tokens"]) == 8
+    assert sched.faults_detected == 1 and sched.recovered == 1
+    assert faults.injected_nan == 1
+    assert len(sched.recovery_latency) == 1
+    # the retry ran pinned to the accuracy target (the escalated rung)
+    crit_names = {s.name for s in srv.manager.profiles
+                  if s.accuracy >= 0.985}
+    assert set(res["profile_trace"]) <= crit_names
+    sched.check()
+    assert sched.allocator.used_blocks == 0
+    # clean accuracy-critical run on the same server: same executables,
+    # fresh pool — must reproduce the recovered tokens exactly
+    clean = ContinuousScheduler(srv, quantum=4)
+    crid = clean.submit(Request(tokens=prompt, max_new=8,
+                                accuracy_critical=True))
+    assert clean.run()[crid]["tokens"] == res["tokens"]
+    assert srv._segment._cache_size() == 1        # chaos rides ONE executable
+
+
+def test_persistent_fault_bounded_failure(dense_parts):
+    """A row that faults on every attempt exhausts the retry budget into
+    FAILED — terminal, no hang, no tokens, no leaked blocks."""
+    cfg, params, eng = dense_parts
+    srv = AdaptiveServer(cfg, params, eng,
+                         ServingConfig(slots=64, max_batch=2, block_size=8),
+                         manager=_manager())
+    rng = np.random.default_rng(22)
+    faults = FaultSchedule(nan_at={0: (0, 1, 2)})
+    sched = ContinuousScheduler(srv, quantum=4, faults=faults,
+                                retry_budget=2, paranoid=True)
+    rid = sched.submit(Request(
+        tokens=rng.integers(0, cfg.vocab, 9).astype(np.int32), max_new=6))
+    ok_rid = sched.submit(Request(
+        tokens=rng.integers(0, cfg.vocab, 9).astype(np.int32), max_new=6))
+    out = sched.run()
+    assert out[rid]["status"] is RequestStatus.FAILED
+    assert out[rid]["reason"] == "retry budget exhausted"
+    assert out[rid]["tokens"] == [] and out[rid]["retries"] == 3
+    assert out[ok_rid]["status"] is RequestStatus.COMPLETED
+    assert len(out[ok_rid]["tokens"]) == 6        # neighbor rides through
+    assert sched.failed == 1 and sched.recovered == 0
+    sched.check()
+    assert sched.allocator.used_blocks == 0
+
+
+def test_alloc_drought_stall_and_watchdog(dense_parts):
+    """An injected allocator drought turns into one round of plain
+    backpressure (requests admit next round and complete), an injected
+    flush stall trips the watchdog, and robustness_stats reports it all."""
+    cfg, params, eng = dense_parts
+    srv = AdaptiveServer(cfg, params, eng,
+                         ServingConfig(slots=64, max_batch=2, block_size=8),
+                         manager=_manager())
+    rng = np.random.default_rng(23)
+    faults = FaultSchedule(alloc_at=(1,), stall_at=(0,), stall_s=0.05)
+    sched = ContinuousScheduler(srv, quantum=2, faults=faults,
+                                watchdog_s=0.02, paranoid=True)
+    rids = [sched.submit(Request(
+        tokens=rng.integers(0, cfg.vocab, 8).astype(np.int32), max_new=5))
+        for _ in range(2)]
+    out = sched.run()
+    assert all(out[r]["status"] is RequestStatus.COMPLETED and
+               len(out[r]["tokens"]) == 5 for r in rids)
+    stats = sched.robustness_stats()
+    assert stats["alloc_injected_rounds"] == 1
+    assert stats["injected_stall"] == 1
+    assert stats["watchdog_stalls"] >= 1          # the 50 ms stall, at least
+    assert sched.watchdog.flagged
+    assert stats["cancelled"] == stats["failed"] == 0
+    sched.check()
+    assert sched.allocator.used_blocks == 0
