@@ -1,0 +1,190 @@
+#!/usr/bin/env python
+"""Hot-path discipline gate: AST lint + jaxpr budgets + runtime audit.
+
+Three blocking stages (any failure => non-zero exit):
+
+1. **lint** — ``repro.analysis.lint`` over ``src/repro`` with the
+   default hot-path spec; the tree must report zero unallowlisted
+   findings.
+2. **budgets** — every :data:`repro.analysis.budgets.REFERENCE_BUDGETS`
+   point traced on the pallas backend must pass its aval-byte ceiling
+   and the no-gather-view check; as a self-test, the gather backend must
+   *fail* the view check at the first point (proving the detector
+   detects).
+3. **scenarios** — a smoke server + scheduler run under
+   :class:`repro.analysis.tracker.SchedulerAudit` must satisfy the named
+   runtime invariants: single pool-lifetime ``_segment`` executable,
+   <= 2 prefill waves per admission round, no retrace after warmup, and
+   zero dispatches of the stepwise ``_decode`` executable.
+
+Flags for fixtures/tests:
+
+- ``--lint-root PATH`` lints an alternate tree (every file hot) instead
+  of ``src/repro`` — used by the seeded-violation canary.
+- ``--canary-budget`` checks a toy jitted function against a 1-byte
+  ceiling, which must fail — proving the budget class of violation is
+  actually fatal.
+- ``--skip-lint`` / ``--skip-budgets`` / ``--skip-scenarios`` narrow the
+  run (the CI invocation runs all three).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+
+def _parts(arch: str = "granite-3-2b"):
+    import jax
+
+    from repro.configs import get_smoke
+    from repro.core.engine import AdaptiveEngine, QuantIndex
+    from repro.core.profiles import paper_profiles
+    from repro.models import transformer as T
+
+    cfg = get_smoke(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    names = T.quant_layer_names(cfg)
+    profs = paper_profiles(names, inner_layers=[])
+    eng = AdaptiveEngine(tuple(profs), QuantIndex(names),
+                         lambda p, br, b: T.train_loss(p, cfg, br, b))
+    return cfg, params, eng
+
+
+def run_lint(lint_root: str | None) -> int:
+    from repro.analysis.lint import ALL_HOT, DEFAULT_SPEC, lint_tree
+
+    if lint_root is not None:
+        findings = lint_tree(lint_root, ALL_HOT)
+        label = lint_root
+    else:
+        findings = lint_tree(REPO / "src" / "repro", DEFAULT_SPEC)
+        label = "src/repro"
+    for f in findings:
+        print(f.render())
+    print(f"lint: {len(findings)} finding(s) in {label}")
+    return 1 if findings else 0
+
+
+def run_budgets(parts) -> int:
+    from repro.analysis import jaxpr_check
+    from repro.analysis.budgets import REFERENCE_BUDGETS, check_budget, trace_segment
+
+    rc = 0
+    for budget in REFERENCE_BUDGETS:
+        report = check_budget(parts, budget, backend="pallas")
+        print(report.render())
+        if not report.ok:
+            rc = 1
+    # Self-test: the gather backend must trip the view detector at the
+    # first reference point, or the guard is vacuous.
+    first = REFERENCE_BUDGETS[0]
+    gather = trace_segment(parts, "gather", first)
+    if not jaxpr_check.has_adjacent_dims(
+        gather, (first.batch, first.slots_padded)
+    ):
+        print("budgets: SELF-TEST FAILED — gather backend did not produce "
+              "the view aval the detector claims to catch")
+        rc = 1
+    else:
+        print("budgets: self-test ok (gather backend trips the view check)")
+    return rc
+
+
+def run_canary_budget() -> int:
+    """A toy jitted fn vs a 1-byte ceiling: must report violations."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis import jaxpr_check
+
+    def f(x):
+        return (x * 2.0).sum()
+
+    jaxpr = jax.make_jaxpr(f)(jnp.zeros((64, 64), jnp.float32))
+    violations = jaxpr_check.check_aval_budget(jaxpr, 1)
+    print(f"canary-budget: {len(violations)} violation(s) at 1-byte ceiling")
+    return 1 if violations else 0
+
+
+def run_scenarios(parts) -> int:
+    import numpy as np
+
+    from repro.analysis.budgets import MAX_PREFILL_WAVES_PER_ROUND
+    from repro.analysis.tracker import DispatchAudit, SchedulerAudit
+    from repro.serving.engine import AdaptiveServer, Request, ServingConfig
+    from repro.serving.scheduler import ContinuousScheduler
+
+    cfg, params, eng = parts
+    srv = AdaptiveServer(cfg, params, eng,
+                         ServingConfig(slots=64, max_batch=4, block_size=8))
+    sched = ContinuousScheduler(srv, quantum=4)
+    rng = np.random.default_rng(7)
+    reqs = [Request(tokens=rng.integers(0, cfg.vocab, n).astype(np.int32),
+                    max_new=mn)
+            for n, mn in [(7, 5), (9, 4), (17, 5), (5, 4), (12, 4)]]
+    rc = 0
+    with SchedulerAudit(sched) as audit, \
+            DispatchAudit(srv, ["_decode"]) as srv_audit:
+        srv_audit.forbid("_decode")     # no-per-token-dispatch
+        for r in reqs[:3]:
+            sched.submit(r)
+        while sched.step():
+            pass
+        for r in reqs[3:]:              # second admission round, warm pool
+            sched.submit(r)
+        res = sched.run()
+        try:
+            audit.assert_single_segment()           # single-segment-executable
+            audit.assert_max_prefill_waves(MAX_PREFILL_WAVES_PER_ROUND)
+            audit.assert_no_retrace(["_segment"])   # no-retrace
+        except AssertionError as e:
+            print(f"scenarios: FAIL — {e}")
+            rc = 1
+    if len(res) != len(reqs) or any(not r["tokens"] for r in res):
+        print("scenarios: FAIL — scheduler did not complete all requests")
+        rc = 1
+    if rc == 0:
+        print(f"scenarios: ok — segment dispatches={audit.calls('_segment')}, "
+              f"prefill waves/round={audit.prefill_waves_per_round}, "
+              f"stepwise _decode dispatches=0")
+    return rc
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--lint-root", default=None,
+                    help="lint this tree (all files hot) instead of src/repro")
+    ap.add_argument("--canary-budget", action="store_true",
+                    help="run the toy-budget canary (must fail => exit 1)")
+    ap.add_argument("--skip-lint", action="store_true")
+    ap.add_argument("--skip-budgets", action="store_true")
+    ap.add_argument("--skip-scenarios", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.canary_budget:
+        return run_canary_budget()
+
+    rc = 0
+    if not args.skip_lint:
+        rc |= run_lint(args.lint_root)
+    if args.lint_root is not None:
+        # Fixture lint runs don't trace the real model.
+        return rc
+    parts = None
+    if not (args.skip_budgets and args.skip_scenarios):
+        parts = _parts()
+    if not args.skip_budgets:
+        rc |= run_budgets(parts)
+    if not args.skip_scenarios:
+        rc |= run_scenarios(parts)
+    print("check_static:", "PASS" if rc == 0 else "FAIL")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -23,13 +23,20 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -x -q
 
-python benchmarks/serving_bench.py --smoke
+# hot-path discipline gate: AST lint over src/repro (zero unallowlisted
+# findings), segment jaxpr budgets at the BENCH_4/BENCH_6 reference points
+# (aval-byte ceilings + no-gather-view), and the runtime scenario audit
+# (single _segment executable, <=2 prefill waves/round, no retrace, zero
+# stepwise-_decode dispatches)
+python scripts/check_static.py
+
+python benchmarks/serving_bench.py --smoke --paranoid
 
 # paged-attention kernel gate: kernel/gather token identity on a real
 # decode_segment + strictly fewer per-decode-step bytes than the gather path
 python benchmarks/kernel_bench.py --smoke
 
-python scripts/check_docs.py README.md docs/serving.md
+python scripts/check_docs.py README.md docs/serving.md docs/analysis.md
 
 if [[ "${1:-}" == "--bench" ]]; then
     python benchmarks/serving_bench.py --quick

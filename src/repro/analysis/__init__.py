@@ -1,0 +1,43 @@
+"""Static analysis for hot-path discipline.
+
+Three layers, each usable on its own:
+
+- :mod:`repro.analysis.lint` — AST rules over source files (host syncs,
+  jit-boundary hygiene, device-constant smells) with per-line
+  ``# repro: allow(rule-id)`` suppression.
+- :mod:`repro.analysis.jaxpr_check` — invariant checks over traced jaxprs
+  (aval byte budgets, forbidden shapes, primitive counts, donation).
+- :mod:`repro.analysis.tracker` — runtime dispatch/retrace auditing for
+  jitted executables bound on a server or scheduler.
+
+:mod:`repro.analysis.budgets` pins the reference-scenario ceilings that
+``scripts/check_static.py`` enforces in CI.
+"""
+
+from repro.analysis.lint import Finding, lint_file, lint_source, lint_tree
+from repro.analysis.jaxpr_check import (
+    count_primitives,
+    count_transfers,
+    forbid_aval_shape,
+    has_adjacent_dims,
+    iter_eqns,
+    max_aval_bytes,
+    verify_donation,
+)
+from repro.analysis.tracker import DispatchAudit, SchedulerAudit
+
+__all__ = [
+    "Finding",
+    "lint_file",
+    "lint_source",
+    "lint_tree",
+    "iter_eqns",
+    "max_aval_bytes",
+    "forbid_aval_shape",
+    "has_adjacent_dims",
+    "count_primitives",
+    "count_transfers",
+    "verify_donation",
+    "DispatchAudit",
+    "SchedulerAudit",
+]

@@ -1,0 +1,187 @@
+"""Declarative per-scenario invariant budgets.
+
+Each :class:`SegmentBudget` pins a reference geometry (the BENCH_4 paged
+pool point and the BENCH_6 chaos point) and the ceilings a traced decode
+segment must respect there:
+
+- ``max_aval_bytes`` — no intermediate aval in the segment jaxpr may
+  exceed this. The ceiling sits between the pallas in-place path's
+  largest intermediate and the gather path's materialized
+  ``[B, n_lblk*bs]`` view, so a kernel regression to the gather path
+  fails the gate even before the bytes/step bench notices.
+- ``forbid_gather_view`` — the ``(B, n_lblk*bs)``-adjacent-dims aval must
+  not appear at all (named invariant ``no-gather-view``).
+
+Runtime ceilings enforced by the scenario audit (``scripts/
+check_static.py`` + :class:`repro.analysis.tracker.SchedulerAudit`):
+
+- ``single-segment-executable`` — ``_segment._cache_size() == 1`` for the
+  pool lifetime.
+- ``max-prefill-waves`` — at most :data:`MAX_PREFILL_WAVES_PER_ROUND`
+  admission-wave dispatches per ``admit()`` round (cold / shared /
+  resume).
+- ``no-retrace`` — zero new cache entries after warmup.
+- ``no-per-token-dispatch`` — the stepwise ``_decode`` executable is
+  never dispatched by the fused serving path.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import jaxpr_check
+
+# Runtime ceilings (see docs/serving.md "Invariants" 1 and 7).
+SINGLE_SEGMENT_EXECUTABLES = 1
+MAX_PREFILL_WAVES_PER_ROUND = 2
+
+
+@dataclass(frozen=True)
+class SegmentBudget:
+    """Aval-byte ceiling for a decode-segment trace at a fixed geometry."""
+
+    name: str
+    arch: str
+    batch: int
+    slots: int           # per-row token capacity
+    block_size: int
+    pool_blocks: int | None
+    kv_bits: int
+    steps: int
+    max_aval_bytes: int
+    forbid_gather_view: bool = True
+
+    @property
+    def slots_padded(self) -> int:
+        return -(-self.slots // self.block_size) * self.block_size
+
+
+# Ceilings calibrated empirically on the smoke configs (see
+# tests/test_analysis.py::test_reference_budgets_pass_on_pallas): the
+# pallas path's largest intermediate at each point, plus ~25% headroom —
+# comfortably below the gather path's materialized view at the same
+# geometry, so flipping the backend (or regressing the kernel to a
+# gather) trips the budget.
+REFERENCE_BUDGETS: tuple[SegmentBudget, ...] = (
+    # BENCH_4 paged-pool reference point: 64-block pool, bs=16, batch 8.
+    SegmentBudget(
+        name="bench4-kv16",
+        arch="granite-3-2b",
+        batch=8,
+        slots=128,
+        block_size=16,
+        pool_blocks=64,
+        kv_bits=16,
+        steps=4,
+        max_aval_bytes=163_840,
+    ),
+    SegmentBudget(
+        name="bench4-kv8",
+        arch="granite-3-2b",
+        batch=8,
+        slots=128,
+        block_size=16,
+        pool_blocks=64,
+        kv_bits=8,
+        steps=4,
+        max_aval_bytes=163_840,
+    ),
+    # BENCH_6 chaos point: tiny 10-block pool under drought, batch 4.
+    SegmentBudget(
+        name="bench6-chaos-kv16",
+        arch="granite-3-2b",
+        batch=4,
+        slots=40,
+        block_size=16,
+        pool_blocks=10,
+        kv_bits=16,
+        steps=4,
+        max_aval_bytes=163_840,
+    ),
+)
+
+
+def trace_segment(parts, backend: str, budget: SegmentBudget):
+    """Trace ``decode_segment`` at the budget's geometry.
+
+    ``parts`` is the ``(cfg, params, eng)`` triple from the smoke build.
+    Returns the closed jaxpr; pair with :func:`repro.analysis.jaxpr_check.
+    check_aval_budget` / :func:`~repro.analysis.jaxpr_check.
+    has_adjacent_dims` to enforce the budget.
+    """
+    from repro.models import transformer as T
+
+    cfg, params, eng = parts
+    caches = T.init_paged_caches(
+        cfg,
+        budget.batch,
+        budget.slots,
+        kv_bits=budget.kv_bits,
+        block_size=budget.block_size,
+        pool_blocks=budget.pool_blocks,
+    )
+    table = jnp.asarray(eng.table)
+    prequant = T.prequant_decode_weights(params, cfg, table)
+
+    def seg(schedule, tok, pos, cch, remaining):
+        return T.decode_segment(params, cfg, table, schedule, tok, pos, cch,
+                                remaining, prequant=prequant,
+                                paged_backend=backend)
+
+    b = budget.batch
+    return jax.make_jaxpr(seg)(
+        jnp.zeros((budget.steps,), jnp.int32), jnp.zeros((b,), jnp.int32),
+        jnp.zeros((b,), jnp.int32), caches, jnp.zeros((b,), jnp.int32))
+
+
+@dataclass(frozen=True)
+class BudgetReport:
+    budget: SegmentBudget
+    backend: str
+    max_bytes: int
+    violations: tuple
+    gather_view: bool
+
+    @property
+    def ok(self) -> bool:
+        if self.violations:
+            return False
+        if self.budget.forbid_gather_view and self.gather_view:
+            return False
+        return True
+
+    def render(self) -> str:
+        status = "ok" if self.ok else "FAIL"
+        lines = [
+            f"[{status}] {self.budget.name} ({self.backend}): "
+            f"max aval {self.max_bytes:,} B / budget "
+            f"{self.budget.max_aval_bytes:,} B"
+        ]
+        for v in self.violations[:5]:
+            lines.append(f"    over budget: {v.render()}")
+        if self.budget.forbid_gather_view and self.gather_view:
+            lines.append(
+                f"    gather view present: adjacent dims "
+                f"({self.budget.batch}, {self.budget.slots_padded})"
+            )
+        return "\n".join(lines)
+
+
+def check_budget(parts, budget: SegmentBudget,
+                 backend: str = "pallas") -> BudgetReport:
+    """Trace the segment at the budget point and evaluate every ceiling."""
+    jaxpr = trace_segment(parts, backend, budget)
+    return BudgetReport(
+        budget=budget,
+        backend=backend,
+        max_bytes=jaxpr_check.max_aval_bytes(jaxpr),
+        violations=tuple(
+            jaxpr_check.check_aval_budget(jaxpr, budget.max_aval_bytes)
+        ),
+        gather_view=jaxpr_check.has_adjacent_dims(
+            jaxpr, (budget.batch, budget.slots_padded)
+        ),
+    )

@@ -1,0 +1,633 @@
+"""AST lint rules for hot-path discipline.
+
+Rules (each has a kebab-case ID, a fix hint, and an inline escape hatch):
+
+- ``host-sync`` — a construct that forces device->host synchronization
+  inside a hot-path scope: ``.item()``, ``.block_until_ready()``,
+  ``int()/float()/bool()`` applied to a device-tainted expression, or
+  ``np.asarray``/``np.array`` of a device-tainted expression.
+- ``missing-donate`` — ``jax.jit`` of a locally-defined function that
+  threads a carry (a parameter named ``caches`` or ``carry``) without
+  ``donate_argnums``/``donate_argnames``.
+- ``tracer-branch`` — Python ``if``/``while`` on a bare parameter name
+  inside a function that is ``jax.jit``-ed in the same module; under jit
+  the parameter is a tracer and the branch either fails or bakes in a
+  constant.
+- ``late-closure`` — a nested ``def``/``lambda`` reading a local variable
+  that is first assigned *after* the nested function's definition line;
+  under jit the closure captures whatever the name holds at trace time.
+- ``device-constant`` — a large literal list/tuple (>= 64 scalar
+  elements) passed to ``jnp.array``/``jnp.asarray``/``np.array`` inside a
+  hot-path scope; constants this size should be loaded once at module
+  scope, not re-materialized per trace.
+
+Suppression: append ``# repro: allow(rule-id) <reason>`` on the finding
+line, the line directly above it, or the ``def`` line of the enclosing
+function (which suppresses the rule for the whole function body).
+
+Device taint is a deliberately simple single-pass, per-function dataflow:
+names become tainted when assigned from ``jnp.*``/``lax.*`` calls, from
+calls of known jitted-executable attributes (``self._segment`` etc.), from
+attributes/names that are conventionally device arrays in this codebase
+(``_tok``, ``_pos``, ``_caches``), or from subscripting a tainted value.
+``np.asarray(x)`` on a tainted ``x`` is itself a finding, and its result
+is treated as host (taint cleared) so downstream ``int()`` calls on the
+materialized copy do not double-report.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Callable, Iterable, Sequence
+
+# ---------------------------------------------------------------------------
+# Rule registry
+
+
+@dataclass(frozen=True)
+class Rule:
+    id: str
+    summary: str
+    hint: str
+
+
+RULES: dict[str, Rule] = {
+    r.id: r
+    for r in [
+        Rule(
+            "host-sync",
+            "device->host synchronization in a hot-path scope",
+            "keep the value on device (lax.cond / jnp ops), or move the sync "
+            "to a flush boundary and allowlist it with a justification",
+        ),
+        Rule(
+            "missing-donate",
+            "jax.jit of a carry-threading function without donate_argnums",
+            "pass donate_argnums=(i,) for the carry parameter so XLA can "
+            "reuse its buffer in place",
+        ),
+        Rule(
+            "tracer-branch",
+            "Python branch on a jit parameter (a tracer at trace time)",
+            "use lax.cond/lax.select or jnp.where on the traced value",
+        ),
+        Rule(
+            "late-closure",
+            "closure reads a local assigned after the nested def",
+            "bind the value as a default argument or define it before the "
+            "nested function",
+        ),
+        Rule(
+            "device-constant",
+            "large literal array constructed inside a hot-path function",
+            "hoist the constant to module scope so it is materialized once",
+        ),
+    ]
+}
+
+_ALLOW_RE = re.compile(r"#\s*repro:\s*allow\(([\w-]+)\)")
+
+# Device-taint seeds: calls of these attribute names return device arrays.
+_JITTED_ATTRS = {
+    "_prefill",
+    "_decode",
+    "_generate",
+    "_segment",
+    "_admit",
+    "_admit_paged",
+    "_admit_shared",
+    "_admit_restore",
+    "_clear",
+    "_clear_rows",
+}
+# Attributes / names conventionally holding device arrays in this codebase.
+_DEVICE_NAMES = {"_tok", "_pos", "_caches"}
+# Dict keys whose values are device arrays (flush entries).
+_DEVICE_KEYS = {"toks", "ok"}
+
+_COERCIONS = {"int", "float", "bool"}
+_NP_MATERIALIZE = {"asarray", "array"}
+_DEVICE_CONSTANT_MIN = 64
+
+
+@dataclass(frozen=True)
+class Finding:
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    @property
+    def hint(self) -> str:
+        return RULES[self.rule].hint
+
+    def render(self) -> str:
+        return (
+            f"{self.path}:{self.line}: [{self.rule}] {self.message}\n"
+            f"    hint: {RULES[self.rule].hint}"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Hot-path scoping
+
+
+@dataclass(frozen=True)
+class HotPathSpec:
+    """Which (file, function) pairs the hot-path rules apply to.
+
+    ``dirs`` — every function in any file under these directories is hot.
+    ``files`` — every function in these files is hot.
+    ``func_substr`` — maps a file to a substring; only functions whose
+    name contains the substring are hot in that file.
+    """
+
+    dirs: tuple[str, ...] = ()
+    files: tuple[str, ...] = ()
+    func_substr: tuple[tuple[str, str], ...] = ()
+
+    def file_in_scope(self, rel: str) -> bool:
+        rel = rel.replace("\\", "/")
+        if any(rel == f for f in self.files):
+            return True
+        if any(d == "" or rel.startswith(d.rstrip("/") + "/") for d in self.dirs):
+            return True
+        return any(rel == f for f, _ in self.func_substr)
+
+    def func_is_hot(self, rel: str, func_name: str) -> bool:
+        rel = rel.replace("\\", "/")
+        for f, sub in self.func_substr:
+            if rel == f:
+                return sub in func_name
+        return self.file_in_scope(rel)
+
+
+# The tree spec used by scripts/check_static.py: kernels and the serving
+# scheduler/engine are hot everywhere; in the model stack only decode-path
+# functions are hot (prefill/training paths may sync freely).
+DEFAULT_SPEC = HotPathSpec(
+    dirs=("kernels",),
+    files=("serving/scheduler.py", "serving/engine.py"),
+    func_substr=(("models/transformer.py", "decode"),),
+)
+
+# Fixture/test spec: everything is hot.
+ALL_HOT = HotPathSpec(dirs=("",), files=())
+
+
+# ---------------------------------------------------------------------------
+# Helpers over the AST
+
+
+def _call_root(node: ast.AST) -> str | None:
+    """Dotted-name root of a call target: jnp.asarray -> 'jnp'."""
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def _dotted(node: ast.AST) -> str | None:
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _literal_len(node: ast.AST) -> int:
+    """Number of scalar constants in a (possibly nested) list/tuple literal."""
+    if isinstance(node, (ast.List, ast.Tuple)):
+        return sum(_literal_len(e) for e in node.elts)
+    if isinstance(node, ast.Constant) and isinstance(node.value, (int, float, complex)):
+        return 1
+    if (
+        isinstance(node, ast.BinOp)
+        and isinstance(node.op, ast.Mult)
+        and isinstance(node.right, ast.Constant)
+        and isinstance(node.right.value, int)
+    ):
+        return _literal_len(node.left) * node.right.value
+    return 0
+
+
+class _TaintTracker:
+    """Single-pass per-function device-taint approximation."""
+
+    def __init__(self) -> None:
+        self.tainted: set[str] = set()
+
+    def expr_is_tainted(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Attribute):
+            if node.attr in _DEVICE_NAMES:
+                return True
+            return self.expr_is_tainted(node.value)
+        if isinstance(node, ast.Subscript):
+            if isinstance(node.slice, ast.Constant) and node.slice.value in _DEVICE_KEYS:
+                return True
+            return self.expr_is_tainted(node.value)
+        if isinstance(node, ast.Call):
+            root = _call_root(node.func)
+            if root in ("jnp", "lax"):
+                return True
+            if isinstance(node.func, ast.Attribute) and node.func.attr in _JITTED_ATTRS:
+                return True
+            dotted = _dotted(node.func) or ""
+            if dotted.startswith("jax.") and not dotted.startswith("jax.debug"):
+                return True
+            # method call on a tainted value: x.sum(), cache.at[...].set(...)
+            if isinstance(node.func, ast.Attribute) and self.expr_is_tainted(
+                node.func.value
+            ):
+                return True
+            return False
+        if isinstance(node, ast.BinOp):
+            return self.expr_is_tainted(node.left) or self.expr_is_tainted(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.expr_is_tainted(node.operand)
+        if isinstance(node, ast.Compare):
+            return self.expr_is_tainted(node.left) or any(
+                self.expr_is_tainted(c) for c in node.comparators
+            )
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self.expr_is_tainted(e) for e in node.elts)
+        if isinstance(node, ast.IfExp):
+            return self.expr_is_tainted(node.body) or self.expr_is_tainted(node.orelse)
+        if isinstance(node, ast.Starred):
+            return self.expr_is_tainted(node.value)
+        return False
+
+    def _mark(self, target: ast.AST, tainted: bool) -> None:
+        if isinstance(target, ast.Name):
+            if tainted:
+                self.tainted.add(target.id)
+            else:
+                self.tainted.discard(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                self._mark(e, tainted)
+        # Attribute/subscript targets: taint is tracked on the base name.
+
+    def observe_assign(self, node: ast.Assign | ast.AugAssign | ast.AnnAssign) -> None:
+        value = node.value
+        if value is None:
+            return
+        tainted = self.expr_is_tainted(value)
+        # np.asarray(...) materializes to host: result is NOT tainted.
+        if (
+            isinstance(value, ast.Call)
+            and _call_root(value.func) == "np"
+            and isinstance(value.func, ast.Attribute)
+            and value.func.attr in _NP_MATERIALIZE
+        ):
+            tainted = False
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                self._mark(t, tainted)
+        else:
+            self._mark(node.target, tainted)
+
+
+# ---------------------------------------------------------------------------
+# Allow-pragma handling
+
+
+class _Allowlist:
+    def __init__(self, source_lines: Sequence[str]) -> None:
+        # line number (1-based) -> set of allowed rule ids on that line
+        self.by_line: dict[int, set[str]] = {}
+        for i, text in enumerate(source_lines, start=1):
+            ids = {m.group(1) for m in _ALLOW_RE.finditer(text)}
+            if ids:
+                self.by_line[i] = ids
+        # def-line allows extend over the function body; filled by the linter.
+        self.by_range: list[tuple[int, int, set[str]]] = []
+
+    def add_function_scope(self, def_line: int, end_line: int) -> None:
+        ids = self.by_line.get(def_line)
+        if ids:
+            self.by_range.append((def_line, end_line, set(ids)))
+
+    def allows(self, line: int, rule: str) -> bool:
+        for probe in (line, line - 1):
+            if rule in self.by_line.get(probe, set()):
+                return True
+        return any(lo <= line <= hi and rule in ids for lo, hi, ids in self.by_range)
+
+
+# ---------------------------------------------------------------------------
+# The linter
+
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, rel_path: str, source: str, spec: HotPathSpec) -> None:
+        self.rel = rel_path
+        self.spec = spec
+        self.lines = source.splitlines()
+        self.allow = _Allowlist(self.lines)
+        self.findings: list[Finding] = []
+        # module-level pass 1 state
+        self.jitted_func_names: set[str] = set()  # local defs passed to jax.jit
+        self.local_defs: dict[str, ast.FunctionDef] = {}
+        self._func_stack: list[ast.FunctionDef] = []
+        self._taint_stack: list[_TaintTracker] = []
+
+    # -- driving ------------------------------------------------------------
+
+    def run(self, tree: ast.Module) -> list[Finding]:
+        self._collect_defs(tree)
+        self._collect_jit_targets(tree)
+        self.visit(tree)
+        return self.findings
+
+    def _collect_defs(self, tree: ast.Module) -> None:
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.local_defs[node.name] = node  # type: ignore[assignment]
+                self.allow.add_function_scope(node.lineno, node.end_lineno or node.lineno)
+
+    def _collect_jit_targets(self, tree: ast.Module) -> None:
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            dotted = _dotted(node.func)
+            if dotted not in ("jax.jit", "jit"):
+                continue
+            if node.args and isinstance(node.args[0], ast.Name):
+                self.jitted_func_names.add(node.args[0].id)
+
+    def _emit(self, node: ast.AST, rule: str, message: str) -> None:
+        line = getattr(node, "lineno", 0)
+        if self.allow.allows(line, rule):
+            return
+        self.findings.append(Finding(self.rel, line, rule, message))
+
+    def _in_hot_func(self) -> bool:
+        if not self._func_stack:
+            return False
+        return self.spec.func_is_hot(self.rel, self._func_stack[0].name)
+
+    @property
+    def _taint(self) -> _TaintTracker | None:
+        return self._taint_stack[-1] if self._taint_stack else None
+
+    # -- function scoping ---------------------------------------------------
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._check_late_closure_container(node)
+        self._func_stack.append(node)
+        tracker = _TaintTracker()
+        # Parameters named like device carries seed the taint set.
+        for arg in list(node.args.args) + list(node.args.kwonlyargs):
+            if arg.arg in ("caches", "carry", "tok", "pos") or arg.arg in _DEVICE_NAMES:
+                tracker.tainted.add(arg.arg)
+        self._taint_stack.append(tracker)
+        self.generic_visit(node)
+        self._taint_stack.pop()
+        self._func_stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef  # type: ignore[assignment]
+
+    # -- assignments feed the taint tracker ---------------------------------
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        self.generic_visit(node)
+        if self._taint is not None:
+            self._taint.observe_assign(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        self.generic_visit(node)
+        if self._taint is not None:
+            self._taint.observe_assign(node)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
+        self.generic_visit(node)
+        if self._taint is not None:
+            self._taint.observe_assign(node)
+
+    # -- host-sync ----------------------------------------------------------
+
+    def visit_Call(self, node: ast.Call) -> None:
+        hot = self._in_hot_func()
+        taint = self._taint
+
+        if hot and isinstance(node.func, ast.Attribute):
+            if node.func.attr == "item" and not node.args:
+                self._emit(node, "host-sync", ".item() forces a device sync")
+            elif node.func.attr == "block_until_ready":
+                self._emit(
+                    node, "host-sync", ".block_until_ready() outside benchmarks"
+                )
+
+        if hot and taint is not None:
+            # int()/float()/bool() on a tainted expression
+            if (
+                isinstance(node.func, ast.Name)
+                and node.func.id in _COERCIONS
+                and node.args
+                and taint.expr_is_tainted(node.args[0])
+            ):
+                self._emit(
+                    node,
+                    "host-sync",
+                    f"{node.func.id}() on a device value pulls it to host",
+                )
+            # np.asarray / np.array on a tainted expression
+            if (
+                isinstance(node.func, ast.Attribute)
+                and _call_root(node.func) == "np"
+                and node.func.attr in _NP_MATERIALIZE
+                and node.args
+                and taint.expr_is_tainted(node.args[0])
+            ):
+                self._emit(
+                    node,
+                    "host-sync",
+                    f"np.{node.func.attr}() of a device value forces a transfer",
+                )
+
+        # missing-donate: jax.jit(fn) of a local def threading a carry
+        dotted = _dotted(node.func)
+        if dotted in ("jax.jit", "jit") and node.args:
+            self._check_missing_donate(node)
+
+        # device-constant: big literal into an array constructor
+        if hot and isinstance(node.func, ast.Attribute):
+            root = _call_root(node.func)
+            if root in ("jnp", "np") and node.func.attr in ("array", "asarray"):
+                if node.args and _literal_len(node.args[0]) >= _DEVICE_CONSTANT_MIN:
+                    self._emit(
+                        node,
+                        "device-constant",
+                        f"literal array of {_literal_len(node.args[0])} elements "
+                        "built inside a hot function",
+                    )
+
+        self.generic_visit(node)
+
+    def _check_missing_donate(self, node: ast.Call) -> None:
+        target = node.args[0]
+        if not isinstance(target, ast.Name):
+            return
+        fn = self.local_defs.get(target.id)
+        if fn is None:
+            return
+        params = [a.arg for a in fn.args.args]
+        if not any(p in ("caches", "carry") for p in params):
+            return
+        kw_names = {k.arg for k in node.keywords}
+        if not kw_names & {"donate_argnums", "donate_argnames"}:
+            self._emit(
+                node,
+                "missing-donate",
+                f"jax.jit({target.id}) threads a carry "
+                f"({[p for p in params if p in ('caches', 'carry')][0]!r}) "
+                "without donate_argnums",
+            )
+
+    # -- tracer-branch ------------------------------------------------------
+
+    def _branch_on_param(self, test: ast.AST) -> str | None:
+        if not self._func_stack:
+            return None
+        fn = self._func_stack[-1]
+        if fn.name not in self.jitted_func_names:
+            return None
+        params = {a.arg for a in fn.args.args} | {a.arg for a in fn.args.kwonlyargs}
+        if isinstance(test, ast.Name) and test.id in params:
+            return test.id
+        return None
+
+    def visit_If(self, node: ast.If) -> None:
+        name = self._branch_on_param(node.test)
+        if name is not None:
+            self._emit(
+                node, "tracer-branch", f"`if {name}:` inside a jitted function"
+            )
+        self.generic_visit(node)
+
+    def visit_While(self, node: ast.While) -> None:
+        name = self._branch_on_param(node.test)
+        if name is not None:
+            self._emit(
+                node, "tracer-branch", f"`while {name}:` inside a jitted function"
+            )
+        self.generic_visit(node)
+
+    # -- late-closure -------------------------------------------------------
+
+    def _check_late_closure_container(self, node: ast.FunctionDef) -> None:
+        """For each nested def/lambda in `node`, flag reads of locals first
+        assigned after the nested function's definition line."""
+        assign_line: dict[str, int] = {}
+        for a in list(node.args.args) + list(node.args.kwonlyargs):
+            assign_line.setdefault(a.arg, node.lineno)
+        nested: list[ast.FunctionDef | ast.Lambda] = []
+
+        def scan(n: ast.AST) -> None:
+            for child in ast.iter_child_nodes(n):
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+                    nested.append(child)  # do not descend: its locals are its own
+                    continue
+                if isinstance(child, ast.Assign):
+                    for t in child.targets:
+                        for nm in _target_names(t):
+                            assign_line.setdefault(nm, child.lineno)
+                elif isinstance(child, (ast.AugAssign, ast.AnnAssign)):
+                    for nm in _target_names(child.target):
+                        assign_line.setdefault(nm, child.lineno)
+                elif isinstance(child, ast.For):
+                    for nm in _target_names(child.target):
+                        assign_line.setdefault(nm, child.lineno)
+                scan(child)
+
+        scan(node)
+        for fn in nested:
+            own = _local_names(fn)
+            for name_node in ast.walk(fn):
+                if not isinstance(name_node, ast.Name) or not isinstance(
+                    name_node.ctx, ast.Load
+                ):
+                    continue
+                nm = name_node.id
+                if nm in own:
+                    continue
+                first = assign_line.get(nm)
+                if first is not None and first > fn.lineno:
+                    self._emit(
+                        fn,
+                        "late-closure",
+                        f"closure reads {nm!r}, first assigned at line {first} "
+                        f"(after the def at line {fn.lineno})",
+                    )
+                    break  # one finding per nested function is enough
+
+
+def _target_names(t: ast.AST) -> Iterable[str]:
+    if isinstance(t, ast.Name):
+        yield t.id
+    elif isinstance(t, (ast.Tuple, ast.List)):
+        for e in t.elts:
+            yield from _target_names(e)
+
+
+def _local_names(fn: ast.FunctionDef | ast.Lambda) -> set[str]:
+    names: set[str] = set()
+    args = fn.args
+    for a in list(args.args) + list(args.kwonlyargs) + list(args.posonlyargs):
+        names.add(a.arg)
+    if args.vararg:
+        names.add(args.vararg.arg)
+    if args.kwarg:
+        names.add(args.kwarg.arg)
+    body = fn.body if isinstance(fn.body, list) else [fn.body]
+    for stmt in body:
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+                names.add(node.id)
+    return names
+
+
+# ---------------------------------------------------------------------------
+# Public API
+
+
+def lint_source(
+    source: str, rel_path: str = "<string>", spec: HotPathSpec = ALL_HOT
+) -> list[Finding]:
+    tree = ast.parse(source)
+    return _Linter(rel_path, source, spec).run(tree)
+
+
+def lint_file(path: str | Path, root: str | Path | None = None,
+              spec: HotPathSpec = DEFAULT_SPEC) -> list[Finding]:
+    path = Path(path)
+    rel = str(path.relative_to(root)) if root is not None else path.name
+    return lint_source(path.read_text(), rel, spec)
+
+
+def lint_tree(
+    root: str | Path,
+    spec: HotPathSpec = DEFAULT_SPEC,
+    exclude: Callable[[str], bool] | None = None,
+) -> list[Finding]:
+    """Lint every ``.py`` under ``root`` whose relative path is in scope."""
+    root = Path(root)
+    findings: list[Finding] = []
+    for path in sorted(root.rglob("*.py")):
+        rel = str(path.relative_to(root)).replace("\\", "/")
+        if exclude is not None and exclude(rel):
+            continue
+        if not spec.file_in_scope(rel):
+            continue
+        findings.extend(lint_source(path.read_text(), rel, spec))
+    return findings

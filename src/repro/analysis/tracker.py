@@ -1,0 +1,179 @@
+"""Runtime dispatch/retrace auditing for jitted executables.
+
+``DispatchAudit`` wraps named executable attributes on any object (an
+``AdaptiveServer``, a ``ContinuousScheduler``, a module) and counts every
+dispatch while the context is open, so scenarios can assert "N dispatches"
+and "zero retraces after warmup" declaratively instead of hand-rolling
+monkeypatches per test.
+
+``SchedulerAudit`` extends it with admission-round bracketing: it wraps
+``scheduler.admit`` so the prefill-wave executables' dispatch deltas are
+recorded *per round*, which is what the ≤2-prefill-waves invariant is
+actually about.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Sequence
+
+
+def _cache_size(fn) -> int | None:
+    probe = getattr(fn, "_cache_size", None)
+    if probe is None:
+        return None
+    try:
+        return probe()
+    except Exception:
+        return None
+
+
+@dataclass
+class _Wrapped:
+    name: str
+    original: Any
+    calls: int = 0
+    forbidden: bool = False
+
+
+class DispatchAudit:
+    """Count dispatches of jitted attributes on ``target`` while open.
+
+    >>> with DispatchAudit(server, ["_decode", "_generate"]) as audit:
+    ...     audit.forbid("_decode")   # any call raises AssertionError
+    ...     server.generate(prompts, max_new=6)
+    >>> audit.calls("_generate")
+    1
+    >>> audit.assert_no_retrace()
+    """
+
+    def __init__(self, target: Any, names: Sequence[str]):
+        self.target = target
+        self.names = list(names)
+        self._wrapped: dict[str, _Wrapped] = {}
+        self._cache_at_enter: dict[str, int | None] = {}
+
+    def __enter__(self) -> "DispatchAudit":
+        for name in self.names:
+            original = getattr(self.target, name)
+            w = _Wrapped(name, original)
+            self._wrapped[name] = w
+            self._cache_at_enter[name] = _cache_size(original)
+
+            def make(wrec: _Wrapped):
+                def counted(*args, **kwargs):
+                    if wrec.forbidden:
+                        raise AssertionError(
+                            f"forbidden executable {wrec.name!r} was dispatched"
+                        )
+                    wrec.calls += 1
+                    return wrec.original(*args, **kwargs)
+
+                return counted
+
+            setattr(self.target, name, make(w))
+        return self
+
+    def __exit__(self, *exc) -> None:
+        for name, w in self._wrapped.items():
+            setattr(self.target, name, w.original)
+
+    # -- assertions ---------------------------------------------------------
+
+    def forbid(self, name: str) -> None:
+        """Any subsequent dispatch of ``name`` raises AssertionError."""
+        self._wrapped[name].forbidden = True
+
+    def calls(self, name: str) -> int:
+        return self._wrapped[name].calls
+
+    def cache_size(self, name: str) -> int | None:
+        return _cache_size(self._wrapped[name].original)
+
+    def assert_no_retrace(self, names: Sequence[str] | None = None) -> None:
+        """Assert no executable compiled new entries since ``__enter__``.
+
+        Executables that were cold at enter (cache size 0) are allowed to
+        reach exactly 1 — the warmup trace; anything past that is a
+        retrace.
+        """
+        for name in names if names is not None else self.names:
+            before = self._cache_at_enter[name]
+            after = self.cache_size(name)
+            if before is None or after is None:
+                continue
+            ceiling = max(before, 1)
+            if after > ceiling:
+                raise AssertionError(
+                    f"{name!r} retraced: cache size {before} -> {after}"
+                )
+
+    def assert_single_executable(self, name: str) -> None:
+        size = self.cache_size(name)
+        if size != 1:
+            raise AssertionError(
+                f"{name!r} should have exactly ONE cached executable, has {size}"
+            )
+
+
+_ADMIT_NAMES = ("_admit", "_admit_paged", "_admit_shared", "_admit_restore")
+
+
+class SchedulerAudit(DispatchAudit):
+    """DispatchAudit over a ``ContinuousScheduler`` with per-admission-round
+    prefill-wave bracketing.
+
+    The audited invariants (see docs/serving.md "Invariants"):
+
+    - ``single-segment-executable`` — ``assert_single_segment()``
+    - ``max-prefill-waves`` — ``assert_max_prefill_waves(2)``
+    - ``no-retrace`` — ``assert_no_retrace()``
+    """
+
+    def __init__(self, scheduler: Any, extra_names: Sequence[str] = ()):
+        names = ["_segment"]
+        names += [n for n in _ADMIT_NAMES if getattr(scheduler, n, None) is not None]
+        names += [n for n in extra_names if n not in names]
+        super().__init__(scheduler, names)
+        self.prefill_waves_per_round: list[int] = []
+        self._admit_original = None
+
+    def __enter__(self) -> "SchedulerAudit":
+        super().__enter__()
+        self._admit_original = self.target.admit
+        audit = self
+
+        def bracketed_admit(*args, **kwargs):
+            before = sum(
+                audit.calls(n) for n in _ADMIT_NAMES if n in audit._wrapped
+            )
+            out = audit._admit_original(*args, **kwargs)
+            after = sum(
+                audit.calls(n) for n in _ADMIT_NAMES if n in audit._wrapped
+            )
+            audit.prefill_waves_per_round.append(after - before)
+            return out
+
+        self.target.admit = bracketed_admit
+        return self
+
+    def __exit__(self, *exc) -> None:
+        # `admit` is a class method wrapped via an instance attribute; remove
+        # the shadow rather than pinning a stale bound method.
+        self.target.__dict__.pop("admit", None)
+        super().__exit__(*exc)
+
+    # -- named invariants ----------------------------------------------------
+
+    def assert_single_segment(self) -> None:
+        self.assert_single_executable("_segment")
+
+    def assert_max_prefill_waves(self, ceiling: int = 2) -> None:
+        if not self.prefill_waves_per_round:
+            return
+        worst = max(self.prefill_waves_per_round)
+        if worst > ceiling:
+            raise AssertionError(
+                f"an admission round dispatched {worst} prefill waves "
+                f"(ceiling {ceiling}): {self.prefill_waves_per_round}"
+            )

@@ -1058,8 +1058,10 @@ class ContinuousScheduler:
             qmax = 127.0 if kv_bits == 8 else 7.0
             pool = self._caches["kv"]
             ka = jnp.asarray(T.amax_for_scale(
+                # repro: allow(host-sync) suspend edge materializes masters
                 np.asarray(pool.k_scale[:, slot]), qmax))
             va = jnp.asarray(T.amax_for_scale(
+                # repro: allow(host-sync) suspend edge materializes masters
                 np.asarray(pool.v_scale[:, slot]), qmax))
         self._suspended[rid] = RowSnapshot(
             rid=rid, n_done=p_written,
@@ -1638,6 +1640,7 @@ class ContinuousScheduler:
         names = self.srv.engine.profile_names
         while len(self._inflight) > keep:
             e = self._inflight.pop(0)
+            # repro: allow(host-sync) the flush boundary IS the sync point
             arr = np.asarray(e["toks"])                  # blocks until ready
             if e["kind"] == "admit":
                 for j, rid in e["rows"]:
@@ -1645,6 +1648,7 @@ class ContinuousScheduler:
                     res["tokens"].append(int(arr[j]))
                     res["profile_trace"].append(e["name"])
             else:
+                # repro: allow(host-sync) flush-boundary sync, same as toks
                 okarr = (np.asarray(e["ok"])
                          if e.get("ok") is not None else None)
                 for slot, rid, n in e["rows"]:

@@ -1,0 +1,12 @@
+"""Seeded host-sync violations: every construct the lint must catch."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def decode_loop(tok, pos):
+    x = jnp.ones((4,))
+    y = float(x.sum())                  # host-sync: float() on device value
+    arr = np.asarray(x * 2)             # host-sync: np.asarray of jnp value
+    z = x.sum().item()                  # host-sync: .item()
+    x.block_until_ready()               # host-sync: explicit barrier
+    return y, arr, z

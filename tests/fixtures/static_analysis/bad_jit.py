@@ -1,0 +1,32 @@
+"""Seeded jit-hygiene violations: donate, tracer branch, closure, constant."""
+import jax
+import jax.numpy as jnp
+
+
+def step(params, caches):               # carry threaded ...
+    return params, caches
+
+
+step_jit = jax.jit(step)                # missing-donate: no donate_argnums
+
+
+def branchy(flag, x):
+    if flag:                            # tracer-branch: Python if on a param
+        return x + 1
+    return x
+
+
+branchy_jit = jax.jit(branchy)
+
+
+def make_closure():
+    def inner(x):
+        return x + scale                # late-closure: scale assigned below
+
+    scale = 3.0
+    return inner
+
+
+def build_table(x):
+    table = jnp.array([0.0] * 64)       # device-constant: 64-element literal
+    return x + table

@@ -1,0 +1,34 @@
+"""Negative fixture: device-clean hot code plus justified allowlisted syncs.
+
+Linting this file with the all-hot spec must report ZERO findings.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_TABLE = jnp.zeros((128,))              # module-scope constant: fine
+
+
+def decode_clean(tok, pos):
+    x = jnp.ones((4,)) + _TABLE[:4]
+    y = jnp.where(pos > 0, x, tok)      # device-side select: fine
+    return y.sum()
+
+
+def flush_boundary(tok):
+    done = jnp.cumsum(tok)
+    # repro: allow(host-sync) flush boundary materializes finished tokens
+    arr = np.asarray(done)
+    return arr.tolist()
+
+
+def stepwise_oracle(tok, pos):  # repro: allow(host-sync) oracle syncs per step by design
+    x = jnp.ones((2,)) + tok
+    return int(x.sum()), float(x.max())
+
+
+def step(params, caches):
+    return params, caches
+
+
+step_jit = jax.jit(step, donate_argnums=(1,))   # donated carry: fine

@@ -1,0 +1,311 @@
+"""The analyzer analyzed: lint rules, jaxpr budgets, trackers, CI canary.
+
+Each lint rule gets a minimal positive (fires) and negative (clean) source
+pair; the jaxpr checks get toy jitted functions on both sides of their
+ceilings; and the seeded-violation fixtures prove the ``check_static``
+gate exits non-zero for both the lint and the budget violation classes.
+"""
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import jaxpr_check
+from repro.analysis.budgets import REFERENCE_BUDGETS, check_budget, trace_segment
+from repro.analysis.lint import ALL_HOT, lint_source
+from repro.analysis.tracker import DispatchAudit
+
+REPO = Path(__file__).resolve().parent.parent
+FIXTURES = REPO / "tests" / "fixtures" / "static_analysis"
+
+sys.path.insert(0, str(REPO / "scripts"))
+import check_static  # noqa: E402
+
+
+def _rules(src: str) -> set[str]:
+    return {f.rule for f in lint_source(src, "probe.py", ALL_HOT)}
+
+
+# ---------------------------------------------------------------------------
+# lint rules: positive / negative per rule
+# ---------------------------------------------------------------------------
+
+def test_host_sync_item():
+    assert "host-sync" in _rules(
+        "import jax.numpy as jnp\n"
+        "def f(tok):\n"
+        "    return jnp.sum(tok).item()\n")
+
+
+def test_host_sync_coercion_on_device_value():
+    assert "host-sync" in _rules(
+        "import jax.numpy as jnp\n"
+        "def f():\n"
+        "    x = jnp.ones((4,))\n"
+        "    return float(x.sum())\n")
+
+
+def test_host_sync_np_asarray_of_jnp():
+    assert "host-sync" in _rules(
+        "import jax.numpy as jnp\nimport numpy as np\n"
+        "def f():\n"
+        "    x = jnp.ones((4,))\n"
+        "    return np.asarray(x)\n")
+
+
+def test_host_sync_block_until_ready():
+    assert "host-sync" in _rules(
+        "import jax.numpy as jnp\n"
+        "def f():\n"
+        "    jnp.ones((4,)).block_until_ready()\n")
+
+
+def test_host_sync_negative_pure_host():
+    # numpy-only code never fires: no device taint anywhere.
+    assert _rules(
+        "import numpy as np\n"
+        "def f(xs):\n"
+        "    a = np.asarray(xs)\n"
+        "    return float(a.sum()), int(a.max())\n") == set()
+
+
+def test_host_sync_negative_materialized_then_coerced():
+    # np.asarray(device) fires once; int() on the HOST copy must not
+    # double-report.
+    src = ("import jax.numpy as jnp\nimport numpy as np\n"
+           "def f():\n"
+           "    x = jnp.ones((4,))\n"
+           "    a = np.asarray(x)\n"
+           "    return int(a[0])\n")
+    findings = lint_source(src, "probe.py", ALL_HOT)
+    assert [f.rule for f in findings] == ["host-sync"]
+
+
+def test_missing_donate_fires_and_fixed_negative():
+    pos = ("import jax\n"
+           "def step(params, caches):\n"
+           "    return params, caches\n"
+           "step_jit = jax.jit(step)\n")
+    neg = ("import jax\n"
+           "def step(params, caches):\n"
+           "    return params, caches\n"
+           "step_jit = jax.jit(step, donate_argnums=(1,))\n")
+    assert "missing-donate" in _rules(pos)
+    assert "missing-donate" not in _rules(neg)
+
+
+def test_tracer_branch_fires_and_negative():
+    pos = ("import jax\n"
+           "def f(flag, x):\n"
+           "    if flag:\n"
+           "        return x\n"
+           "    return x + 1\n"
+           "g = jax.jit(f)\n")
+    # Same branch in a NON-jitted function: host code may branch freely.
+    neg = ("def f(flag, x):\n"
+           "    if flag:\n"
+           "        return x\n"
+           "    return x + 1\n")
+    assert "tracer-branch" in _rules(pos)
+    assert "tracer-branch" not in _rules(neg)
+
+
+def test_late_closure_fires_and_negative():
+    pos = ("def outer():\n"
+           "    def inner(x):\n"
+           "        return x + scale\n"
+           "    scale = 3.0\n"
+           "    return inner\n")
+    neg = ("def outer():\n"
+           "    scale = 3.0\n"
+           "    def inner(x):\n"
+           "        return x + scale\n"
+           "    return inner\n")
+    assert "late-closure" in _rules(pos)
+    assert "late-closure" not in _rules(neg)
+
+
+def test_device_constant_fires_and_small_negative():
+    pos = ("import jax.numpy as jnp\n"
+           "def f(x):\n"
+           "    return x + jnp.array([0.0] * 64)\n")
+    neg = ("import jax.numpy as jnp\n"
+           "def f(x):\n"
+           "    return x + jnp.array([0.0, 1.0, 2.0])\n")
+    assert "device-constant" in _rules(pos)
+    assert "device-constant" not in _rules(neg)
+
+
+# ---------------------------------------------------------------------------
+# allow pragmas: same line, line above, enclosing def
+# ---------------------------------------------------------------------------
+
+def test_allow_same_line_and_line_above():
+    same = ("import jax.numpy as jnp\n"
+            "def f():\n"
+            "    x = jnp.ones((4,))\n"
+            "    return x.sum().item()  # repro: allow(host-sync) reduced\n")
+    above = ("import jax.numpy as jnp\n"
+             "def f():\n"
+             "    x = jnp.ones((4,))\n"
+             "    # repro: allow(host-sync) reduced scalar, sync intended\n"
+             "    return x.sum().item()\n")
+    assert _rules(same) == set()
+    assert _rules(above) == set()
+
+
+def test_allow_on_def_line_covers_whole_function():
+    src = ("import jax.numpy as jnp\n"
+           "def oracle(tok):  # repro: allow(host-sync) per-step oracle\n"
+           "    x = jnp.ones((2,))\n"
+           "    a = x.sum().item()\n"
+           "    b = float(x.max())\n"
+           "    return a, b\n")
+    assert _rules(src) == set()
+
+
+def test_allow_is_rule_specific():
+    # allow(host-sync) must NOT silence a different rule on the same line.
+    src = ("import jax\n"
+           "def step(params, caches):\n"
+           "    return params, caches\n"
+           "step_jit = jax.jit(step)  # repro: allow(host-sync) wrong id\n")
+    assert "missing-donate" in _rules(src)
+
+
+# ---------------------------------------------------------------------------
+# jaxpr checks on toy jitted functions
+# ---------------------------------------------------------------------------
+
+def _toy_jaxpr(n=64):
+    def f(x):
+        return (x * 2.0 + 1.0).sum()
+
+    return jax.make_jaxpr(f)(jnp.zeros((n, n), jnp.float32))
+
+
+def test_aval_budget_pass_and_fail():
+    jaxpr = _toy_jaxpr(64)              # biggest intermediate: 64*64*4 bytes
+    assert jaxpr_check.max_aval_bytes(jaxpr) == 64 * 64 * 4
+    assert jaxpr_check.check_aval_budget(jaxpr, 64 * 64 * 4) == []
+    over = jaxpr_check.check_aval_budget(jaxpr, 64 * 64 * 4 - 1)
+    assert over and all(v.nbytes > 64 * 64 * 4 - 1 for v in over)
+
+
+def test_forbid_aval_shape_and_adjacent_dims():
+    def f(x):
+        y = x.reshape(4, 16)            # the "forbidden" intermediate
+        return y.sum()
+
+    jaxpr = jax.make_jaxpr(f)(jnp.zeros((64,), jnp.float32))
+    assert jaxpr_check.has_adjacent_dims(jaxpr, (4, 16))
+    assert not jaxpr_check.has_adjacent_dims(jaxpr, (4, 17))
+    hits = jaxpr_check.forbid_aval_shape(jaxpr, lambda s: s == (4, 16))
+    assert hits and hits[0].shape == (4, 16)
+
+
+def test_iter_eqns_recurses_into_scan():
+    def f(x):
+        def body(c, _):
+            return c * 2.0, c
+        return jax.lax.scan(body, x, None, length=3)
+
+    jaxpr = jax.make_jaxpr(f)(jnp.ones((4,)))
+    counts = jaxpr_check.count_primitives(jaxpr)
+    assert counts["scan"] == 1
+    assert counts["mul"] >= 1           # found inside the scan body
+
+
+def test_verify_donation_positive_and_negative():
+    def f(x, caches):
+        return x + 1.0, caches * 2.0
+
+    donated = jax.jit(f, donate_argnums=(1,))
+    plain = jax.jit(f)
+    x, c = jnp.zeros((4,)), jnp.ones((8,))
+    assert jaxpr_check.verify_donation(donated, x, c)
+    assert not jaxpr_check.verify_donation(plain, x, c)
+
+
+# ---------------------------------------------------------------------------
+# runtime tracker
+# ---------------------------------------------------------------------------
+
+class _Host:
+    def __init__(self):
+        self._step = jax.jit(lambda x: x + 1.0)
+        self._other = jax.jit(lambda x: x * 2.0)
+
+
+def test_dispatch_audit_counts_and_restores():
+    host = _Host()
+    orig = host._step
+    with DispatchAudit(host, ["_step"]) as audit:
+        host._step(jnp.zeros((2,)))
+        host._step(jnp.zeros((2,)))
+        assert audit.calls("_step") == 2
+    assert host._step is orig           # unwrapped on exit
+
+
+def test_dispatch_audit_forbid():
+    host = _Host()
+    with DispatchAudit(host, ["_other"]) as audit:
+        audit.forbid("_other")
+        with pytest.raises(AssertionError, match="forbidden"):
+            host._other(jnp.zeros((2,)))
+
+
+def test_dispatch_audit_retrace_detection():
+    host = _Host()
+    host._step(jnp.zeros((2,)))         # warm: one cached executable
+    with DispatchAudit(host, ["_step"]) as audit:
+        host._step(jnp.zeros((2,)))     # same shape: cache hit
+        audit.assert_no_retrace()
+        host._step(jnp.zeros((3,)))     # new shape: retrace
+        with pytest.raises(AssertionError, match="retraced"):
+            audit.assert_no_retrace()
+
+
+# ---------------------------------------------------------------------------
+# reference budgets + the CI gate canaries
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def smoke_parts():
+    return check_static._parts()
+
+
+def test_reference_budgets_pass_on_pallas(smoke_parts):
+    """The smallest reference point passes on pallas, and the gather
+    backend trips the no-gather-view detector at the same geometry —
+    proving the budget distinguishes the two paths."""
+    budget = REFERENCE_BUDGETS[-1]      # bench6 chaos point (cheapest)
+    report = check_budget(smoke_parts, budget, backend="pallas")
+    assert report.ok, report.render()
+    gather = trace_segment(smoke_parts, "gather", budget)
+    assert jaxpr_check.has_adjacent_dims(
+        gather, (budget.batch, budget.slots_padded))
+
+
+def test_gate_fails_on_seeded_lint_fixtures():
+    rc = check_static.main(["--lint-root", str(FIXTURES)])
+    assert rc != 0
+
+
+def test_seeded_fixtures_cover_both_classes():
+    # every lint rule fires at least once across the bad_* fixtures ...
+    from repro.analysis.lint import lint_tree
+    rules = {f.rule for f in lint_tree(FIXTURES, ALL_HOT)}
+    assert rules == {"host-sync", "missing-donate", "tracer-branch",
+                     "late-closure", "device-constant"}
+    # ... and none of them fire in the allowlisted negative fixture
+    good = (FIXTURES / "good_hot.py").read_text()
+    assert lint_source(good, "good_hot.py", ALL_HOT) == []
+
+
+def test_gate_fails_on_budget_canary():
+    rc = check_static.main(["--canary-budget"])
+    assert rc != 0

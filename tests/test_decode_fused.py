@@ -7,6 +7,7 @@ from repro.configs import get_smoke
 from repro.core.engine import AdaptiveEngine, QuantIndex
 from repro.core.manager import ProfileManager, ProfileStats
 from repro.core.profiles import paper_profiles
+from repro.analysis.tracker import DispatchAudit
 from repro.models import transformer as T
 from repro.serving.engine import AdaptiveServer, Request, ServingConfig
 
@@ -57,29 +58,31 @@ def test_fused_matches_stepwise(dense_parts, kv_bits):
 
 def test_fused_is_single_decode_dispatch(dense_parts):
     """The decode hot loop is one jitted dispatch: generate must never touch
-    the per-token ``_decode`` executable or sync logits to host per step."""
+    the per-token ``_decode`` executable or sync logits to host per step
+    (named invariant ``no-per-token-dispatch``, via DispatchAudit)."""
     cfg, params, eng = dense_parts
     srv = AdaptiveServer(cfg, params, eng, ServingConfig(slots=64))
-
-    def boom(*a, **k):  # any per-token dispatch is a regression
-        raise AssertionError("per-token _decode dispatch in fused generate")
-
-    srv._decode = boom
     prompts = np.zeros((2, 4), np.int32)
-    out = srv.generate(prompts, max_new=6)
+    with DispatchAudit(srv, ["_decode", "_generate"]) as audit:
+        audit.forbid("_decode")  # any per-token dispatch is a regression
+        out = srv.generate(prompts, max_new=6)
+        assert audit.calls("_generate") == 1
     assert len(out["tokens"]) == 2 and len(out["tokens"][0]) == 6
 
 
 def test_schedule_is_data_no_retrace(dense_parts):
     """A different profile schedule (manager state moved on) must reuse the
-    compiled scan — bits ride as data, switching never retraces."""
+    compiled scan — bits ride as data, switching never retraces (named
+    invariant ``no-retrace``, via DispatchAudit)."""
     cfg, params, eng = dense_parts
     srv = AdaptiveServer(cfg, params, eng, ServingConfig(slots=64),
                          manager=_manager())
     prompts = np.zeros((2, 4), np.int32)
     srv.generate(prompts, max_new=6)
     n0 = srv._generate._cache_size()
-    srv.generate(prompts, max_new=6)      # ledger drained → new schedule
+    with DispatchAudit(srv, ["_generate"]) as audit:
+        srv.generate(prompts, max_new=6)  # ledger drained → new schedule
+        audit.assert_no_retrace()
     assert srv._generate._cache_size() == n0 == 1
 
 

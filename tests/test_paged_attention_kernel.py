@@ -17,6 +17,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis.budgets import SegmentBudget, trace_segment
+from repro.analysis.jaxpr_check import has_adjacent_dims
 from repro.configs import get_smoke
 from repro.core.engine import AdaptiveEngine, QuantIndex
 from repro.core.profiles import paper_profiles
@@ -178,45 +180,10 @@ def test_pallas_backend_shared_cow_identity(dense_parts):
         assert res["tokens"] == _solo_tokens(dense_parts, req)
 
 
-def _segment_jaxpr(parts, backend, *, b=3, slots=40, bs=8, steps=4):
-    """Trace decode_segment on a paged pool and return (jaxpr, slots_p)."""
-    cfg, params, eng = parts
-    caches = T.init_paged_caches(cfg, b, slots, block_size=bs)
-    table = jnp.asarray(eng.table)
-    prequant = T.prequant_decode_weights(params, cfg, table)
-
-    def seg(schedule, tok, pos, cch, remaining):
-        return T.decode_segment(params, cfg, table, schedule, tok, pos, cch,
-                                remaining, prequant=prequant,
-                                paged_backend=backend)
-
-    jaxpr = jax.make_jaxpr(seg)(
-        jnp.zeros((steps,), jnp.int32), jnp.zeros((b,), jnp.int32),
-        jnp.zeros((b,), jnp.int32), caches, jnp.zeros((b,), jnp.int32))
-    return jaxpr, -(-min(slots, 10 ** 9) // bs) * bs
-
-
-def _has_view_shaped_aval(jaxpr, b, slots_p):
-    """Recursively scan every equation's outputs for an intermediate whose
-    shape contains the (B, n_lblk*bs) dense-view signature."""
-    def shapes(jx, acc):
-        for eqn in jx.eqns:
-            for v in eqn.outvars:
-                aval = getattr(v, "aval", None)
-                if aval is not None and hasattr(aval, "shape"):
-                    acc.append(tuple(aval.shape))
-            for p in eqn.params.values():
-                for sub in (p if isinstance(p, (list, tuple)) else [p]):
-                    inner = getattr(sub, "jaxpr", None)
-                    if inner is not None:
-                        shapes(inner, acc)
-        return acc
-
-    def has_pair(shape):
-        return any(shape[i] == b and shape[i + 1] == slots_p
-                   for i in range(len(shape) - 1))
-
-    return any(has_pair(s) for s in shapes(jaxpr.jaxpr, []))
+_VIEW_BUDGET = SegmentBudget(
+    name="test-no-view", arch="granite-3-2b", batch=3, slots=40,
+    block_size=8, pool_blocks=None, kv_bits=16, steps=4,
+    max_aval_bytes=10 ** 9)
 
 
 def test_segment_pallas_no_view_materialization(dense_parts, monkeypatch):
@@ -225,7 +192,9 @@ def test_segment_pallas_no_view_materialization(dense_parts, monkeypatch):
     or exit fold-back. ``paged_view`` is never even traced, and no
     intermediate in the jaxpr carries the dense-view shape — while the
     gather backend (the oracle) demonstrably produces both, proving the
-    guard detects what it claims to."""
+    guard detects what it claims to. Enforced via the named ``analysis``
+    invariant ``no-gather-view`` (budgets.trace_segment +
+    jaxpr_check.has_adjacent_dims)."""
     import repro.models.transformer as TT
     calls = {"n": 0}
     orig = TT.paged_view
@@ -235,13 +204,14 @@ def test_segment_pallas_no_view_materialization(dense_parts, monkeypatch):
         return orig(cache)
 
     monkeypatch.setattr(TT, "paged_view", counting)
-    jaxpr_p, slots_p = _segment_jaxpr(dense_parts, "pallas")
+    dims = (_VIEW_BUDGET.batch, _VIEW_BUDGET.slots_padded)
+    jaxpr_p = trace_segment(dense_parts, "pallas", _VIEW_BUDGET)
     assert calls["n"] == 0                      # never dispatched
-    assert not _has_view_shaped_aval(jaxpr_p, 3, slots_p)
+    assert not has_adjacent_dims(jaxpr_p, dims)
 
-    jaxpr_g, slots_p = _segment_jaxpr(dense_parts, "gather")
+    jaxpr_g = trace_segment(dense_parts, "gather", _VIEW_BUDGET)
     assert calls["n"] > 0                       # oracle path gathers
-    assert _has_view_shaped_aval(jaxpr_g, 3, slots_p)
+    assert has_adjacent_dims(jaxpr_g, dims)
 
 
 # ---------------------------------------------------------------------------

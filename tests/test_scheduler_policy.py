@@ -26,6 +26,8 @@ import jax
 import numpy as np
 import pytest
 
+from repro.analysis.budgets import MAX_PREFILL_WAVES_PER_ROUND
+from repro.analysis.tracker import SchedulerAudit
 from repro.configs import get_smoke
 from repro.core.engine import AdaptiveEngine, QuantIndex
 from repro.core.manager import ProfileManager, ProfileStats
@@ -319,50 +321,34 @@ def test_preemption_invariants_dispatch_count_and_segment(dense_parts):
     """The two structural invariants under preemption: every decode
     segment of the scheduler's lifetime reuses ONE compiled executable,
     and no admission round dispatches more than TWO prefill waves (cold /
-    shared / resume — a third kind waits a round)."""
+    shared / resume — a third kind waits a round). Enforced via the named
+    ``analysis`` invariants ``single-segment-executable`` and
+    ``max-prefill-waves`` (SchedulerAudit)."""
     cfg, params, eng = dense_parts
     scfg = ServingConfig(slots=64, max_batch=2, block_size=8,
                          priority_classes=2, preemption=True)
     srv = AdaptiveServer(cfg, params, eng, scfg)
     sched = ContinuousScheduler(srv, quantum=2)
-    counts = {"n": 0}
-
-    def wrap(fn):
-        def counting(*a, **k):
-            counts["n"] += 1
-            return fn(*a, **k)
-        return counting
-
-    for name in ("_admit_paged", "_admit_shared", "_admit_restore"):
-        fn = getattr(sched, name)
-        if fn is not None:
-            setattr(sched, name, wrap(fn))
-    per_round = []
-    orig_admit = ContinuousScheduler.admit
-
-    def admit_counted():
-        before = counts["n"]
-        r = orig_admit(sched)
-        per_round.append(counts["n"] - before)
-        return r
-
-    sched.admit = admit_counted
     rng = np.random.default_rng(17)
     sys_p = rng.integers(0, cfg.vocab, 16).astype(np.int32)
     subs = [Request(tokens=np.concatenate(
         [sys_p, rng.integers(0, cfg.vocab, k).astype(np.int32)]),
         max_new=14, priority=1) for k in (4, 7)]
-    for r in subs:
-        sched.submit(r)
-    sched.step()
-    sched.step()
-    sched.submit(Request(tokens=rng.integers(0, cfg.vocab, 7)
-                         .astype(np.int32), max_new=4, priority=0))
-    while sched.step():
-        pass
-    assert sched.preemptions >= 1 and sched.resumes >= 1
-    assert max(per_round) <= 2, per_round     # ≤2 prefill waves per round
-    assert srv._segment._cache_size() == 1    # ONE segment executable
+    with SchedulerAudit(sched) as audit:
+        for r in subs:
+            sched.submit(r)
+        sched.step()
+        sched.step()
+        sched.submit(Request(tokens=rng.integers(0, cfg.vocab, 7)
+                             .astype(np.int32), max_new=4, priority=0))
+        while sched.step():
+            pass
+        assert sched.preemptions >= 1 and sched.resumes >= 1
+        # ≤2 prefill waves per round
+        audit.assert_max_prefill_waves(MAX_PREFILL_WAVES_PER_ROUND)
+        assert max(audit.prefill_waves_per_round) <= 2
+        audit.assert_single_segment()             # ONE segment executable
+    assert srv._segment._cache_size() == 1
 
 
 def test_ledger_exact_under_preemption(dense_parts):
