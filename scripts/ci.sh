@@ -9,7 +9,11 @@
 # a chaos point — seeded NaN-logit faults + an allocator drought + a flush
 # stall + client cancellations — that asserts zero leaked pool blocks,
 # >=1 quarantine + precision-fallback recovery, and token-identity of the
-# recovered request vs a clean accuracy-critical run), then the
+# recovered request vs a clean accuracy-critical run, and a speculative
+# decoding point — draft/verify windows on a predictable-continuation
+# trace — that asserts token identity against both the greedy scheduler
+# and the solo-generate oracle, zero leaked blocks, and >=1.2x closed-loop
+# decode throughput), then the
 # paged-attention kernel gate (token identity vs the gather path +
 # strictly fewer bytes per decode step), and finally the docs gate
 # smoke-executes every README/docs code snippet and checks markdown links.

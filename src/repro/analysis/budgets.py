@@ -1,8 +1,9 @@
 """Declarative per-scenario invariant budgets.
 
 Each :class:`SegmentBudget` pins a reference geometry (the BENCH_4 paged
-pool point and the BENCH_6 chaos point) and the ceilings a traced decode
-segment must respect there:
+pool point, the BENCH_6 chaos point, and the BENCH_8 speculative
+``draft_k``-wide point) and the ceilings a traced decode segment must
+respect there:
 
 - ``max_aval_bytes`` — no intermediate aval in the segment jaxpr may
   exceed this. The ceiling sits between the pallas in-place path's
@@ -53,6 +54,7 @@ class SegmentBudget:
     steps: int
     max_aval_bytes: int
     forbid_gather_view: bool = True
+    draft_k: int = 0     # > 0: trace the speculative W = k+1 segment
 
     @property
     def slots_padded(self) -> int:
@@ -101,6 +103,23 @@ REFERENCE_BUDGETS: tuple[SegmentBudget, ...] = (
         steps=4,
         max_aval_bytes=163_840,
     ),
+    # BENCH_8 speculative point: every activation aval in the verify
+    # window is W = draft_k + 1 wide, yet the ceiling is the SAME as the
+    # greedy points — the k-query pallas variant folds W into the head
+    # grid instead of materializing per-query (let alone per-window)
+    # pool views, so a regression that does trips this budget first.
+    SegmentBudget(
+        name="bench8-spec-kv8",
+        arch="granite-3-2b",
+        batch=8,
+        slots=128,
+        block_size=16,
+        pool_blocks=64,
+        kv_bits=8,
+        steps=2,
+        max_aval_bytes=163_840,
+        draft_k=4,
+    ),
 )
 
 
@@ -127,6 +146,11 @@ def trace_segment(parts, backend: str, budget: SegmentBudget):
     prequant = T.prequant_decode_weights(params, cfg, table)
 
     def seg(schedule, tok, pos, cch, remaining):
+        if budget.draft_k:
+            return T.decode_segment_spec(
+                params, cfg, table, schedule, tok, pos, cch, remaining,
+                prequant=prequant, paged_backend=backend,
+                draft_k=budget.draft_k)
         return T.decode_segment(params, cfg, table, schedule, tok, pos, cch,
                                 remaining, prequant=prequant,
                                 paged_backend=backend)

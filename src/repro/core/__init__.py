@@ -8,7 +8,9 @@
   roofline-derived energy model.
 """
 from .qtypes import QuantSpec, FLOAT_SPEC, qrange, compute_scale, pack_int4, unpack_int4
-from .quantizers import fake_quant, fake_quant_dynamic, quantize_native, dequantize, QTensor
+from .quantizers import (fake_quant, fake_quant_dynamic,
+                         fake_quant_dynamic_token, quantize_native,
+                         dequantize, QTensor)
 from .profiles import Profile, profile_table, parse_profile_string, paper_profiles, FLOAT_BITS
 from .merge import MergePlan, merge_plan
 from .engine import AdaptiveEngine, QuantIndex, switch_images
@@ -17,7 +19,8 @@ from .energy import HWSpec, TPU_V5E, roofline_terms, step_energy, activity_facto
 
 __all__ = [
     "QuantSpec", "FLOAT_SPEC", "qrange", "compute_scale", "pack_int4", "unpack_int4",
-    "fake_quant", "fake_quant_dynamic", "quantize_native", "dequantize", "QTensor",
+    "fake_quant", "fake_quant_dynamic", "fake_quant_dynamic_token",
+    "quantize_native", "dequantize", "QTensor",
     "Profile", "profile_table", "parse_profile_string", "paper_profiles", "FLOAT_BITS",
     "MergePlan", "merge_plan",
     "AdaptiveEngine", "QuantIndex", "switch_images",

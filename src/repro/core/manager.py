@@ -111,7 +111,8 @@ class ProfileManager:
         return sched
 
     def plan_schedule_ragged(self, steps: int, row_remaining,
-                             row_critical=None) -> np.ndarray:
+                             row_critical=None, *, draft_w: int = 1,
+                             provisional: bool = False) -> np.ndarray:
         """Per-step ids for a ragged row group → ``int32[steps]``.
 
         Rows finish at different steps (heterogeneous ``max_new`` /
@@ -122,28 +123,48 @@ class ProfileManager:
         group-wide over-billing of padding every row to the longest request.
 
         Args:
-            steps: schedule length (the decode segment's quantum).
+            steps: schedule length (the decode segment's quantum — in
+                *windows* when ``draft_w > 1``).
             row_remaining: ``[B]`` tokens each pool row still has to emit
                 (0 = idle slot — never billed).
             row_critical: optional ``[B]`` bool accuracy-critical flags.
+            draft_w: tokens a speculative draft/verify window can deliver
+                (``k + 1``; 1 = plain greedy). Window ``i``'s planned bill
+                for row ``b`` is ``min(draft_w, rem_b - i*draft_w)`` —
+                **clamped** where the final window would overshoot the
+                row's budget, so a row with 3 tokens left never plans 4
+                phantom bills under ``draft_w = 4`` (invariant 11:
+                accepted-token billing).
+            provisional: plan profile ids only — do NOT advance the
+                ledger. Speculative segments bill *delivered* tokens at the
+                flush boundary (acceptance is data the planner cannot
+                know); the plan is just the per-window profile binding.
         Returns:
             ``int32[steps]`` profile ids, ready to ride the fused decode
-            scan as data. The ledger is already advanced for all of them —
-            plan exactly one segment ahead, or the billing drifts from the
-            rows actually live.
+            scan as data. Unless ``provisional``, the ledger is already
+            advanced for all of them — plan exactly one segment ahead, or
+            the billing drifts from the rows actually live.
         """
         rem = np.asarray(row_remaining, np.int64)
+        w = max(1, int(draft_w))
         crit = (np.zeros(rem.shape, bool) if row_critical is None
                 else np.asarray(row_critical, bool))
         sched = np.empty((steps,), np.int32)
+        spent0, saver0 = self.spent_j, self._saver
         for i in range(steps):
-            live = rem > i
+            live = rem > i * w
             sched[i] = self.select(accuracy_critical=bool((crit & live).any()))
-            self.account(int(sched[i]), int(live.sum()))
+            # never bill past a row's own budget: the last window of a row
+            # delivers at most rem - i*w tokens, not a full draft_w
+            n_tok = int(np.minimum(w, np.maximum(rem - i * w, 0)).sum())
+            self.account(int(sched[i]), n_tok)
+        if provisional:
+            self.spent_j, self._saver = spent0, saver0
         return sched
 
     def plan_schedule_classes(self, steps: int, row_remaining, row_levels,
-                              critical_levels, row_critical=None
+                              critical_levels, row_critical=None, *,
+                              draft_w: int = 1, provisional: bool = False
                               ) -> np.ndarray:
         """Per-step ids for a *class-aware* row group → ``int32[steps]``.
 
@@ -166,12 +187,19 @@ class ProfileManager:
                 accuracy-critical (e.g. ``(0,)`` for the stock ladder).
             row_critical: optional ``[B]`` per-request critical flags,
                 OR'd with the class binding.
+            draft_w: speculative window width in tokens (``k + 1``); the
+                final window of each row is clamped to its remaining
+                budget — see :meth:`plan_schedule_ragged`.
+            provisional: plan ids without advancing the ledger (the
+                speculative flush bills actual delivered tokens instead).
         """
         lvl = np.asarray(row_levels)
         crit = np.isin(lvl, np.asarray(list(critical_levels), lvl.dtype))
         if row_critical is not None:
             crit = crit | np.asarray(row_critical, bool)
-        return self.plan_schedule_ragged(steps, row_remaining, crit)
+        return self.plan_schedule_ragged(steps, row_remaining, crit,
+                                         draft_w=draft_w,
+                                         provisional=provisional)
 
     def exhausted(self) -> bool:
         """Whether the energy budget is fully spent."""

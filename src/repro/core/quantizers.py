@@ -31,6 +31,7 @@ from .qtypes import (
 __all__ = [
     "fake_quant",
     "fake_quant_dynamic",
+    "fake_quant_dynamic_token",
     "quantize_native",
     "dequantize",
     "QTensor",
@@ -103,11 +104,14 @@ def fake_quant_dynamic(x: jax.Array, bits: jax.Array, signed_sym: jax.Array) -> 
     return y
 
 
-def _fqd_impl(x, bits, signed_sym):
+def _fqd_impl(x, bits, signed_sym, axis=None):
     dt = x.dtype
     xf = x.astype(jnp.float32)
     qmin, qmax = qrange_dynamic(bits, signed=True, symmetric=False)
-    amax = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-9)
+    if axis is None:
+        amax = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-9)
+    else:
+        amax = jnp.maximum(jnp.max(jnp.abs(xf), axis=axis, keepdims=True), 1e-9)
     scale = jnp.exp2(jnp.ceil(jnp.log2(amax / jnp.maximum(-qmin, qmax))))
     q = jnp.clip(jnp.sign(xf / scale) * jnp.floor(jnp.abs(xf / scale) + 0.5), qmin, qmax)
     y = q * scale
@@ -128,6 +132,33 @@ def _fqd_bwd(mask, g):
 
 
 fake_quant_dynamic.defvjp(_fqd_fwd, _fqd_bwd)
+
+
+@jax.custom_vjp
+def fake_quant_dynamic_token(x: jax.Array, bits: jax.Array,
+                             signed_sym: jax.Array) -> jax.Array:
+    """Per-token :func:`fake_quant_dynamic`: the pow2 grid is chosen from each
+    trailing-axis row's own ``amax`` instead of the whole tensor's.
+
+    Activation quantization uses this so a token's values depend **only on that
+    token** — a row's decode numerics become invariant to batch composition and
+    to how many positions share the forward pass. That invariance is what makes
+    speculative verify windows (``[B, k+1]``) bit-identical to the stepwise
+    ``[B, 1]`` greedy decode (docs/serving.md, invariant 11): a per-tensor amax
+    would couple every window position (and every batch row) through one shared
+    scale, flipping pow2 buckets whenever a *neighbouring* token's range grows.
+    For 1-D inputs this is exactly ``fake_quant_dynamic``. Weight quantization
+    keeps the per-tensor grid (weights are identical across paths anyway).
+    """
+    y, _ = _fqd_fwd_token(x, bits, signed_sym)
+    return y
+
+
+def _fqd_fwd_token(x, bits, signed_sym):
+    return _fqd_impl(x, bits, signed_sym, axis=-1)
+
+
+fake_quant_dynamic_token.defvjp(_fqd_fwd_token, _fqd_bwd)
 
 
 class QTensor(NamedTuple):

@@ -39,7 +39,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import CompilerParams
 
-__all__ = ["paged_attention_pallas"]
+__all__ = ["paged_attention_pallas", "paged_attention_pallas_multi"]
 
 NEG_INF = -1e30
 
@@ -163,3 +163,137 @@ def paged_attention_pallas(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
       q, k_pool, v_pool, token_idx,
       jnp.asarray(k_scale, jnp.float32).reshape(b, hkv),
       jnp.asarray(v_scale, jnp.float32).reshape(b, hkv))
+
+
+def _kernel_multi(bt_ref, pos_ref, q_ref, k_ref, v_ref, tidx_ref, ks_ref,
+                  vs_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  n_lblk: int, n_blocks: int, bits: int, window: int,
+                  sm_scale: float, w: int, hg: int):
+    """W-query variant: the draft/verify window's W queries fold into the
+    head-group compute dim (``[W*Hg, D]`` q block, ``[W*Hg, bs]`` scores),
+    so the block loop, DMA pattern, and online-softmax structure are the
+    single-query kernel's unchanged. Query ``wi = row // hg`` sits at
+    absolute position ``pos + wi`` (per-query causal mask) and folds the
+    per-position int8 scale ladder ``ks/vs [W]``."""
+    b = pl.program_id(0)
+    lb = pl.program_id(2)
+
+    @pl.when(lb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    entry = bt_ref[b * n_lblk + lb]
+    mapped = (entry >= 0) & (entry < n_blocks)
+
+    q = q_ref[0, 0].astype(jnp.float32) * sm_scale          # [W*Hg, D]
+    k = k_ref[0, :, 0].astype(jnp.float32)                  # [bs, D]
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # [W*Hg, bs]
+    bs_ = scores.shape[-1]
+    if bits == 8:
+        ks = ks_ref[0, 0]                                   # [W]
+        scores = (scores.reshape(w, hg, bs_)
+                  * ks[:, None, None]).reshape(w * hg, bs_)
+
+    tidx = tidx_ref[0]                                      # [bs]
+    qp = pos_ref[b] + jax.lax.broadcasted_iota(jnp.int32, (w, 1), 0)
+    keep = (mapped & (tidx[None, :] >= 0) & (tidx[None, :] <= qp)
+            & (qp - tidx[None, :] < window))                # [W, bs]
+    keep_q = jnp.broadcast_to(keep[:, None, :],
+                              (w, hg, bs_)).reshape(w * hg, bs_)
+    scores = jnp.where(keep_q, scores, NEG_INF)
+
+    m_prev = m_ref[...]                                     # [W*Hg, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(keep_q, jnp.exp(scores - m_new), 0.0)     # [W*Hg, bs]
+    v = v_ref[0, :, 0].astype(jnp.float32)                  # [bs, D]
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(lb == n_lblk - 1)
+    def _flush():
+        any_valid = m_ref[...] > NEG_INF * 0.5
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        if bits == 8:
+            vs = vs_ref[0, 0]                               # [W]
+            d_ = out.shape[-1]
+            out = (out.reshape(w, hg, d_)
+                   * vs[:, None, None]).reshape(w * hg, d_)
+        o_ref[0, 0] = jnp.where(any_valid, out, 0.0).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "window", "interpret"))
+def paged_attention_pallas_multi(q: jax.Array, k_pool: jax.Array,
+                                 v_pool: jax.Array, k_ladder: jax.Array,
+                                 v_ladder: jax.Array, token_idx: jax.Array,
+                                 block_table: jax.Array, pos: jax.Array, *,
+                                 bits: int = 16, window: int = 0,
+                                 interpret: bool = False) -> jax.Array:
+    """In-place paged attention for a W-query speculative window.
+
+    q ``[B, W, Hkv, Hg, D]`` — query ``j`` at absolute position
+    ``pos + j``; ``k_ladder``/``v_ladder`` ``[B, W, Hkv]`` are the
+    per-position int8 dequant scale ladders (ignored at kv16).
+    ``window <= 0`` means full attention. Returns ``[B, W, Hkv, Hg, D]``
+    f32. Same grid/scalar-prefetch structure as
+    :func:`paged_attention_pallas` — W rides in the q block, not the grid.
+    """
+    assert bits in (8, 16), f"paged kernel supports kv16/kv8, got kv{bits}"
+    b, w, hkv, hg, d = q.shape
+    n_blocks, bs, _, _ = k_pool.shape
+    _, n_lblk = block_table.shape
+    # full-attention sentinel must exceed max(qpos - tidx) = pos + w - 1
+    win = window if window > 0 else n_lblk * bs + w
+
+    kernel = functools.partial(
+        _kernel_multi, n_lblk=n_lblk, n_blocks=n_blocks, bits=bits,
+        window=win, sm_scale=1.0 / d ** 0.5, w=w, hg=hg)
+
+    def phys(lb_idx, bt):
+        return jnp.clip(bt[lb_idx], 0, n_blocks - 1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,          # (block_table, pos)
+        grid=(b, hkv, n_lblk),
+        in_specs=[
+            pl.BlockSpec((1, 1, w * hg, d),
+                         lambda r, h, lb, bt, p: (r, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, d),
+                         lambda r, h, lb, bt, p:
+                         (phys(r * n_lblk + lb, bt), 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, d),
+                         lambda r, h, lb, bt, p:
+                         (phys(r * n_lblk + lb, bt), 0, h, 0)),
+            pl.BlockSpec((1, bs),
+                         lambda r, h, lb, bt, p:
+                         (phys(r * n_lblk + lb, bt), 0)),
+            pl.BlockSpec((1, 1, w), lambda r, h, lb, bt, p: (r, h, 0)),
+            pl.BlockSpec((1, 1, w), lambda r, h, lb, bt, p: (r, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, w * hg, d),
+                               lambda r, h, lb, bt, p: (r, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((w * hg, 1), jnp.float32),
+            pltpu.VMEM((w * hg, 1), jnp.float32),
+            pltpu.VMEM((w * hg, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, w * hg, d), jnp.float32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(block_table.reshape(-1).astype(jnp.int32), pos.astype(jnp.int32),
+      q.transpose(0, 2, 1, 3, 4).reshape(b, hkv, w * hg, d),
+      k_pool, v_pool, token_idx,
+      jnp.asarray(k_ladder, jnp.float32).transpose(0, 2, 1),
+      jnp.asarray(v_ladder, jnp.float32).transpose(0, 2, 1))
+    return out.reshape(b, hkv, w, hg, d).transpose(0, 2, 1, 3, 4)

@@ -121,6 +121,20 @@ def main() -> None:
     ap.add_argument("--retry-budget", type=int, default=2,
                     help="max quarantine retries per request before it "
                          "finalizes FAILED (default: 2)")
+    ap.add_argument("--speculate", action="store_true",
+                    help="speculative decoding: each decode step drafts "
+                         "--draft-k tokens (self-speculative n-gram "
+                         "lookup) and verifies the whole window in one "
+                         "batched pass — token-identical to greedy, "
+                         "faster on predictable streams. Requires "
+                         "--continuous")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="drafted tokens per speculative window "
+                         "(window = draft-k + 1 positions; default: 4)")
+    ap.add_argument("--draft-model", default=None,
+                    help="external drafter from the registry instead of "
+                         "the self-speculative n-gram lookup (e.g. "
+                         "'repeat'; default: self-speculative)")
     ap.add_argument("--paranoid", action="store_true",
                     help="run the full block-pool invariant audit "
                          "(refcounts vs free/LRU/live partition, "
@@ -148,6 +162,9 @@ def main() -> None:
                                 or args.inject_faults or args.paranoid):
         raise SystemExit("--deadline-ms/--shed/--inject-faults/--paranoid "
                          "need --continuous (the fault-tolerant scheduler)")
+    if args.speculate and not args.continuous:
+        raise SystemExit("--speculate needs --continuous (draft/verify "
+                         "windows run through the slot-pool segment)")
     srv = AdaptiveServer(cfg, params, engine,
                          ServingConfig(slots=256, kv_bits=args.kv_bits,
                                        max_batch=4, paged_kv=args.paged_kv,
@@ -157,7 +174,10 @@ def main() -> None:
                                        paged_backend=args.paged_backend,
                                        prefill_chunk=args.prefill_chunk,
                                        priority_classes=args.priority_classes,
-                                       preemption=args.preemption),
+                                       preemption=args.preemption,
+                                       speculate=args.speculate,
+                                       draft_k=args.draft_k,
+                                       draft_model=args.draft_model),
                          manager=mgr)
     rng = np.random.default_rng(args.seed)
     n_cls = max(1, args.priority_classes)

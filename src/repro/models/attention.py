@@ -284,6 +284,77 @@ def _kv_step_quantize(cache, k_new: jax.Array, v_new: jax.Array):
     return k_scale, v_scale, k_row, v_row
 
 
+def _kv_window_quantize(cache, k_new: jax.Array, v_new: jax.Array):
+    """W-token generalization of :func:`_kv_step_quantize` for speculative
+    draft/verify windows. ``k_new``/``v_new`` are ``[B, W, Hkv, D]``.
+
+    Int caches get a per-position **scale ladder** ``[B, W, Hkv]``:
+    ``ladder[:, j]`` is exactly the running-max scale the greedy stepwise
+    path would hold *after* folding position ``j`` (``cummax`` over the
+    window's per-position amax, floored at the cache's current scale — max
+    is associative, so this is bit-identical to folding one step at a
+    time). Position ``j``'s rows are quantized under ``ladder[:, j]``, and
+    the caller commits ``ladder[:, m-1]`` as the cache scale once the
+    accepted count ``m`` is known — rejected tail positions never pollute
+    the committed scale. Returns ``(k_ladder, v_ladder, k_rows, v_rows)``.
+
+    int4 is not supported here (speculation is gated to kv8/kv16 upstream,
+    see ``transformer.supports_speculation``).
+    """
+    b, w = k_new.shape[:2]
+    if cache.bits in (4, 8):
+        assert cache.bits == 8, "speculative windows require kv8/kv16"
+        qmax = 127.0
+        k_amax = jnp.max(jnp.abs(k_new.astype(jnp.float32)), axis=3)
+        v_amax = jnp.max(jnp.abs(v_new.astype(jnp.float32)), axis=3)
+        k_lad = jnp.maximum(cache.k_scale[:, None],
+                            jax.lax.cummax(k_amax / qmax + 1e-9, axis=1))
+        v_lad = jnp.maximum(cache.v_scale[:, None],
+                            jax.lax.cummax(v_amax / qmax + 1e-9, axis=1))
+
+        def quant(x, lad):
+            q = jnp.round(x.astype(jnp.float32) / lad[..., None])
+            return jnp.clip(q, -qmax, qmax).astype(jnp.int8)
+
+        k_rows, v_rows = quant(k_new, k_lad), quant(v_new, v_lad)
+    else:
+        k_lad = jnp.broadcast_to(cache.k_scale[:, None],
+                                 (b, w) + cache.k_scale.shape[1:])
+        v_lad = jnp.broadcast_to(cache.v_scale[:, None],
+                                 (b, w) + cache.v_scale.shape[1:])
+        k_rows = k_new.astype(cache.k.dtype)
+        v_rows = v_new.astype(cache.v.dtype)
+    return k_lad, v_lad, k_rows, v_rows
+
+
+def update_kv_cache_window(cache: KVCache, k_new: jax.Array,
+                           v_new: jax.Array, pos: jax.Array):
+    """Write a W-token draft/verify window at ring slots
+    ``(pos + j) % slots`` for ``j in [0, W)``.
+
+    The cache's committed ``k_scale``/``v_scale`` are left **unchanged** —
+    the caller commits the per-position ladder entry of the last *accepted*
+    position after the verify pass (rollback-free: rejected tail slots hold
+    junk that the next window's write span always covers before any query
+    reads it). Returns ``(cache', k_ladder, v_ladder)``.
+    """
+    b, slots = cache.token_idx.shape
+    w = k_new.shape[1]
+    qpos = pos[:, None] + jnp.arange(w, dtype=pos.dtype)[None]   # [B, W]
+    slot = (qpos % slots).astype(jnp.int32)
+    k_lad, v_lad, k_rows, v_rows = _kv_window_quantize(cache, k_new, v_new)
+    bidx = jnp.arange(b)[:, None]
+    new = KVCache(
+        k=cache.k.at[bidx, slot].set(k_rows),
+        v=cache.v.at[bidx, slot].set(v_rows),
+        k_scale=cache.k_scale,
+        v_scale=cache.v_scale,
+        token_idx=cache.token_idx.at[bidx, slot].set(qpos.astype(jnp.int32)),
+        bits=cache.bits,
+    )
+    return new, k_lad, v_lad
+
+
 def update_kv_cache(cache: KVCache, k_new: jax.Array, v_new: jax.Array,
                     pos: jax.Array) -> KVCache:
     """Write one decode step (``k_new [B, 1, Hkv, D]``) at ring slot
@@ -434,6 +505,42 @@ def update_paged_kv_cache(cache: PagedKVCache, k_new: jax.Array,
     )
 
 
+def update_paged_kv_cache_window(cache: PagedKVCache, k_new: jax.Array,
+                                 v_new: jax.Array, pos: jax.Array):
+    """Paged counterpart of :func:`update_kv_cache_window`: scatter a
+    W-token window through the block table with ``mode="drop"``.
+
+    Placement matches :func:`update_paged_kv_cache` per position, so the
+    gathered view stays bit-identical to the contiguous window writer.
+    Two drop guards protect the pool: unmapped table entries (dead /
+    CoW-guarded rows) drop as usual, and window positions past the row's
+    virtual capacity are redirected to the unmapped sentinel instead of
+    ring-wrapping — a speculative tail must never wrap onto logical block
+    0, which may be a *shared* prefix master. Returns
+    ``(cache', k_ladder, v_ladder)`` with committed scales unchanged.
+    """
+    b, n_lblk = cache.block_table.shape
+    n_blocks, bs = cache.k.shape[0], cache.k.shape[1]
+    w = k_new.shape[1]
+    cap = n_lblk * bs
+    qpos = pos[:, None] + jnp.arange(w, dtype=pos.dtype)[None]   # [B, W]
+    slot = (qpos % cap).astype(jnp.int32)
+    phys = jnp.take_along_axis(cache.block_table, slot // bs, axis=1)
+    phys = jnp.where(qpos < cap, phys, n_blocks)        # no wrap onto masters
+    off = slot % bs
+    k_lad, v_lad, k_rows, v_rows = _kv_window_quantize(cache, k_new, v_new)
+    new = PagedKVCache(
+        k=cache.k.at[phys, off].set(k_rows, mode="drop"),
+        v=cache.v.at[phys, off].set(v_rows, mode="drop"),
+        k_scale=cache.k_scale, v_scale=cache.v_scale,
+        token_idx=cache.token_idx.at[phys, off].set(qpos.astype(jnp.int32),
+                                                    mode="drop"),
+        block_table=cache.block_table,
+        bits=cache.bits,
+    )
+    return new, k_lad, v_lad
+
+
 def paged_decode_attention(q: jax.Array, cache: PagedKVCache, pos: jax.Array,
                            *, window: int | None = None,
                            interpret: bool | None = None) -> jax.Array:
@@ -464,6 +571,35 @@ def paged_decode_attention(q: jax.Array, cache: PagedKVCache, pos: jax.Array,
         cache.k_scale, cache.v_scale, cache.token_idx, cache.block_table,
         pos, bits=cache.bits, window=win, interpret=bool(interpret))
     return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def paged_decode_attention_window(q: jax.Array, cache: PagedKVCache,
+                                  pos: jax.Array, k_ladder: jax.Array,
+                                  v_ladder: jax.Array, *,
+                                  window: int | None = None,
+                                  interpret: bool | None = None) -> jax.Array:
+    """W-query speculative window attention **in place** against the pool.
+
+    The multi-query analogue of :func:`paged_decode_attention`: q
+    ``[B, W, H, D]`` with query ``j`` at absolute position ``pos + j`` and
+    per-query int8 scale ladders ``[B, W, Hkv]`` (see
+    :func:`decode_attention_window` for the ladder semantics). Streams only
+    mapped physical blocks via the scalar-prefetched block table — still no
+    dense gather view.
+    """
+    from repro.kernels.paged_attention import paged_attention_pallas_multi
+    b, w, h, d = q.shape
+    _, bs, hkv, _ = cache.k.shape
+    hg = h // hkv
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    slots = cache.block_table.shape[1] * bs
+    win = 0 if window is None or int(window) > slots else int(window)
+    out = paged_attention_pallas_multi(
+        q.reshape(b, w, hkv, hg, d), cache.k, cache.v,
+        k_ladder, v_ladder, cache.token_idx, cache.block_table,
+        pos, bits=cache.bits, window=win, interpret=bool(interpret))
+    return out.reshape(b, w, h, d).astype(q.dtype)
 
 
 def prefix_attention(q: jax.Array, k_pre: jax.Array, v_pre: jax.Array,
@@ -546,3 +682,43 @@ def decode_attention(q: jax.Array, cache: KVCache, pos: jax.Array, *,
               if cache.bits == 4 else cache.v.astype(jnp.float32))
         out = jnp.einsum("bkgs,bskd->bkgd", p, vf)
     return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def decode_attention_window(q: jax.Array, cache: KVCache, pos: jax.Array,
+                            k_ladder: jax.Array, v_ladder: jax.Array, *,
+                            window: jax.Array | int | None = None
+                            ) -> jax.Array:
+    """W-query attention vs the cache for a speculative draft/verify window.
+
+    q ``[B, W, H, D]`` → ``[B, W, H, D]``; query ``j`` sits at absolute
+    position ``pos + j`` and attends causally with the same per-slot
+    ``token_idx`` mask as :func:`decode_attention`, restricted to
+    ``token_idx <= pos + j``. Int8 caches fold the per-position scale
+    **ladder** (``[B, W, Hkv]``): query ``j`` dequantizes every entry under
+    ``ladder[:, j]`` — exactly the current-scale fold the greedy stepwise
+    path applies after writing position ``j`` — which is what keeps a
+    W-wide verify pass bit-identical to W greedy steps.
+    """
+    b, w, h, d = q.shape
+    _, slots, hkv, _ = cache.k.shape
+    hg = h // hkv
+    qh = (q.astype(jnp.float32) * d ** -0.5).reshape(b, w, hkv, hg, d)
+    if cache.bits == 8:
+        scores = jnp.einsum("bwkgd,bskd->bwkgs", qh,
+                            cache.k.astype(jnp.float32))
+        scores = scores * k_ladder[..., None, None]
+    else:
+        assert cache.bits == 16, "speculative windows require kv8/kv16"
+        scores = jnp.einsum("bwkgd,bskd->bwkgs", qh,
+                            cache.k.astype(jnp.float32))
+    qpos = pos[:, None] + jnp.arange(w, dtype=pos.dtype)[None]    # [B, W]
+    win = jnp.asarray(slots + 1 if window is None else window, jnp.int32)
+    tidx = cache.token_idx                                        # [B, slots]
+    keep = ((tidx[:, None] >= 0) & (tidx[:, None] <= qpos[:, :, None])
+            & (qpos[:, :, None] - tidx[:, None] < win))           # [B, W, S]
+    scores = jnp.where(keep[:, :, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bwkgs,bskd->bwkgd", p, cache.v.astype(jnp.float32))
+    if cache.bits == 8:
+        out = out * v_ladder[..., None, None]
+    return out.reshape(b, w, h, d).astype(q.dtype)

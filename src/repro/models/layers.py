@@ -21,7 +21,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.quantizers import QTensor, dequantize, fake_quant_dynamic
+from repro.core.quantizers import (QTensor, dequantize, fake_quant_dynamic,
+                                   fake_quant_dynamic_token)
 from repro.core.qtypes import QuantSpec
 from repro.core.quantizers import quantize_native
 from repro.runtime import compute_dtype as _default_compute_dtype
@@ -56,6 +57,11 @@ def qlinear(params: dict, x: jax.Array, bits_aw: jax.Array, *,
 
     Fake mode keys: ``w`` [in,out] (+ ``b``). Native keys: ``wq`` (QTensor
     leaves as ``wq_data``/``wq_scale`` + static bits in ``wq_bits``) (+ ``b``).
+
+    Activations quantize **per token** (trailing-axis amax): each row's grid
+    depends only on that row, so decode numerics are invariant to batch
+    composition and to the speculative verify width (invariant 11). Weights
+    keep the per-tensor grid.
     """
     if compute_dtype is None:
         compute_dtype = _default_compute_dtype()
@@ -64,12 +70,12 @@ def qlinear(params: dict, x: jax.Array, bits_aw: jax.Array, *,
         # ahead of the loop (per profile — transformer.prequant_decode_weights)
         # instead of every step. Activations still quantize in-loop (their
         # scale depends on runtime data).
-        xq = fake_quant_dynamic(x, bits_aw[0], SIGNED_SYM)
+        xq = fake_quant_dynamic_token(x, bits_aw[0], SIGNED_SYM)
         y = jnp.dot(xq.astype(compute_dtype), params["wfq"].astype(compute_dtype),
                     preferred_element_type=jnp.float32)
     elif "w" in params:
         a_bits, w_bits = bits_aw[0], bits_aw[1]
-        xq = fake_quant_dynamic(x, a_bits, SIGNED_SYM)
+        xq = fake_quant_dynamic_token(x, a_bits, SIGNED_SYM)
         wq = fake_quant_dynamic(params["w"], w_bits, SIGNED_SYM)
         y = jnp.dot(xq.astype(compute_dtype), wq.astype(compute_dtype),
                     preferred_element_type=jnp.float32)
@@ -77,7 +83,7 @@ def qlinear(params: dict, x: jax.Array, bits_aw: jax.Array, *,
         # Native: activations still honor the profile's a_bits (bits-as-data);
         # weights are already on their integer grid.
         a_bits = bits_aw[0]
-        xq = fake_quant_dynamic(x, a_bits, SIGNED_SYM)
+        xq = fake_quant_dynamic_token(x, a_bits, SIGNED_SYM)
         w = dequantize(params["wq"], compute_dtype)
         y = jnp.dot(xq.astype(compute_dtype), w, preferred_element_type=jnp.float32)
     if "b" in params:

@@ -30,9 +30,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from .attention import (KVCache, PagedKVCache, decode_attention,
-                        gqa_attention, init_kv_cache, init_paged_kv_cache,
-                        paged_decode_attention, paged_view, prefix_attention,
-                        swa_attention, update_kv_cache, update_paged_kv_cache)
+                        decode_attention_window, gqa_attention, init_kv_cache,
+                        init_paged_kv_cache, paged_decode_attention,
+                        paged_decode_attention_window, paged_view,
+                        prefix_attention, swa_attention, update_kv_cache,
+                        update_kv_cache_window, update_paged_kv_cache,
+                        update_paged_kv_cache_window)
 from .pshard import constrain
 from .layers import (embed_lookup, init_embed, init_linear, init_norm,
                      layer_norm, qlinear, rms_norm)
@@ -566,6 +569,20 @@ def supports_prefix_sharing(cfg: ModelConfig) -> bool:
             and not cfg.sliding_window and cfg.causal)
 
 
+def supports_speculation(cfg: ModelConfig, kv_bits: int = 16) -> bool:
+    """Whether draft/verify speculative decoding is exact for this stack.
+
+    Same structural requirements as prefix sharing — full causal attention
+    with per-position state only. SSM recurrences and MoE capacity dispatch
+    couple a window's positions to batch/sequence state a rejected draft
+    cannot roll back, and a sliding-window ring could wrap a speculative
+    tail onto live slots. Additionally requires kv16/kv8: the int4 packed
+    cache has no per-query dequant ladder (see
+    ``attention.decode_attention_window``).
+    """
+    return supports_prefix_sharing(cfg) and kv_bits in (8, 16)
+
+
 def paged_row_masters(kv_pool, slot: int, block_ids, n_tok: int):
     """Full-precision K/V masters of one paged row's first ``n_tok`` tokens.
 
@@ -1039,6 +1056,337 @@ def decode_segment(params: dict, cfg: ModelConfig, table: jax.Array,
 
         caches["kv"] = jax.vmap(writeback)(caches["kv"], view)
     return ys.T, row_ok, tok, pos, caches
+
+
+def ngram_propose(hist: jax.Array, tok: jax.Array, k: int,
+                  vocab: int) -> jax.Array:
+    """Self-speculative n-gram drafter: longest-suffix match (prompt
+    lookup) over the row's own history.
+
+    ``hist [B, Hn]`` holds each row's most recent tokens (−1 = empty pad,
+    pads only ever on the left), with the *current* token as the last
+    entry; ``tok [B]`` is that current token. Each row scores every
+    earlier position ``j`` by how long a suffix of the current context it
+    matches (up to a trigram, most-recent position winning ties) and
+    proposes the ``k`` tokens that followed the best match — periodically
+    extended when the match sits closer than ``k`` to the end, so a
+    period-``p`` cycle (including alternating-branch cycles a follower
+    vote cannot disambiguate) is predicted exactly once one full period
+    is in the window. Rows with no match (fresh history) fall back to
+    repeating the current token. Pure jnp — runs inside the segment
+    scan, zero host round-trips. Returns proposals ``[B, k]`` int32.
+    """
+    b, hn = hist.shape
+    if not k:
+        return jnp.zeros((b, 0), jnp.int32)
+    h = jnp.asarray(hist, jnp.int32)
+    cur = jnp.asarray(tok, jnp.int32)
+    depth = min(3, hn - 1)
+    # candidate match ends j ∈ [0, hn-2] (j == hn-1 is the trivial
+    # self-match); score = longest matching suffix, weighted so a
+    # (d+1)-gram match always beats any d-gram match
+    j_idx = jnp.arange(hn - 1, dtype=jnp.int32)[None]         # [1, hn-1]
+    score = jnp.zeros((b, hn - 1), jnp.int32)
+    run = jnp.ones((b, hn - 1), bool)
+    for d in range(depth):
+        tgt = h[:, hn - 1 - d][:, None]                       # suffix token
+        cand = jnp.where(j_idx - d >= 0,
+                         jnp.take_along_axis(
+                             h, jnp.maximum(j_idx - d, 0), axis=1), -2)
+        run = run & (cand == tgt) & (tgt >= 0)
+        score = score + (1 << d) * run.astype(jnp.int32)
+    best_j = jnp.argmax(score * hn + j_idx, axis=1).astype(jnp.int32)
+    matched = jnp.max(score, axis=1) > 0
+    # propose the followers of the match; a match p positions from the
+    # end extends periodically (idx wraps back by the period), so short
+    # cycles draft past their own tail instead of clamping
+    period = jnp.maximum(hn - 1 - best_j, 1)
+    offs = jnp.arange(k, dtype=jnp.int32)[None]               # [1, k]
+    idx = best_j[:, None] + 1 + jnp.mod(offs, period[:, None])
+    prop = jnp.take_along_axis(h, jnp.minimum(idx, hn - 1), axis=1)
+    prop = jnp.where(matched[:, None] & (prop >= 0), prop, cur[:, None])
+    return prop
+
+
+def decode_step_spec(params: dict, cfg: ModelConfig, bits_row: jax.Array,
+                     tokens: jax.Array, pos: jax.Array, caches: dict,
+                     row_valid: Optional[jax.Array] = None,
+                     paged_backend: str = "gather"):
+    """W-token draft/verify forward. tokens ``[B, W]`` (position of
+    ``tokens[:, j]`` is ``pos + j``) → ``(logits [B, W, V], caches,
+    (k_ladders, v_ladders))`` with ladders ``[L, B, W, Hkv]``.
+
+    The W-wide twin of :func:`decode_step`, restricted to the stacks
+    :func:`supports_speculation` admits (dense full-causal attention — no
+    SSM/MoE/SWA branches). All W positions are written to the cache before
+    attention runs (write-before-read: each query's causal mask only ever
+    sees this window's own prefix plus committed history), and the cache's
+    *committed* int8 scales are left untouched — the caller commits the
+    returned per-position scale ladders at the accepted count once the
+    verify pass has resolved (see :func:`decode_segment_spec`).
+    """
+    eb, _, layer_bits = split_bits(cfg, bits_row)
+    x = embed_lookup(params["embed"], tokens, eb)
+    b, w = tokens.shape
+    positions = (pos[:, None]
+                 + jnp.arange(w, dtype=jnp.int32)[None]).astype(jnp.int32)
+
+    def body(x, xs):
+        lp, lb, cache = xs
+        new_cache = dict(cache)
+        xin = _norm(cfg, lp["norm_attn"], x)
+        q, k, v = _attn_qkv(cfg, lp, xin, lb, positions)
+        if "kv_view" in cache:
+            # paged gather path: same segment-lifetime dense view contract
+            # as decode_step — the pool passes through untouched and the
+            # view's blocks fold back at segment exit
+            kvc = cache["kv"]
+            view, klad, vlad = update_kv_cache_window(
+                cache["kv_view"], k, v, pos)
+            attn = decode_attention_window(
+                q, view, pos, klad, vlad,
+                window=cfg.window(view.token_idx.shape[1]))
+            new_cache["kv_view"] = view
+        elif isinstance(cache["kv"], PagedKVCache):
+            kvc, klad, vlad = update_paged_kv_cache_window(
+                cache["kv"], k, v, pos)
+            slots_p = kvc.block_table.shape[1] * kvc.k.shape[1]
+            if paged_backend == "pallas":
+                attn = paged_decode_attention_window(
+                    q, kvc, pos, klad, vlad, window=cfg.window(slots_p))
+            else:
+                view = paged_view(kvc)
+                attn = decode_attention_window(
+                    q, view, pos, klad, vlad, window=cfg.window(slots_p))
+        else:
+            kvc, klad, vlad = update_kv_cache_window(cache["kv"], k, v, pos)
+            attn = decode_attention_window(
+                q, kvc, pos, klad, vlad,
+                window=cfg.window(kvc.token_idx.shape[1]))
+        attn = qlinear(lp["attn_out"], attn.reshape(b, w, -1),
+                       lb[_site_idx(cfg, "attn_out")])
+        new_cache["kv"] = kvc
+        x = x + attn
+        xm = _norm(cfg, lp["norm_mlp"], x)
+        x = x + mlp(lp["mlp"], xm, lb[_site_idx(cfg, "mlp_in")],
+                    lb[_site_idx(cfg, "mlp_out")],
+                    gated=cfg.act == "silu", act=cfg.act)
+        return x, (new_cache, (klad, vlad))
+
+    layers_and_caches = (params["layers"], layer_bits, caches)
+    if cfg.scan_layers:
+        x, (new_caches, ladders) = jax.lax.scan(body, x, layers_and_caches)
+    else:  # depth-unrolled analysis variant
+        new_list, lad_list = [], []
+        for l in range(cfg.n_layers):
+            xs_l = jax.tree.map(lambda a: a[l], layers_and_caches)
+            x, (nc_, lad_) = body(x, xs_l)
+            new_list.append(nc_)
+            lad_list.append(lad_)
+        new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *new_list)
+        ladders = jax.tree.map(lambda *xs: jnp.stack(xs), *lad_list)
+    x = _norm(cfg, params["norm_f"], x)
+    logits = _logits(cfg, params, bits_row, x)          # [B, W, V]
+    return logits, new_caches, ladders
+
+
+def _commit_window_scales(kv, k_ladders, v_ladders, m: jax.Array, w: int):
+    """Commit the scale-ladder entry of the last delivered position.
+
+    ``kv`` is a per-layer-stacked (Paged)KVCache with ``k_scale [L, B,
+    Hkv]``; ``k_ladders [L, B, W, Hkv]``; ``m [B]`` delivered counts.
+    Rows with ``m == 0`` (frozen) keep their committed scale — a dead
+    row's junk amax must never move the scale its historical ints were
+    written under.
+    """
+    if kv.bits != 8:
+        return kv
+    idx = jnp.clip(m - 1, 0, w - 1).astype(jnp.int32)
+
+    def take(lad):
+        sel = jnp.take_along_axis(
+            lad, jnp.broadcast_to(idx[None, :, None, None],
+                                  lad.shape[:2] + (1,) + lad.shape[3:]),
+            axis=2)[:, :, 0]
+        return sel
+
+    keep = (m >= 1)[None, :, None]
+    return kv._replace(
+        k_scale=jnp.where(keep, take(k_ladders), kv.k_scale),
+        v_scale=jnp.where(keep, take(v_ladders), kv.v_scale))
+
+
+def decode_segment_spec(params: dict, cfg: ModelConfig, table: jax.Array,
+                        schedule: jax.Array, tok0: jax.Array,
+                        pos0: jax.Array, caches: dict, remaining: jax.Array,
+                        quota: Optional[jax.Array] = None,
+                        hist0: Optional[jax.Array] = None,
+                        spec_on: Optional[jax.Array] = None,
+                        prequant: Optional[dict] = None,
+                        paged_backend: str = "gather",
+                        fault_step: Optional[jax.Array] = None,
+                        draft_k: int = 4,
+                        draft_override: Optional[jax.Array] = None,
+                        draft_fn=None):
+    """Speculative decode segment: ``len(schedule)`` draft/verify windows.
+
+    Each scan iteration proposes ``draft_k`` tokens per row (self-
+    speculative :func:`ngram_propose` by default, or ``draft_fn(hist, tok)
+    -> [B, draft_k]`` — e.g. a small-model drafter), feeds the
+    ``W = draft_k + 1`` window ``[tok, d_1..d_k]`` through ONE batched
+    verify forward (:func:`decode_step_spec`), and advances each row by
+    its **delivered** count ``m = min(accepted + 1, remaining, quota)``:
+    the greedy argmax chain ``g`` matches the drafts position-wise, the
+    accepted count is the length of the matching prefix, and position
+    ``accepted`` contributes the free bonus token — so every delivered
+    token is exactly the token greedy stepwise decode would emit
+    (token-identity by induction). Rejected tail positions are rolled
+    back **without host sync**: their cache slots hold junk that the next
+    window's write span always overwrites before any query can attend to
+    it, and their quantization amaxes never reach the committed int8
+    scale (:func:`_commit_window_scales`).
+
+    Mirrors :func:`decode_segment`'s carry/exit contract, with two
+    generalizations: the done-mask becomes the per-row delivered count
+    ``m ∈ [0, W]``, and ``quota [B]`` bounds the segment's delivered
+    tokens per row (the scheduler's quantum measured in *accepted*
+    tokens). ``spec_on [B]`` disables speculation per row (``m`` clamps
+    to 1 — per-class opt-out). ``fault_step [B]`` poisons the whole
+    verify-window logits ``[W, V]`` of the targeted row at the given
+    iteration; ``row_ok`` finite-checks all ``W·V`` verify logits of
+    every live iteration. ``draft_override [B, n_iter, draft_k]``
+    (entries ≥ 0) forces proposals — the acceptance-boundary and
+    property-test hook.
+
+    Returns ``(tokens [B, n_iter, W], delivered [B, n_iter], row_ok,
+    tok, pos, caches)``; delivered tokens of iteration ``i`` are
+    ``tokens[:, i, :delivered[:, i]]``, the rest is −1 padding.
+    """
+    if prequant is None:
+        prequant = prequant_decode_weights(params, cfg, table)
+    n_iter = schedule.shape[0]
+    b = jnp.shape(tok0)[0]
+    w = draft_k + 1
+    rem = jnp.asarray(remaining, jnp.int32)
+    qta = (jnp.full((b,), jnp.iinfo(jnp.int32).max // 2, jnp.int32)
+           if quota is None else jnp.asarray(quota, jnp.int32))
+    son = (jnp.ones((b,), bool) if spec_on is None
+           else jnp.asarray(spec_on, bool))
+    fs = (jnp.full((b,), -1, jnp.int32) if fault_step is None
+          else jnp.asarray(fault_step, jnp.int32))
+    if hist0 is None:
+        hist0 = jnp.full((b, 32), -1, jnp.int32)
+        hist0 = hist0.at[:, -1].set(jnp.asarray(tok0, jnp.int32))
+    dov = (jnp.full((n_iter, b, draft_k), -1, jnp.int32)
+           if draft_override is None
+           else jnp.asarray(draft_override, jnp.int32).transpose(1, 0, 2))
+    paged = isinstance(caches.get("kv"), PagedKVCache)
+    use_kernel = paged and paged_backend == "pallas"
+    if paged and not use_kernel:
+        caches = dict(caches)
+        caches["kv_view"] = jax.vmap(paged_view)(caches["kv"])
+    wj = jnp.arange(w, dtype=jnp.int32)[None]
+
+    def _commit_caches(cch, klads, vlads, m):
+        cch = dict(cch)
+        if "kv_view" in cch:
+            cch["kv_view"] = _commit_window_scales(
+                cch["kv_view"], klads, vlads, m, w)
+        else:
+            cch["kv"] = _commit_window_scales(cch["kv"], klads, vlads, m, w)
+        return cch
+
+    def step(carry, xs):
+        pid, it, dov_i = xs
+        tok, pos, rem, qta, ok, hist, cch = carry
+        live = (rem > 0) & (qta > 0)
+        bits_row = table[pid]
+        p_step = overlay_params(params,
+                                jax.tree.map(lambda a: a[pid], prequant))
+        if draft_fn is not None:
+            prop = jnp.asarray(draft_fn(hist, tok), jnp.int32)
+        else:
+            prop = ngram_propose(hist, tok, draft_k, cfg.vocab)
+        prop = jnp.where(dov_i >= 0, dov_i, prop)
+        feed = jnp.concatenate([tok[:, None], prop], axis=1)     # [B, W]
+        feed = jnp.where(live[:, None], feed, 0)
+        logits, cch, (klads, vlads) = decode_step_spec(
+            p_step, cfg, bits_row, feed, pos, cch, row_valid=live,
+            paged_backend=paged_backend)
+        # fault injection poisons the whole verify window's logits — after
+        # the KV writes (the pool stays clean), before acceptance/argmax
+        logits = jnp.where((it == fs)[:, None, None],
+                           jnp.asarray(jnp.nan, logits.dtype), logits)
+        ok = ok & (jnp.all(jnp.isfinite(logits), axis=(1, 2)) | ~live)
+        g = jnp.argmax(logits, axis=-1).astype(jnp.int32)        # [B, W]
+        if draft_k:
+            match = (prop == g[:, :draft_k]).astype(jnp.int32)
+            acc = jnp.sum(jnp.cumprod(match, axis=1), axis=1)
+        else:
+            acc = jnp.zeros_like(rem)
+        m = jnp.where(son,
+                      jnp.minimum(jnp.minimum(acc + 1, rem), qta),
+                      jnp.minimum(jnp.minimum(1, rem), qta))
+        m = jnp.where(live, m, 0).astype(jnp.int32)
+        cch = _commit_caches(cch, klads, vlads, m)
+        out = jnp.where(wj < m[:, None], g, -1)
+        tok = jnp.where(m >= 1,
+                        jnp.take_along_axis(
+                            g, jnp.clip(m - 1, 0, w - 1)[:, None],
+                            axis=1)[:, 0],
+                        tok)
+        # slide the n-gram history window past the delivered tokens: junk
+        # beyond m never enters (the take window ends at the m-th append)
+        hcat = jnp.concatenate([hist, g], axis=1)
+        idx = m[:, None] + jnp.arange(hist.shape[1], dtype=jnp.int32)[None]
+        hist = jnp.take_along_axis(hcat, idx, axis=1)
+        return (tok, pos + m, rem - m, qta - m, ok, hist, cch), (out, m)
+
+    carry0 = (jnp.asarray(tok0, jnp.int32), pos0.astype(jnp.int32),
+              rem, qta, jnp.ones((b,), bool),
+              jnp.asarray(hist0, jnp.int32), caches)
+    (tok, pos, rem_out, _, row_ok, _, caches), (ys, ms) = jax.lax.scan(
+        step, carry0,
+        (schedule, jnp.arange(n_iter, dtype=jnp.int32), dov))
+    # retirement contract: rows that finished inside this segment come back
+    # with their tables unmapped — delivered counts are data, so `finish`
+    # is data too (vs decode_segment's static-step form), but the unmap
+    # select is the same fixed-shape op either way
+    finish = (rem > 0) & (rem_out <= 0)
+    if use_kernel:
+        kv = caches["kv"]
+        nb = kv.k.shape[1]                       # [L, n_blocks, bs, ...]
+        caches = dict(caches)
+        caches["kv"] = kv._replace(
+            block_table=jnp.where(finish[None, :, None], nb, kv.block_table))
+    elif paged:
+        caches = dict(caches)
+        view = caches.pop("kv_view")
+
+        def writeback(pool_l, view_l):
+            b_, nlb = pool_l.block_table.shape
+            bs = pool_l.k.shape[1]
+            nb = pool_l.k.shape[0]
+            bt = jnp.where(finish[:, None], nb, pool_l.block_table)
+            inv = jnp.full((nb + 1,), b_ * nlb, jnp.int32)
+            inv = inv.at[bt.reshape(-1)].set(
+                jnp.arange(b_ * nlb, dtype=jnp.int32), mode="drop")[:nb]
+            mapped = inv < b_ * nlb
+
+            def put(pl, vl):
+                blk = vl.reshape(b_ * nlb, bs, *vl.shape[2:])
+                g = jnp.take(blk, inv, axis=0, mode="fill", fill_value=0)
+                keep = mapped.reshape((nb,) + (1,) * (g.ndim - 1))
+                return jnp.where(keep, g, pl)
+
+            return pool_l._replace(
+                k=put(pool_l.k, view_l.k), v=put(pool_l.v, view_l.v),
+                token_idx=put(pool_l.token_idx, view_l.token_idx),
+                k_scale=view_l.k_scale, v_scale=view_l.v_scale,
+                block_table=bt)
+
+        caches["kv"] = jax.vmap(writeback)(caches["kv"], view)
+    return (ys.transpose(1, 0, 2), ms.T, row_ok, tok, pos, caches)
 
 
 def prefill(params: dict, cfg: ModelConfig, bits_row: jax.Array, batch: dict,

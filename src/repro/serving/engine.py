@@ -127,6 +127,27 @@ class ServingConfig:
     ContinuousScheduler.evict_row`) and they resume later through the
     continuation-prefill executable, token-identically. Requires the paged
     pool on a ``supports_prefix_sharing`` stack.
+
+    Speculative-decoding knobs (docs/serving.md §Speculation):
+
+    ``speculate`` — decode through draft/verify windows: each segment
+    iteration proposes ``draft_k`` tokens per row and verifies the
+    ``draft_k + 1`` window in ONE batched forward
+    (:func:`repro.models.transformer.decode_segment_spec`), delivering
+    1..``draft_k + 1`` tokens per row per iteration — **token-identical**
+    to non-speculative greedy at kv16 and kv8, it only changes
+    throughput. Requires a ``supports_speculation`` stack (full causal
+    attention, kv16/kv8). The pool-lifetime ``_segment`` executable IS
+    the speculative one on such a server: still exactly one decode
+    executable, zero per-token dispatches. ``draft_k`` — drafted tokens
+    per window. ``draft_hist`` — token-history length the self-
+    speculative n-gram drafter sees (a host-side ``[max_batch,
+    draft_hist]`` operand, updated at the flush boundary).
+    ``draft_model`` — which drafter proposes: ``None``/``"ngram"`` = the
+    built-in majority-vote follower n-gram drafter, ``"repeat"`` = repeat
+    the current token (the degenerate run-length drafter). External
+    small-model drafters plug in as a traced ``draft_fn(hist, tok) ->
+    [B, draft_k]`` via :class:`AdaptiveServer`'s ``draft_fn`` argument.
     """
 
     slots: int = 4096
@@ -142,6 +163,10 @@ class ServingConfig:
     prefill_chunk: Optional[int] = None
     priority_classes: int = 1
     preemption: bool = False
+    speculate: bool = False
+    draft_k: int = 4
+    draft_hist: int = 32
+    draft_model: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -193,15 +218,42 @@ class AdaptiveServer:
 
     def __init__(self, cfg: T.ModelConfig, params, engine: AdaptiveEngine,
                  serving: ServingConfig,
-                 manager: Optional[ProfileManager] = None):
+                 manager: Optional[ProfileManager] = None,
+                 draft_fn=None):
         """Compile the serving executables and prequantize weight images
-        (see the class docstring for the argument contract)."""
+        (see the class docstring for the argument contract). ``draft_fn``
+        overrides the speculative drafter: a traced ``(hist [B, H], tok
+        [B]) -> proposals [B, draft_k]`` callable (external small-model
+        drafters); ``None`` defers to ``ServingConfig.draft_model``."""
         self.cfg = cfg
         self.params = params
         self.engine = engine
         self.scfg = serving
         self.manager = manager
         table = engine.table
+        if serving.speculate:
+            if not T.supports_speculation(cfg, serving.kv_bits):
+                raise ValueError(
+                    "speculate=True needs a supports_speculation stack: "
+                    "full causal attention (no SSM/MoE/sliding-window) "
+                    "with kv_bits in (8, 16)")
+            if serving.draft_k < 1:
+                raise ValueError("draft_k must be >= 1")
+            if serving.draft_hist < 2:
+                raise ValueError("draft_hist must be >= 2 (the n-gram "
+                                 "drafter votes over history pairs)")
+        if draft_fn is None:
+            if serving.draft_model in (None, "ngram"):
+                pass                     # decode_segment_spec's built-in
+            elif serving.draft_model == "repeat":
+                def draft_fn(hist, tok):
+                    return jnp.broadcast_to(tok[:, None],
+                                            (tok.shape[0], serving.draft_k))
+            else:
+                raise ValueError(f"unknown draft_model "
+                                 f"{serving.draft_model!r}: use None, "
+                                 f"'ngram' or 'repeat' (or pass draft_fn)")
+        self.draft_fn = draft_fn
 
         def prefill_fn(params, profile_id, batch):
             bits = jnp.asarray(table)[profile_id]
@@ -248,6 +300,22 @@ class AdaptiveServer:
                                     prequant=self._prequant,
                                     paged_backend=self.paged_backend,
                                     fault_step=fault_step)
+
+        def segment_spec_fn(schedule, hist, spec_on, tok, pos, caches,
+                            remaining, quota, fault_step):
+            # speculative pool-lifetime segment: len(schedule) draft/verify
+            # windows; hist/spec_on/quota are per-dispatch DATA operands
+            # (host token history, per-class opt-out, quantum in accepted
+            # tokens) — same zero-recompile contract as the greedy segment
+            return T.decode_segment_spec(self.params, cfg, jnp.asarray(table),
+                                         schedule, tok, pos, caches,
+                                         remaining, quota=quota, hist0=hist,
+                                         spec_on=spec_on,
+                                         prequant=self._prequant,
+                                         paged_backend=self.paged_backend,
+                                         fault_step=fault_step,
+                                         draft_k=serving.draft_k,
+                                         draft_fn=self.draft_fn)
 
         def admit_fn(profile_id, batch, slots_idx, tok, pos, caches):
             # one admission wave = one dispatch: ragged prefill of every
@@ -408,8 +476,15 @@ class AdaptiveServer:
         self._generate = jax.jit(generate_fn, donate_argnums=(5,))
         # continuous-batching primitives (ContinuousScheduler): jitted here so
         # every scheduler instance over this server shares the compiled
-        # executables; the slot-pool state they donate lives in the scheduler
-        self._segment = jax.jit(segment_fn, donate_argnums=(1, 2, 3))
+        # executables; the slot-pool state they donate lives in the scheduler.
+        # A speculative server's ONE pool-lifetime segment executable IS the
+        # spec variant — never both, so the single-_segment invariant holds
+        # in either mode (SchedulerAudit.assert_single_segment)
+        if serving.speculate:
+            self._segment = jax.jit(segment_spec_fn,
+                                    donate_argnums=(3, 4, 5))
+        else:
+            self._segment = jax.jit(segment_fn, donate_argnums=(1, 2, 3))
         self._admit = jax.jit(admit_fn, donate_argnums=(3, 4, 5))
         # paged continuous-batching primitives: same sharing story as above
         # (compiled once per server; the scheduler owns the donated pool)

@@ -32,6 +32,18 @@ Detection of injected (or genuine) non-finite logits is NOT here: it rides
 the decode segment itself (:func:`repro.models.transformer.decode_segment`
 folds a per-row finite-check into the scan carry, so it costs no extra
 dispatch) and the scheduler's quarantine machinery reacts to the flag.
+Speculative decode widens the same check, not the machinery: the verify
+pass's logits span the whole ``W``-position draft window, and
+:func:`repro.models.transformer.decode_segment_spec` finite-checks the
+*full* ``[B, W, vocab]`` verify tensor per window — a NaN anywhere in the
+window (even at a position whose draft would have been rejected) marks
+the row not-ok, and the ordinary quarantine/escalated-retry ladder takes
+over — the attempt's tokens (speculatively delivered or not) are
+discarded wholesale and the retry restarts from the prompt, so recovery
+stays token-identical to a clean accuracy-critical run.
+``want_nan`` needs no window awareness: injection still keys on
+``(rid, attempt)`` and poisons step 0 of the targeted attempt's first
+segment, which under speculation is the first verify window.
 """
 from __future__ import annotations
 

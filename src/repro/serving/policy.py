@@ -53,7 +53,13 @@ class PriorityClass:
     ``accuracy_critical=True``, pinning the ProfileManager to the accuracy
     target even in battery-saver mode. ``preemptible`` marks rows of this
     class as evictable; ``can_preempt`` lets arrivals of this class evict
-    strictly-lower classes when slots or KV blocks run dry.
+    strictly-lower classes when slots or KV blocks run dry. ``speculative``
+    opts the class's rows into draft/verify speculative decode when the
+    server runs with ``ServingConfig.speculate`` — rows of a class that
+    opts out ride the same verify windows but advance exactly one token
+    per window (the ``spec_on`` operand of ``decode_segment_spec``;
+    delivered tokens are identical either way, speculation only changes
+    throughput, so the default is on).
     """
 
     name: str
@@ -61,6 +67,7 @@ class PriorityClass:
     accuracy_critical: bool = False
     preemptible: bool = True
     can_preempt: bool = False
+    speculative: bool = True
 
 
 def default_classes(n: int) -> tuple[PriorityClass, ...]:
@@ -148,6 +155,11 @@ class SchedulingPolicy:
     def wave_critical(self, requests) -> bool:
         """Profile binding of one admission wave (any bound row pins it)."""
         return any(self.bind_critical(r) for r in requests)
+
+    def bind_speculative(self, request) -> bool:
+        """Whether this request's rows speculate under a speculative server
+        (the class's ``speculative`` flag; classless FIFOs always do)."""
+        return bool(self.klass(request).speculative)
 
     # ---- queue discipline (subclass responsibility) ----------------------
     def enqueue(self, rid: int, request) -> None:

@@ -229,6 +229,21 @@ class ContinuousScheduler:
         self.slot_req: list[Optional[int]] = [None] * nslots
         self._slot_crit = np.zeros((nslots,), bool)
         self._slot_level = np.zeros((nslots,), np.int32)
+        # speculative decode state (ServingConfig.speculate): per-row token
+        # history for the n-gram drafter (−1 pad, last entry = the row's
+        # current token — updated at the flush boundary) and the per-class
+        # opt-out mask (policy.bind_speculative, bound at admission)
+        self.spec = bool(scfg.speculate)
+        self.draft_w = int(scfg.draft_k) + 1 if self.spec else 1
+        if self.spec:
+            self._hist = np.full((nslots, int(scfg.draft_hist)), -1,
+                                 np.int32)
+            self._slot_spec = np.ones((nslots,), bool)
+            # (pid, delivered) per verify window, in billing order — the
+            # flush-side twin of `events` (which records the PLANNED
+            # clamped bills the provisional plan fed select()); together
+            # they replay the spec ledger exactly (invariant 11)
+            self.spec_billed: list[tuple[int, int]] = []
         self._reqs: dict[int, Request] = {}
         self._suspended: dict[int, RowSnapshot] = {}     # rid -> snapshot
         self.results: dict[int, dict] = {}
@@ -775,6 +790,7 @@ class ContinuousScheduler:
             self._slot_crit[slot] = self.policy.bind_critical(req)
             self._slot_level[slot] = self.policy.klass(req).level
             self.remaining[slot] = req.max_new - 1
+            self._seed_spec(slot, req)
         self._inflight.append(entry)
         return take
 
@@ -1138,6 +1154,8 @@ class ContinuousScheduler:
             self.remaining[slot] = \
                 req.max_new - len(self.results[rid]["tokens"])
             self._slot_blocks[slot] = (blocks, None)
+            self._seed_spec(slot, req,
+                            history=self.results[rid]["tokens"])
             self.resumes += 1
         return len(rows)
 
@@ -1486,6 +1504,7 @@ class ContinuousScheduler:
             self._slot_level[slot] = self.policy.klass(req).level
             self.remaining[slot] = req.max_new - 1
             self._slot_blocks[slot] = (st["blocks"], st["entry"])
+            self._seed_spec(slot, req)
         if clear:
             self._caches = self._clear(self._pad_slot_idx(clear),
                                        self._caches)
@@ -1540,15 +1559,36 @@ class ContinuousScheduler:
             self._slot_level[slot] = self.policy.klass(req).level
             self.remaining[slot] = req.max_new - 1
             self._slot_blocks[slot] = (blocks, reg)
+            self._seed_spec(slot, req)
         if clear:
             self._caches = self._clear(self._pad_slot_idx(clear),
                                        self._caches)
         self._inflight.append(entry)
 
+    def _seed_spec(self, slot: int, req, history=None) -> None:
+        """Reset slot ``slot``'s speculation state for its new occupant:
+        fresh −1 history (the admission flush lands the first token — a
+        stale previous occupant's n-grams must never draft for this row)
+        and the request's class speculation binding. ``history`` replays a
+        resumed row's already-delivered tokens so the drafter warm-starts
+        (drafter *quality* only — acceptance verification never depends on
+        what was proposed)."""
+        if not self.spec:
+            return
+        self._hist[slot] = -1
+        if history:
+            h = np.asarray(history[-self._hist.shape[1]:], np.int32)
+            self._hist[slot, -len(h):] = h
+        self._slot_spec[slot] = self.policy.bind_speculative(req)
+
     # --------------------------------------------------------------- decoding
     def run_segment(self) -> None:
         """One decode segment over the pool: plan ``quantum`` steps against
-        the live rows, dispatch the fused scan, distribute tokens, retire."""
+        the live rows, dispatch the fused scan, distribute tokens, retire.
+        A speculative server's segments route to :meth:`_run_segment_spec`
+        (same pool, same executable slot, multi-token windows)."""
+        if self.spec:
+            return self._run_segment_spec()
         q = self.quantum
         mgr = self.srv.manager
         rem = self.remaining
@@ -1618,6 +1658,133 @@ class ContinuousScheduler:
                 self._slot_blocks[slot] = None
         self._inflight.append(entry)
 
+    def _run_segment_spec(self) -> None:
+        """One *speculative* decode segment: ``ceil(quantum / W)``
+        draft/verify windows through the one pool-lifetime spec executable
+        (``W = draft_k + 1``).
+
+        Spec mode is synchronous by design: each window's delivered count
+        ``m ∈ [1, W]`` is *data* the host needs for retirement, history
+        and billing, so the greedy loop's one-segment-ahead overlap is
+        traded for multi-token windows (:meth:`step` flushes with
+        ``keep=0``). Two consequences land here:
+
+        * the profile plan is **provisional** — per-window ids bind now
+          (the schedule rides the scan as data), but the ledger advances
+          only at the flush with the tokens each window actually
+          delivered (invariant 11: accepted-token billing);
+        * retirement and block release move to :meth:`_flush_spec` — the
+          host cannot know which rows finished until ``m`` materializes.
+
+        ``quota = quantum`` caps every row's delivered tokens per segment,
+        so the fairness quantum is measured in *accepted* tokens no matter
+        how lucky the drafter gets.
+        """
+        self._flush(0)      # land admissions first: fresh rows' history
+        w = self.draft_w    # must hold tok0 before their first window
+        n_iter = max(1, -(-self.quantum // w))
+        mgr = self.srv.manager
+        rem = self.remaining
+        if mgr is None:
+            sched = np.zeros((n_iter,), np.int32)
+        elif len(self.policy.classes) > 1:
+            sched = mgr.plan_schedule_classes(
+                n_iter, rem, self._slot_level,
+                tuple(c.level for c in self.policy.classes
+                      if c.accuracy_critical),
+                row_critical=self._slot_crit, draft_w=w, provisional=True)
+        else:
+            sched = mgr.plan_schedule_ragged(n_iter, rem, self._slot_crit,
+                                             draft_w=w, provisional=True)
+        if self.record_events:
+            # events mirror the greedy convention — the PLANNED clamped
+            # bill per window (what the provisional planner fed select());
+            # the tokens actually billed land in ``spec_billed`` at flush,
+            # so a replay oracle reproduces both halves exactly
+            for i in range(n_iter):
+                live_i = rem > i * w
+                self.events.append(
+                    (int(sched[i]),
+                     int(np.minimum(w, np.maximum(rem - i * w, 0)).sum()),
+                     bool((self._slot_crit & live_i).any())))
+        fault = np.full((self.n_slots,), -1, np.int32)
+        if self.faults is not None:
+            for slot in range(self.n_slots):
+                rid = self.slot_req[slot]
+                if rid is not None and self.remaining[slot] > 0 and \
+                        self.faults.want_nan(rid,
+                                             self._attempts.get(rid, 0)):
+                    fault[slot] = 0
+        quota = np.full((self.n_slots,), self.quantum, np.int32)
+        toks, ms, ok, self._tok, self._pos, self._caches = self._segment(
+            jnp.asarray(sched), jnp.asarray(self._hist),
+            jnp.asarray(self._slot_spec), self._tok, self._pos,
+            self._caches, jnp.asarray(self.remaining, jnp.int32),
+            jnp.asarray(quota), jnp.asarray(fault))
+        self._inflight.append({
+            "kind": "spec", "toks": toks, "ms": ms, "ok": ok,
+            "sched": sched, "crit": self._slot_crit.copy(),
+            "rows": [(s, self.slot_req[s]) for s in range(self.n_slots)
+                     if self.slot_req[s] is not None],
+            "completes": []})
+
+    def _flush_spec(self, e: dict, arr: np.ndarray, names) -> None:
+        """Materialize one speculative segment entry (the ``keep=0`` sync
+        point): distribute each window's delivered prefix, bill the ledger
+        the tokens actually delivered (the dispatch plan was provisional —
+        invariant 11), slide each row's drafter history, then retire rows
+        whose budget hit zero and hand their blocks back. Rows whose
+        verify windows went non-finite route to quarantine exactly like
+        greedy segments."""
+        # repro: allow(host-sync) the flush boundary IS the sync point
+        ms = np.asarray(e["ms"])                          # [B, n_iter]
+        # repro: allow(host-sync) flush-boundary sync, same as ms
+        okarr = np.asarray(e["ok"]) if e.get("ok") is not None else None
+        mgr = self.srv.manager
+        sched = e["sched"]
+        n_iter = ms.shape[1]
+        h = self._hist.shape[1]
+        for i in range(n_iter):
+            n_tok = int(ms[:, i].sum())   # idle rows deliver 0: full sum
+            if mgr is not None:
+                mgr.account(int(sched[i]), n_tok)
+            if self.record_events:
+                self.spec_billed.append((int(sched[i]), n_tok))
+        retired: list[int] = []
+        for slot, rid in e["rows"]:
+            res = self.results[rid]
+            delivered: list[int] = []
+            for i in range(n_iter):
+                m = int(ms[slot, i])
+                if m:
+                    delivered.extend(arr[slot, i, :m].tolist())
+                    res["profile_trace"].extend([names[sched[i]]] * m)
+            res["tokens"].extend(delivered)
+            if delivered:
+                cat = np.concatenate([self._hist[slot],
+                                      np.asarray(delivered, np.int32)])
+                self._hist[slot] = cat[-h:]
+            if okarr is not None and delivered and not okarr[slot] \
+                    and rid not in self._nf_rows:
+                self._nf_rows.append(rid)
+            self.remaining[slot] -= len(delivered)
+            if self.remaining[slot] == 0 and delivered:
+                self.slot_req[slot] = None               # retire → refill
+                self._slot_crit[slot] = False
+                self._slot_level[slot] = 0
+                e["completes"].append(rid)
+                retired.append(slot)
+        if self.paged and retired:
+            # same contract as greedy retirement: the spec segment already
+            # unmapped finished rows in-graph (decode_segment_spec's
+            # `finish` writeback), so freed blocks can't take dead writes
+            for slot in retired:
+                blocks, reg = self._slot_blocks[slot]
+                self._release_blocks(blocks)
+                if reg is not None:
+                    self.registry.release(reg)
+                self._slot_blocks[slot] = None
+
     def _flush(self, keep: int = 0) -> None:
         """Materialize in-flight token blocks into per-request results.
 
@@ -1647,6 +1814,17 @@ class ContinuousScheduler:
                     res = self.results[rid]
                     res["tokens"].append(int(arr[j]))
                     res["profile_trace"].append(e["name"])
+                    if self.spec:
+                        # the admission token is the row's current token:
+                        # it lands in the history's last slot (the n-gram
+                        # drafter convention) before the first window runs
+                        try:
+                            self._hist[self.slot_req.index(rid), -1] = \
+                                int(arr[j])
+                        except ValueError:
+                            pass         # max_new == 1: never went live
+            elif e["kind"] == "spec":
+                self._flush_spec(e, arr, names)
             else:
                 # repro: allow(host-sync) flush-boundary sync, same as toks
                 okarr = (np.asarray(e["ok"])
@@ -1696,7 +1874,9 @@ class ContinuousScheduler:
         ran = False
         if self.live_rows:
             self.run_segment()
-            self._flush(keep=1)
+            # spec mode is synchronous (delivered counts gate retirement);
+            # greedy keeps one segment in flight to overlap host + device
+            self._flush(keep=0 if self.spec else 1)
             ran = True
         else:
             self._flush()

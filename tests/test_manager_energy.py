@@ -83,6 +83,50 @@ def test_plan_schedule_ragged_bills_live_rows_only():
     assert m_plan.spent_j < sum(STATS[i].energy_j for i in sched) * 4
 
 
+def test_plan_schedule_draft_window_clamps_to_row_budget():
+    """Regression: a speculative draft window overshooting a row's budget
+    by up to ``draft_w - 1`` must clamp its planned bill to the tokens the
+    row can still emit — a row with 3 tokens left under ``draft_w=4``
+    plans 3 bills for its final window, never 4 phantom ones (invariant
+    11: accepted-token billing)."""
+    rem = np.asarray([3, 9, 0, 5])
+    w = 4
+    m_plan = ProfileManager(STATS, accuracy_target=0.98, accuracy_floor=0.90,
+                            budget_j=40.0, low_energy=0.5)
+    sched = m_plan.plan_schedule_ragged(3, rem, draft_w=w)
+    m_loop = ProfileManager(STATS, accuracy_target=0.98, accuracy_floor=0.90,
+                            budget_j=40.0, low_energy=0.5)
+    for i in range(3):
+        pid = m_loop.select()
+        # window i bills min(w, rem - i*w) per row, floored at 0 — the
+        # per-row clamp a stepwise per-token oracle would apply
+        m_loop.account(pid, int(np.minimum(w, np.maximum(rem - i * w, 0))
+                                .sum()))
+        assert sched[i] == pid
+    assert abs(m_plan.spent_j - m_loop.spent_j) < 1e-12
+    # total planned tokens == total row budget, exactly — no phantom bills
+    total = sum(int(np.minimum(w, np.maximum(rem - i * w, 0)).sum())
+                for i in range(3))
+    assert total == int(rem.sum()) == 17
+
+
+def test_plan_schedule_provisional_leaves_ledger_untouched():
+    """``provisional=True`` plans the same profile ids but must restore the
+    ledger AND the hysteresis state — the speculative flush bills actual
+    delivered tokens instead."""
+    rem = np.asarray([8, 8, 8, 8])
+    m_real = ProfileManager(STATS, accuracy_target=0.98, accuracy_floor=0.90,
+                            budget_j=40.0, low_energy=0.5)
+    m_prov = ProfileManager(STATS, accuracy_target=0.98, accuracy_floor=0.90,
+                            budget_j=40.0, low_energy=0.5)
+    s_real = m_real.plan_schedule_ragged(2, rem, draft_w=4)
+    s_prov = m_prov.plan_schedule_ragged(2, rem, draft_w=4,
+                                         provisional=True)
+    assert list(s_real) == list(s_prov)
+    assert m_prov.spent_j == 0.0 and not m_prov._saver
+    assert m_real.spent_j > 0.0
+
+
 def test_manager_graceful_when_floor_unreachable():
     mgr = ProfileManager(STATS, accuracy_target=0.999, accuracy_floor=0.999,
                          budget_j=10.0)

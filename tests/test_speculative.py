@@ -1,0 +1,720 @@
+"""Speculative decoding: draft/verify windows, token-identical to greedy.
+
+The oracle-first contract of the speculative serving mode:
+
+* **token identity** — every token a speculative scheduler delivers is
+  exactly the token greedy stepwise decode would emit, at kv16 and kv8,
+  for every draft depth ``k`` — acceptance only changes *when* tokens
+  arrive, never *which*;
+* **boundary exactness** — ``draft_override`` forces the acceptance
+  boundaries (0 accepted, all-``k`` accepted, accept-then-done inside a
+  window, quota clamp, per-row opt-out) and each must deliver precisely
+  ``m = min(accepted + 1, remaining, quota)`` greedy tokens;
+* **rollback is invisible** — after any pattern of rejected drafts, the
+  carry (tok/pos) and every valid KV cache position (payload, token_idx,
+  int-KV scales) bit-match a row that never speculated;
+* **structural invariants survive** — ONE pool-lifetime segment
+  executable, ≤2 prefill waves per admission round, zero stepwise
+  ``_decode`` dispatches (SchedulerAudit / DispatchAudit);
+* **accepted-token billing** (invariant 11) — the ledger bills verified
+  delivered tokens only: replaying the planned ``events`` stream
+  (select-exact) and the ``spec_billed`` actuals stream (spend-exact)
+  through a fresh manager reproduces the ledger to float precision;
+* **cross-feature** — speculation composes with preemption/resume,
+  cancellation, NaN-fault quarantine/recovery, and CoW shared-prefix
+  admission: terminal statuses, billed ≡ delivered, zero leaked blocks.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.budgets import MAX_PREFILL_WAVES_PER_ROUND
+from repro.analysis.tracker import DispatchAudit, SchedulerAudit
+from repro.configs import get_smoke
+from repro.core.engine import AdaptiveEngine, QuantIndex
+from repro.core.manager import ProfileManager, ProfileStats
+from repro.core.profiles import Profile, paper_profiles, profile_table
+from repro.models import transformer as T
+from repro.serving.engine import (AdaptiveServer, Request, RequestStatus,
+                                  ServingConfig)
+from repro.serving.faults import FaultSchedule
+from repro.serving.scheduler import ContinuousScheduler
+
+
+def _build(arch="granite-3-2b"):
+    cfg = get_smoke(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    names = T.quant_layer_names(cfg)
+    profs = paper_profiles(names, inner_layers=[])
+    eng = AdaptiveEngine(tuple(profs), QuantIndex(names),
+                         lambda p, br, b: T.train_loss(p, cfg, br, b))
+    return cfg, params, eng
+
+
+@pytest.fixture(scope="module")
+def dense_parts():
+    return _build()
+
+
+def _manager():
+    stats = [ProfileStats(n, acc, e, 1e-3) for n, acc, e in [
+        ("A16-W8", 0.99, 4.0), ("A16-W4", 0.953, 2.0), ("A8-W8", 0.988, 3.0),
+        ("A8-W4", 0.953, 1.5), ("A4-W4", 0.958, 1.0), ("Mixed", 0.975, 2.0)]]
+    return ProfileManager(stats, accuracy_target=0.985, accuracy_floor=0.90,
+                          budget_j=150.0, low_energy=0.5)
+
+
+def _solo_tokens(parts, req, kv_bits=16, slots=64):
+    cfg, params, eng = parts
+    srv = AdaptiveServer(cfg, params, eng,
+                         ServingConfig(slots=slots, max_batch=4,
+                                       kv_bits=kv_bits))
+    return srv.generate(req.tokens[None, :], req.max_new)["tokens"][0]
+
+
+# solo oracles for a whole request list in ONE ragged dense generate (each
+# row emits exactly its solo stream — the ragged-identity contract proven
+# in test_serving_ragged), memoized across the k-parametrized cases
+_SOLO_MEMO: dict = {}
+
+
+def _solo_batch(parts, reqs, kv_bits):
+    key = (kv_bits, tuple((r.tokens.tobytes(), len(r.tokens), r.max_new)
+                          for r in reqs))
+    if key in _SOLO_MEMO:
+        return _SOLO_MEMO[key]
+    cfg, params, eng = parts
+    pl = np.asarray([len(r.tokens) for r in reqs], np.int32)
+    length, mn = int(pl.max()), max(r.max_new for r in reqs)
+    prompts = np.zeros((len(reqs), length), np.int32)
+    for i, r in enumerate(reqs):
+        prompts[i, length - len(r.tokens):] = r.tokens      # left-pad
+    srv = AdaptiveServer(cfg, params, eng,
+                         ServingConfig(slots=length + mn + 2,
+                                       max_batch=len(reqs), kv_bits=kv_bits,
+                                       paged_kv=False))
+    out = srv.generate(prompts, mn, prompt_len=pl,
+                       row_budget=np.asarray([r.max_new for r in reqs]))
+    _SOLO_MEMO[key] = [row[:r.max_new]
+                       for row, r in zip(out["tokens"], reqs)]
+    return _SOLO_MEMO[key]
+
+
+def _assert_accepted_token_billing(sched, results):
+    """Invariant 11 without a manager: every spec-billed token was
+    delivered (the admission wave delivers each live row's first token;
+    every other delivered token is billed through ``spec_billed``)."""
+    live = [r for r in results if r and r["tokens"]]
+    delivered = sum(len(r["tokens"]) for r in live)
+    assert sum(n for _, n in sched.spec_billed) == delivered - len(live)
+
+
+# ---------------------------------------------------------------------------
+# drafter unit tests (pure jnp, no model)
+# ---------------------------------------------------------------------------
+
+def test_ngram_propose_periodic_cycle_exact():
+    """A row whose history ends in a period-p cycle proposes the exact
+    continuation — including wrapping past its own tail when p < k."""
+    hn, vocab = 32, 100
+    row3 = [-1] * (hn - 9) + [5, 7, 9, 5, 7, 9, 5, 7, 9]    # period 3
+    row2 = [-1] * (hn - 6) + [3, 8, 3, 8, 3, 8]             # period 2 < k
+    hist = jnp.asarray([row3, row2], jnp.int32)
+    tok = jnp.asarray([9, 8], jnp.int32)
+    prop = np.asarray(T.ngram_propose(hist, tok, 4, vocab))
+    assert prop[0].tolist() == [5, 7, 9, 5]
+    assert prop[1].tolist() == [3, 8, 3, 8]
+
+
+def test_ngram_propose_fresh_history_repeats_current():
+    """No match (fresh row: all pad + the current token) falls back to
+    repeating the current token — never proposes from the −1 pad."""
+    hn = 32
+    hist = jnp.full((1, hn), -1, jnp.int32).at[0, -1].set(42)
+    prop = np.asarray(T.ngram_propose(hist, jnp.asarray([42], jnp.int32),
+                                      3, 100))
+    assert prop[0].tolist() == [42, 42, 42]
+
+
+def test_ngram_propose_longest_suffix_beats_recency():
+    """A 2-gram context match earlier in history beats a more recent
+    1-gram match — the longest-suffix weighting disambiguates branchy
+    repeats a plain follower vote cannot."""
+    hn = 32
+    # ... a b F1 ... z b F2 ... a b   (current = b, previous = a)
+    row = [-1] * (hn - 8) + [10, 11, 70, 4, 11, 80, 10, 11]
+    prop = np.asarray(T.ngram_propose(jnp.asarray([row], jnp.int32),
+                                      jnp.asarray([11], jnp.int32), 1, 100))
+    assert prop[0, 0] == 70        # follower of the (a, b) bigram match
+
+
+def test_ngram_propose_most_recent_tie_break():
+    """Equal-length matches resolve to the most recent occurrence: the
+    (10, 11) bigram appears twice with different followers, and the
+    drafter proposes the later one's follower."""
+    hn = 32
+    row = [-1] * (hn - 9) + [10, 11, 70, 4, 10, 11, 80, 10, 11]
+    prop = np.asarray(T.ngram_propose(jnp.asarray([row], jnp.int32),
+                                      jnp.asarray([11], jnp.int32), 1, 100))
+    assert prop[0, 0] == 80        # follower of the most recent (10, 11)
+
+
+def test_ngram_propose_k_zero_empty():
+    hist = jnp.full((2, 8), -1, jnp.int32)
+    prop = T.ngram_propose(hist, jnp.zeros((2,), jnp.int32), 0, 10)
+    assert prop.shape == (2, 0)
+
+
+# ---------------------------------------------------------------------------
+# acceptance boundaries: direct decode_segment_spec with draft_override
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def seg_state(dense_parts):
+    """Prefilled dense kv16 state + its greedy reference stream."""
+    cfg, params, _ = dense_parts
+    names = T.quant_layer_names(cfg)
+    table = jnp.asarray(profile_table([Profile.float32(names)], names))
+    rng = np.random.default_rng(11)
+    b, plen, steps = 3, 8, 16
+    prompts = rng.integers(0, cfg.vocab, (b, plen)).astype(np.int32)
+    logits, caches = T.prefill(params, cfg, table[0],
+                               {"tokens": jnp.asarray(prompts)}, slots=48,
+                               kv_bits=16)
+    tok0 = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    pos0 = jnp.full((b,), plen, jnp.int32)
+    ys, ok, gt, gp, _ = T.decode_segment(
+        params, cfg, table, jnp.zeros((steps,), jnp.int32), tok0, pos0,
+        caches, jnp.full((b,), steps, jnp.int32))
+    assert bool(np.all(np.asarray(ok)))
+    return {"cfg": cfg, "params": params, "table": table, "b": b,
+            "plen": plen, "steps": steps, "tok0": tok0, "pos0": pos0,
+            "caches": caches, "g": np.asarray(ys)}
+
+
+def _spec_window(st, dov, *, n_iter=1, k=3, remaining=None, quota=None,
+                 spec_on=None):
+    b = st["b"]
+    rem = (jnp.full((b,), st["steps"], jnp.int32) if remaining is None
+           else jnp.asarray(remaining, jnp.int32))
+    out = T.decode_segment_spec(
+        st["params"], st["cfg"], st["table"],
+        jnp.zeros((n_iter,), jnp.int32), st["tok0"], st["pos0"],
+        st["caches"], rem, quota=quota, spec_on=spec_on, draft_k=k,
+        draft_override=None if dov is None else jnp.asarray(dov, jnp.int32))
+    toks, m, ok, tok, pos, caches = out
+    assert bool(np.all(np.asarray(ok)))
+    return (np.asarray(toks), np.asarray(m), np.asarray(tok),
+            np.asarray(pos), caches)
+
+
+def test_spec_zero_accepted_still_delivers_greedy_token(seg_state):
+    """All-wrong drafts: m = 1 and the one delivered token is exactly the
+    greedy token — the rejected tail is −1-padded out."""
+    st, k = seg_state, 3
+    g, b = st["g"], st["b"]
+    dov = ((g[:, :k] + 1) % st["cfg"].vocab)[:, None, :]   # [B, 1, k] wrong
+    toks, m, tok, pos, _ = _spec_window(st, dov, k=k)
+    assert m[:, 0].tolist() == [1] * b
+    assert np.array_equal(toks[:, 0, 0], g[:, 0])
+    assert np.all(toks[:, 0, 1:] == -1)
+    assert np.array_equal(tok, g[:, 0])
+    assert pos.tolist() == [st["plen"] + 1] * b
+
+
+def test_spec_rollback_then_continue_matches_greedy(seg_state):
+    """After a fully-rejected window, continuing with the NATURAL drafter
+    still reproduces the greedy stream — rejected cache junk is invisible
+    to every later window (the rollback contract, end to end)."""
+    st, k = seg_state, 3
+    g, b = st["g"], st["b"]
+    dov = ((g[:, :k] + 1) % st["cfg"].vocab)[:, None, :]
+    out = T.decode_segment_spec(
+        st["params"], st["cfg"], st["table"], jnp.zeros((1,), jnp.int32),
+        st["tok0"], st["pos0"], st["caches"],
+        jnp.full((b,), st["steps"], jnp.int32), draft_k=k,
+        draft_override=jnp.asarray(dov, jnp.int32))
+    _, m1, tok1, pos1, cch1 = out[0], np.asarray(out[1]), out[3], out[4], \
+        out[5]
+    toks2, m2, _, _, _, _ = T.decode_segment_spec(
+        st["params"], st["cfg"], st["table"], jnp.zeros((3,), jnp.int32),
+        tok1, pos1, cch1, jnp.full((b,), st["steps"] - 1, jnp.int32),
+        draft_k=k)
+    toks2, m2 = np.asarray(toks2), np.asarray(m2)
+    for r in range(b):
+        seq = [int(t) for it in range(3) for t in toks2[r, it, :m2[r, it]]]
+        assert seq == st["g"][r, 1:1 + len(seq)].tolist(), f"row {r}"
+        assert len(seq) >= 3           # every window delivers >= 1
+
+
+def test_spec_all_k_accepted_full_window(seg_state):
+    """Exact drafts: the whole window lands — k accepted + the bonus
+    token, all equal to the greedy stream."""
+    st, k = seg_state, 3
+    g, b = st["g"], st["b"]
+    toks, m, tok, pos, _ = _spec_window(st, g[:, :k][:, None, :], k=k)
+    assert m[:, 0].tolist() == [k + 1] * b
+    assert np.array_equal(toks[:, 0, :], g[:, :k + 1])
+    assert np.array_equal(tok, g[:, k])
+    assert pos.tolist() == [st["plen"] + k + 1] * b
+
+
+def test_spec_accept_then_done_inside_window(seg_state):
+    """A row with remaining=2 accepts a full window but delivers only 2
+    tokens (budget clamp), then freezes: the next window delivers 0."""
+    st, k = seg_state, 3
+    g, b = st["g"], st["b"]
+    dov = np.repeat(g[:, :k][:, None, :], 2, axis=1)       # [B, 2, k]
+    toks, m, tok, pos, _ = _spec_window(st, dov, n_iter=2, k=k,
+                                        remaining=np.full((b,), 2))
+    assert m[:, 0].tolist() == [2] * b and m[:, 1].tolist() == [0] * b
+    assert np.array_equal(toks[:, 0, :2], g[:, :2])
+    assert np.all(toks[:, 0, 2:] == -1) and np.all(toks[:, 1] == -1)
+    assert np.array_equal(tok, g[:, 1])
+    assert pos.tolist() == [st["plen"] + 2] * b
+
+
+def test_spec_quota_and_opt_out_clamp_to_one(seg_state):
+    """quota=1 (fairness quantum in accepted tokens) and spec_on=False
+    (per-class opt-out) each clamp a perfect window to m = 1."""
+    st, k = seg_state, 3
+    g, b = st["g"], st["b"]
+    dov = g[:, :k][:, None, :]
+    _, m_q, _, _, _ = _spec_window(st, dov, k=k,
+                                   quota=jnp.ones((b,), jnp.int32))
+    assert m_q[:, 0].tolist() == [1] * b
+    _, m_s, _, _, _ = _spec_window(st, dov, k=k,
+                                   spec_on=jnp.zeros((b,), bool))
+    assert m_s[:, 0].tolist() == [1] * b
+
+
+# ---------------------------------------------------------------------------
+# scheduler: spec == greedy == solo, every k, both KV precisions
+# ---------------------------------------------------------------------------
+
+def _mixed_requests(cfg, seed=3):
+    rng = np.random.default_rng(seed)
+    spec = [(8, 12), (5, 9), (12, 1), (7, 17), (9, 5), (6, 12)]
+    return [Request(tokens=rng.integers(0, cfg.vocab, n).astype(np.int32),
+                    max_new=mn) for n, mn in spec]
+
+
+@pytest.mark.parametrize("kv_bits,k", [(16, 1), (16, 2), (16, 4),
+                                       (8, 1), (8, 2), (8, 4)])
+def test_spec_scheduler_token_identity(dense_parts, kv_bits, k):
+    """A speculative continuous scheduler is token-identical to each
+    request's solo greedy run — mixed prompt lengths, mixed budgets
+    (including max_new=1, which never enters a window), admission
+    backpressure, paged pool — at every draft depth and KV precision."""
+    cfg, params, eng = dense_parts
+    srv = AdaptiveServer(cfg, params, eng,
+                         ServingConfig(slots=64, max_batch=4,
+                                       kv_bits=kv_bits, block_size=8,
+                                       speculate=True, draft_k=k))
+    sched = ContinuousScheduler(srv, quantum=5)
+    reqs = _mixed_requests(cfg)
+    for r in reqs:
+        sched.submit(r)
+    out = sched.run()
+    solos = _solo_batch(dense_parts, reqs, kv_bits)
+    for rid, req in enumerate(reqs):
+        assert out[rid]["status"] is RequestStatus.COMPLETED
+        assert out[rid]["tokens"] == solos[rid], f"rid={rid} k={k}"
+        assert len(out[rid]["tokens"]) == req.max_new
+    _assert_accepted_token_billing(sched, out)
+    sched.check()
+    assert sched.allocator.used_blocks == 0
+
+
+def test_spec_invariants_single_segment_no_stepwise(dense_parts):
+    """Structural invariants under speculation: ONE pool-lifetime segment
+    executable (no retrace across rounds), ≤2 prefill waves per admission
+    round, and zero per-token ``_decode`` dispatches."""
+    cfg, params, eng = dense_parts
+    srv = AdaptiveServer(cfg, params, eng,
+                         ServingConfig(slots=64, max_batch=4, block_size=8,
+                                       speculate=True, draft_k=4))
+    sched = ContinuousScheduler(srv, quantum=8)
+    reqs = _mixed_requests(cfg, seed=5)
+    with SchedulerAudit(sched) as audit, \
+            DispatchAudit(srv, ["_decode"]) as daudit:
+        daudit.forbid("_decode")           # stepwise decode is a regression
+        for r in reqs:
+            sched.submit(r)
+        while sched.step():
+            pass
+        audit.assert_max_prefill_waves(MAX_PREFILL_WAVES_PER_ROUND)
+        audit.assert_single_segment()
+    assert srv._segment._cache_size() == 1
+
+
+# ---------------------------------------------------------------------------
+# invariant 11: accepted-token billing, ledger replay oracle
+# ---------------------------------------------------------------------------
+
+def test_spec_ledger_replay_planned_and_actuals_exact(dense_parts):
+    """The spec ledger replays exactly: the planned ``events`` stream is
+    select-exact against a fresh oracle (each round planned provisionally
+    from the post-flush ledger state, then rolled back), and the
+    ``spec_billed`` actuals stream is spend-exact — the final ledger
+    matches to float precision and every billed token was delivered."""
+    cfg, params, eng = dense_parts
+    mgr = _manager()
+    srv = AdaptiveServer(cfg, params, eng,
+                         ServingConfig(slots=64, max_batch=4, block_size=8,
+                                       speculate=True, draft_k=3),
+                         manager=mgr)
+    quantum, w = 6, 4
+    n_iter = -(-quantum // w)
+    sched = ContinuousScheduler(srv, quantum=quantum)
+    rng = np.random.default_rng(7)
+    reqs = [Request(tokens=rng.integers(0, cfg.vocab, n).astype(np.int32),
+                    max_new=mn)
+            for n, mn in [(8, 5), (5, 9), (11, 14), (7, 3)]]
+    for r in reqs:                  # all up front: ONE admission wave
+        sched.submit(r)
+    out = sched.run()
+    assert all(r["status"] is RequestStatus.COMPLETED for r in out)
+
+    events, billed = sched.events, sched.spec_billed
+    assert len(events) == 1 + len(billed)       # 1 admit + planned windows
+    assert len(billed) % n_iter == 0
+    oracle = _manager()
+    pid, n, crit = events[0]                    # the admission wave
+    assert oracle.select(accuracy_critical=crit) == pid
+    oracle.account(pid, n)
+    for r in range(len(billed) // n_iter):
+        spent0, saver0 = oracle.spent_j, oracle._saver
+        for i in range(n_iter):                 # planned: select-exact
+            pid, n, crit = events[1 + r * n_iter + i]
+            assert oracle.select(accuracy_critical=crit) == pid
+            oracle.account(pid, n)
+        oracle.spent_j, oracle._saver = spent0, saver0   # plan was
+        for i in range(n_iter):                 # provisional; bill actuals
+            pid_a, n_a = billed[r * n_iter + i]
+            assert pid_a == events[1 + r * n_iter + i][0]
+            assert n_a >= 0
+            oracle.account(pid_a, n_a)
+        # the plan is optimistic (full-w acceptance): a late window can
+        # bill more than planned, but never the round as a whole
+        assert sum(billed[r * n_iter + i][1] for i in range(n_iter)) <= \
+            sum(events[1 + r * n_iter + i][1] for i in range(n_iter))
+    assert abs(oracle.spent_j - mgr.spent_j) < 1e-9
+    # accepted-token billing: admission first-tokens + spec actuals cover
+    # exactly the delivered tokens, never drafted-rejected overshoot
+    assert events[0][1] + sum(n for _, n in billed) \
+        == sum(r.max_new for r in reqs)
+
+
+# ---------------------------------------------------------------------------
+# property-based rollback: random accept prefixes vs a never-speculated twin
+# ---------------------------------------------------------------------------
+
+def _masked_kv_equal(spec_kv, twin_kv, end_pos, scales_exact=True):
+    """Bit-compare every cache leaf at the real-token positions: logical
+    position < the row's final ``pos`` (``end_pos [B]``). One slot past
+    that is where BOTH paths park junk — the twin's frozen rows write
+    there every dead step (by design: the parked write keeps a dead row
+    off the ring), the spec path leaves its last window's rejected
+    drafts there — so it carries a valid-looking ``token_idx`` with
+    unspecified payload and is excluded, like the never-written tail.
+
+    The int-KV running amax scales are per-row, not per-position: a twin
+    that dead-steps folds its parked junk writes into the running max,
+    so a freeze trial can only assert the one-sided rollback claim —
+    spec's COMMITTED scale never exceeds the twin's (rejected drafts
+    never reach it). ``scales_exact=True`` (a twin with zero dead steps)
+    upgrades that to bitwise equality."""
+    ti = np.asarray(twin_kv.token_idx)                      # [L, B, S]
+    valid = (ti >= 0) & (ti < np.asarray(end_pos)[None, :, None])
+    for name in ("k", "v", "token_idx", "k_scale", "v_scale"):
+        a_s = np.asarray(getattr(spec_kv, name))
+        a_t = np.asarray(getattr(twin_kv, name))
+        assert a_s.shape == a_t.shape, name
+        if a_s.ndim >= 3 and a_s.shape[:3] == valid.shape:
+            m = valid.reshape(valid.shape + (1,) * (a_s.ndim - 3))
+            assert np.array_equal(np.where(m, a_s, 0),
+                                  np.where(m, a_t, 0)), name
+        elif name in ("k_scale", "v_scale") and not scales_exact:
+            assert np.all(a_s <= a_t), name
+        else:
+            assert np.array_equal(a_s, a_t), name
+
+
+@pytest.mark.parametrize("kv_bits", [16, 8])
+def test_property_rollback_bitmatch_never_speculated(dense_parts, kv_bits):
+    """Random draft proposals with random accept prefixes: after any
+    rollback pattern, delivered tokens, per-window counts, carry (tok,
+    pos) and every valid KV position — payload, token_idx, and int-KV
+    scales — bit-match a row that never speculated."""
+    cfg, params, _ = dense_parts
+    names = T.quant_layer_names(cfg)
+    table = jnp.asarray(profile_table([Profile.float32(names)], names))
+    b, plen, steps, k, n_iter = 2, 6, 16, 3, 3
+    rng0 = np.random.default_rng(31)
+    prompts = rng0.integers(0, cfg.vocab, (b, plen)).astype(np.int32)
+    logits, caches = T.prefill(params, cfg, table[0],
+                               {"tokens": jnp.asarray(prompts)}, slots=32,
+                               kv_bits=kv_bits)
+    tok0 = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    pos0 = jnp.full((b,), plen, jnp.int32)
+
+    twin_fn = jax.jit(lambda rem: T.decode_segment(
+        params, cfg, table, jnp.zeros((steps,), jnp.int32), tok0, pos0,
+        caches, rem))
+    spec_fn = jax.jit(lambda dov, rem: T.decode_segment_spec(
+        params, cfg, table, jnp.zeros((n_iter,), jnp.int32), tok0, pos0,
+        caches, rem, draft_k=k, draft_override=dov))
+
+    ys, ok, _, _, _ = twin_fn(jnp.full((b,), steps, jnp.int32))
+    assert bool(np.all(np.asarray(ok)))
+    g = np.asarray(ys)                        # greedy stream after tok0
+
+    for trial in range(6):
+        rng = np.random.default_rng(100 + trial)
+        rem_r = rng.integers(3, 10, b)
+        dov = np.full((b, n_iter, k), -1, np.int32)
+        exp = [[] for _ in range(b)]
+        exp_m = np.zeros((b, n_iter), np.int32)
+        p = np.zeros(b, int)                  # delivered so far per row
+        remaining = rem_r.copy()
+        for it in range(n_iter):
+            for r in range(b):
+                if remaining[r] <= 0:
+                    continue
+                a = int(rng.integers(0, k + 1))    # forced accept prefix
+                for j in range(k):
+                    true = int(g[r, p[r] + j])
+                    dov[r, it, j] = true if j < a \
+                        else (true + 1) % cfg.vocab
+                m = min(a + 1, int(remaining[r]))
+                exp[r].extend(int(t) for t in g[r, p[r]:p[r] + m])
+                exp_m[r, it] = m
+                p[r] += m
+                remaining[r] -= m
+        toks, m, ok, tok, pos, cch = spec_fn(
+            jnp.asarray(dov), jnp.asarray(rem_r, jnp.int32))
+        toks, m = np.asarray(toks), np.asarray(m)
+        assert bool(np.all(np.asarray(ok)))
+        assert np.array_equal(m, exp_m), f"trial {trial}"
+        for r in range(b):
+            got = [int(t) for it in range(n_iter)
+                   for t in toks[r, it, :m[r, it]]]
+            assert got == exp[r], f"trial {trial} row {r}"
+            assert np.all(toks[r][np.arange(k + 1)[None] >= m[r][:, None]]
+                          == -1)
+        # carry: spec keeps the last DELIVERED token even after a row
+        # freezes (the twin's carry feeds 0 for frozen rows, so the
+        # greedy stream itself is the tok oracle); pos freezes in both
+        assert np.asarray(tok).tolist() == \
+            [int(g[r, p[r] - 1]) for r in range(b)]
+        _, _, _, t_pos, t_cch = twin_fn(jnp.asarray(p, jnp.int32))
+        assert np.array_equal(np.asarray(pos), np.asarray(t_pos))
+        _masked_kv_equal(cch["kv"], t_cch["kv"], plen + p,
+                         scales_exact=False)
+
+    # exact-fill trials: random window compositions that deliver EXACTLY
+    # T tokens per row, so the twin (T steps, remaining=T) takes zero
+    # dead steps — no parked junk anywhere — and the cache comparison
+    # upgrades to full bitwise equality INCLUDING the int-KV committed
+    # scales: rejected drafts provably never reached the running amax
+    nf = 8
+    twin_exact = jax.jit(lambda: T.decode_segment(
+        params, cfg, table, jnp.zeros((nf,), jnp.int32), tok0, pos0,
+        caches, jnp.full((b,), nf, jnp.int32)))
+    _, _, e_tok, e_pos, e_cch = twin_exact()
+    for trial in range(4):
+        rng = np.random.default_rng(200 + trial)
+        dov = np.full((b, n_iter, k), -1, np.int32)
+        exp_m = np.zeros((b, n_iter), np.int32)
+        for r in range(b):
+            while True:      # composition of nf into n_iter parts of [1, W]
+                m1, m2 = rng.integers(1, k + 2, 2)
+                if 1 <= nf - m1 - m2 <= k + 1:
+                    break
+            parts, q = [int(m1), int(m2), nf - int(m1) - int(m2)], 0
+            for it, mi in enumerate(parts):
+                for j in range(k):
+                    true = int(g[r, q + j])
+                    dov[r, it, j] = true if j < mi - 1 \
+                        else (true + 1) % cfg.vocab
+                exp_m[r, it] = mi
+                q += mi
+        toks, m, ok, tok, pos, cch = spec_fn(
+            jnp.asarray(dov), jnp.full((b,), nf, jnp.int32))
+        assert bool(np.all(np.asarray(ok)))
+        assert np.array_equal(np.asarray(m), exp_m), f"exact trial {trial}"
+        for r in range(b):
+            got = [int(t) for it in range(n_iter)
+                   for t in np.asarray(toks)[r, it, :exp_m[r, it]]]
+            assert got == g[r, :nf].tolist(), f"exact trial {trial} row {r}"
+        assert np.array_equal(np.asarray(tok), np.asarray(e_tok))
+        assert np.array_equal(np.asarray(pos), np.asarray(e_pos))
+        _masked_kv_equal(cch["kv"], e_cch["kv"], plen + np.full(b, nf),
+                         scales_exact=True)
+
+
+def test_property_spec_paranoid_pool_random_workloads(dense_parts):
+    """Seeded random workloads through a paranoid spec scheduler: the
+    BlockAllocator refcount audit runs after every step, completions are
+    full-length, billing covers exactly the delivered tokens, and the
+    pool drains to zero."""
+    cfg, params, eng = dense_parts
+    srv = AdaptiveServer(cfg, params, eng,
+                         ServingConfig(slots=64, max_batch=4, block_size=8,
+                                       speculate=True, draft_k=2))
+    for seed in (0, 1):
+        rng = np.random.default_rng(50 + seed)
+        sched = ContinuousScheduler(srv, quantum=5, paranoid=True)
+        reqs = [Request(tokens=rng.integers(0, cfg.vocab, int(n))
+                        .astype(np.int32), max_new=int(mn))
+                for n, mn in zip(rng.integers(4, 13, 7),
+                                 rng.integers(1, 15, 7))]
+        for r in reqs:
+            sched.submit(r)
+        out = sched.run()
+        for rid, req in enumerate(reqs):
+            assert out[rid]["status"] is RequestStatus.COMPLETED
+            assert len(out[rid]["tokens"]) == req.max_new
+        _assert_accepted_token_billing(sched, out)
+        sched.check()
+        assert sched.allocator.used_blocks == 0
+
+
+# ---------------------------------------------------------------------------
+# cross-feature matrix: speculation × {preemption, cancel, faults, CoW}
+# ---------------------------------------------------------------------------
+
+def test_spec_preempt_resume_token_identity(dense_parts):
+    """Speculation × preemption: a saver row evicted for a critical
+    arrival resumes and still emits its exact solo stream; statuses
+    terminal, billed ≡ delivered, zero leaked blocks."""
+    cfg, params, eng = dense_parts
+    scfg = ServingConfig(slots=64, max_batch=2, block_size=8,
+                         priority_classes=2, preemption=True,
+                         speculate=True, draft_k=2)
+    srv = AdaptiveServer(cfg, params, eng, scfg)
+    sched = ContinuousScheduler(srv, quantum=4)
+    rng = np.random.default_rng(17)
+    sys_p = rng.integers(0, cfg.vocab, 16).astype(np.int32)
+    reqs = [Request(tokens=np.concatenate(
+                [sys_p, rng.integers(0, cfg.vocab, 4).astype(np.int32)]),
+                max_new=18, priority=1),
+            Request(tokens=np.concatenate(
+                [sys_p, rng.integers(0, cfg.vocab, 7).astype(np.int32)]),
+                max_new=16, priority=1)]
+    crit = Request(tokens=rng.integers(0, cfg.vocab, 7).astype(np.int32),
+                   max_new=4, priority=0)
+    sched.submit(reqs[0])
+    sched.step()
+    sched.submit(reqs[1])
+    sched.step()
+    sched.step()
+    sched.submit(crit)               # pool full → policy evicts a saver
+    reqs.append(crit)
+    out = sched.run()
+    assert sched.preemptions >= 1 and sched.resumes == sched.preemptions
+    for rid, req in enumerate(reqs):
+        assert out[rid]["status"] is RequestStatus.COMPLETED
+        assert out[rid]["tokens"] == _solo_tokens(dense_parts, req), \
+            f"rid={rid}"
+    _assert_accepted_token_billing(sched, out)
+    sched.check()
+    assert sched.allocator.used_blocks == 0
+
+
+def test_spec_cancel_mid_draft_window(dense_parts):
+    """Speculation × cancellation: a row cancelled mid-stream keeps its
+    delivered prefix (a prefix of the solo stream), a queued cancel
+    delivers nothing, the survivor completes identically — and the
+    ledger billed exactly what was delivered."""
+    cfg, params, eng = dense_parts
+    srv = AdaptiveServer(cfg, params, eng,
+                         ServingConfig(slots=64, max_batch=2, block_size=8,
+                                       speculate=True, draft_k=3))
+    sched = ContinuousScheduler(srv, quantum=8, paranoid=True)
+    rng = np.random.default_rng(23)
+    reqs = [Request(tokens=rng.integers(0, cfg.vocab, n).astype(np.int32),
+                    max_new=24) for n in (9, 7, 8)]
+    for r in reqs:
+        sched.submit(r)
+    sched.step()                     # rows 0/1 live, mid-generation
+    assert sched.cancel(0) and sched.cancel(2)
+    out = sched.run()
+    assert out[0]["status"] is RequestStatus.CANCELLED
+    assert out[2]["status"] is RequestStatus.CANCELLED
+    assert out[1]["status"] is RequestStatus.COMPLETED
+    solo0 = _solo_tokens(dense_parts, reqs[0])
+    assert 0 < len(out[0]["tokens"]) < 24
+    assert out[0]["tokens"] == solo0[:len(out[0]["tokens"])]
+    assert out[2]["tokens"] == []
+    assert out[1]["tokens"] == _solo_tokens(dense_parts, reqs[1])
+    _assert_accepted_token_billing(sched, out)
+    sched.check()
+    assert sched.allocator.used_blocks == 0
+
+
+def test_spec_nan_verify_quarantine_recovers(dense_parts):
+    """Speculation × faults: NaN anywhere in a verify window (even at
+    would-be-rejected positions) routes the row through quarantine; the
+    escalated retry restarts from the prompt and the recovered output is
+    token-identical to a clean accuracy-critical run. Zero leaks, the
+    neighbour rides through untouched."""
+    cfg, params, eng = dense_parts
+    srv = AdaptiveServer(cfg, params, eng,
+                         ServingConfig(slots=64, max_batch=2, block_size=8,
+                                       speculate=True, draft_k=2),
+                         manager=_manager())
+    faults = FaultSchedule(nan_at={0: (0,)})
+    sched = ContinuousScheduler(srv, quantum=4, faults=faults,
+                                retry_budget=2, paranoid=True)
+    rng = np.random.default_rng(29)
+    p0 = rng.integers(0, cfg.vocab, 11).astype(np.int32)
+    p1 = rng.integers(0, cfg.vocab, 9).astype(np.int32)
+    rid = sched.submit(Request(tokens=p0, max_new=8))
+    ok_rid = sched.submit(Request(tokens=p1, max_new=6))
+    out = sched.run()
+    assert out[rid]["status"] is RequestStatus.COMPLETED
+    assert out[rid]["retries"] == 1 and len(out[rid]["tokens"]) == 8
+    assert sched.faults_detected >= 1 and sched.recovered == 1
+    assert faults.injected_nan == 1
+    assert out[ok_rid]["status"] is RequestStatus.COMPLETED
+    assert len(out[ok_rid]["tokens"]) == 6
+    sched.check()
+    assert sched.allocator.used_blocks == 0
+    # clean accuracy-critical twin on the same server (same executables)
+    clean = ContinuousScheduler(srv, quantum=4)
+    crid = clean.submit(Request(tokens=p0, max_new=8,
+                                accuracy_critical=True))
+    assert clean.run()[crid]["tokens"] == out[rid]["tokens"]
+    assert srv._segment._cache_size() == 1
+
+
+def test_spec_shared_prefix_cow_rows(dense_parts):
+    """Speculation × CoW prefix sharing: the second request maps the
+    registered prefix blocks copy-on-write, both rows speculate over the
+    shared pool, and both still emit exact solo streams with zero leaks
+    and exact billing."""
+    cfg, params, eng = dense_parts
+    srv = AdaptiveServer(cfg, params, eng,
+                         ServingConfig(slots=64, max_batch=2, block_size=8,
+                                       speculate=True, draft_k=2))
+    sched = ContinuousScheduler(srv, quantum=5, paranoid=True)
+    rng = np.random.default_rng(37)
+    sys_p = rng.integers(0, cfg.vocab, 16).astype(np.int32)
+    reqs = [Request(tokens=np.concatenate(
+                [sys_p, rng.integers(0, cfg.vocab, n).astype(np.int32)]),
+                max_new=mn) for n, mn in [(5, 12), (8, 10)]]
+    sched.submit(reqs[0])
+    sched.step()                     # registers the shared prefix
+    sched.submit(reqs[1])            # maps it CoW
+    out = sched.run()
+    assert sched.registry is not None and sched.registry.hits >= 1
+    for rid, req in enumerate(reqs):
+        assert out[rid]["status"] is RequestStatus.COMPLETED
+        assert out[rid]["tokens"] == _solo_tokens(dense_parts, req), \
+            f"rid={rid}"
+    _assert_accepted_token_billing(sched, out)
+    sched.check()
+    assert sched.allocator.used_blocks == 0
