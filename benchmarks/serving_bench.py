@@ -37,6 +37,13 @@ Emits ``name,us_per_call,derived`` rows (harness contract). Two experiments:
   asserts the block pool drains to zero with the paranoid per-step audit
   clean and that a recovered request's tokens are identical to a clean
   accuracy-critical run.
+* **crash restart** (``serve_crash_*``): the durability gate — the same
+  closed-loop workload served uninterrupted and through a mid-run kill +
+  :func:`repro.serving.durability.recover` cycle (write-ahead journal +
+  periodic live-state checkpoints). Reports recovery latency and goodput
+  through the restart vs the uninterrupted capacity; asserts every
+  delivered stream is token-identical to the twin and the pool drains
+  clean after the post-restart run.
 
 CPU interpret-path numbers: what they measure is the *runtime overhead around
 the kernels* (dispatch count, host syncs, cache copies, dead-step density),
@@ -988,6 +995,184 @@ def bench_chaos(cfg, params, eng, *, n_req: int = 24, prompt_len: int = 10,
 
 
 # ---------------------------------------------------------------------------
+# crash-consistent serving: goodput through a kill + restart (BENCH_9)
+# ---------------------------------------------------------------------------
+
+def bench_crash(cfg, params, eng, *, n_req: int = 10, prompt_len: int = 10,
+                max_new: int = 8, max_batch: int = 4, quantum: int = 4,
+                checkpoint_every: int = 2, seed: int = 0,
+                smoke_asserts: bool = False) -> tuple[list[tuple], dict]:
+    """Crash-consistent serving: kill the scheduler at a mid-run flush
+    boundary and restart (docs/serving.md §Durability, invariant 12).
+
+    One closed-loop workload served twice over the same server: an
+    uninterrupted twin (capacity reference), then a journaled run
+    (``Durability``: fsync'd write-ahead records + a live-state
+    checkpoint every ``checkpoint_every`` rounds) that is abandoned
+    mid-run — process death simulated by dropping the scheduler, which
+    owns all pool state — and recovered into a fresh scheduler with
+    :func:`repro.serving.durability.recover`. Reports **recovery
+    latency** (restore + journal replay + chunk re-materialization,
+    which is the restart's whole service gap: live rows re-admit through
+    the normal resume wave on the first post-restart round) and
+    **goodput through restart** (every delivered token over pre-crash +
+    recovery + post-crash wall time) against the uninterrupted tok/s.
+
+    ``smoke_asserts`` requires the recovered run to be token-identical
+    to the twin on every request, something to have actually survived
+    (resumed rows / replayed records), zero leaked blocks and a clean
+    allocator audit after the post-restart drain.
+    """
+    import shutil
+    import tempfile
+
+    from repro.serving.durability import Durability, recover
+
+    bs = 16
+    # stagger generation lengths by whole quanta: uniform lengths make
+    # every admission wave finish in lockstep, so flush-boundary
+    # checkpoints land exactly between waves with ZERO live rows and the
+    # crash exercises only the trivial queued-requests path — mixed
+    # lengths keep the pool continuously occupied mid-run, so the
+    # pre-crash checkpoint always holds live snapshots to resume
+    mn_max = max_new + 2 * quantum
+    blocks_row = -(-(prompt_len + mn_max) // bs)
+    scfg = ServingConfig(slots=prompt_len + mn_max + bs,
+                         max_batch=max_batch, block_size=bs,
+                         pool_blocks=(max_batch + 1) * blocks_row,
+                         paged_kv=True, prefix_cache=False,
+                         priority_classes=2)
+    srv = AdaptiveServer(cfg, params, eng, scfg)
+    rng = np.random.default_rng(seed)
+    reqs = [Request(tokens=rng.integers(0, cfg.vocab, prompt_len)
+                    .astype(np.int32),
+                    max_new=max_new + quantum * (i % 3), priority=i % 2)
+            for i in range(n_req)]
+    total_tokens = sum(r.max_new for r in reqs)
+
+    # warm every executable either path dispatches: cold waves at each
+    # pow2 row count, then one untimed mini crash/recover cycle (restore
+    # executable + checkpoint capture/save + journal replay)
+    wrng = np.random.default_rng(2**31 - 13)
+    w = 1
+    while w <= max_batch:
+        warm = ContinuousScheduler(srv, quantum=quantum, record_events=False)
+        for _ in range(w):
+            warm.submit(Request(tokens=wrng.integers(0, cfg.vocab, prompt_len)
+                                .astype(np.int32), max_new=2))
+        warm.run()
+        w *= 2
+    wdir = tempfile.mkdtemp(prefix="bench_crash_warm_")
+    try:
+        warm = ContinuousScheduler(srv, quantum=quantum, record_events=False)
+        Durability(warm, wdir, checkpoint_every=1)
+        for _ in range(2):
+            warm.submit(Request(tokens=wrng.integers(0, cfg.vocab, prompt_len)
+                                .astype(np.int32), max_new=4))
+        warm.step()
+        wrec = recover(srv, wdir, quantum=quantum, record_events=False,
+                       paranoid=PARANOID)
+        wrec.run()
+        wrec.check()
+    finally:
+        shutil.rmtree(wdir, ignore_errors=True)
+
+    def clean_run():
+        sched = ContinuousScheduler(srv, quantum=quantum,
+                                    record_events=False)
+        for r in reqs:
+            sched.submit(r)
+        t0 = time.perf_counter()
+        sched.run()
+        return sched, time.perf_counter() - t0
+
+    tw, best = clean_run()
+    tw2, wall2 = clean_run()
+    best = min(best, wall2)
+    twin = [tw.results[i] for i in range(n_req)]
+    clean_tok_s = total_tokens / best
+    crash_round = max(1, tw._round // 2)
+    if checkpoint_every > 1 and crash_round % checkpoint_every == 0:
+        # don't crash exactly on a checkpoint cut: land the kill between
+        # cuts so recovery has live snapshots and/or a journal suffix to
+        # replay (the interesting path, and what the smoke asserts check)
+        crash_round += 1
+
+    jdir = tempfile.mkdtemp(prefix="bench_crash_")
+    try:
+        s1 = ContinuousScheduler(srv, quantum=quantum)
+        dur = Durability(s1, jdir, checkpoint_every=checkpoint_every)
+        for r in reqs:
+            s1.submit(r)
+        t0 = time.perf_counter()
+        for _ in range(crash_round):
+            s1.step()
+        t_pre = time.perf_counter() - t0
+        ckpts = dur.checkpoints_written
+        journal_bytes = os.path.getsize(os.path.join(jdir, "journal.jsonl"))
+        # CRASH: the abandoned scheduler owns every donated buffer and
+        # every host-side table — dropping it IS process death as far as
+        # serving state goes; only the journal_dir survives
+        t0 = time.perf_counter()
+        s2 = recover(srv, jdir, checkpoint_every=checkpoint_every,
+                     quantum=quantum, paranoid=PARANOID)
+        t_rec = time.perf_counter() - t0
+        info_rec = s2.recover_info
+        t0 = time.perf_counter()
+        while s2.step():
+            pass
+        t_post = time.perf_counter() - t0
+        s2.check()
+        stats = s2.paged_stats()
+    finally:
+        shutil.rmtree(jdir, ignore_errors=True)
+
+    identical = all(
+        [int(x) for x in s2.results[i]["tokens"]]
+        == [int(x) for x in twin[i]["tokens"]] for i in range(n_req))
+    goodput = total_tokens / (t_pre + t_rec + t_post)
+    retention = goodput / clean_tok_s
+
+    if smoke_asserts:
+        assert identical, "post-restart streams diverge from the twin"
+        assert all(s2.results[i]["status"].value == "completed"
+                   for i in range(n_req))
+        assert info_rec["resumed_rows"] + info_rec["chunk_rows"] >= 1 \
+            or info_rec["replayed"] >= 1, info_rec
+        assert not info_rec["refilled"], \
+            f"unexpected corruption fallback: {info_rec['refilled']}"
+        assert ckpts >= 1, "no checkpoint committed before the crash"
+        assert stats["used_blocks"] == 0, \
+            f"leaked {stats['used_blocks']} pool blocks after restart"
+
+    tag = f"b{max_batch}_n{n_req}x{max_new}"
+    rows = [(f"serve_crash_{tag}", t_rec * 1e6,
+             f"goodput_through_restart_tok_s={goodput:.0f};"
+             f"uninterrupted_tok_s={clean_tok_s:.0f};"
+             f"goodput_retention={retention:.2f};"
+             f"recovery_ms={t_rec * 1e3:.1f};"
+             f"resumed_rows={info_rec['resumed_rows']};"
+             f"replayed={info_rec['replayed']};"
+             f"identical={identical}")]
+    info = {"goodput_through_restart_tok_s": goodput,
+            "uninterrupted_tok_s": clean_tok_s,
+            "goodput_retention": retention,
+            "recovery_ms": t_rec * 1e3,
+            "phase_wall_s": {"pre_crash": t_pre, "recovery": t_rec,
+                             "post_crash": t_post},
+            "crash_round": crash_round,
+            "checkpoints_before_crash": ckpts,
+            "journal_bytes_at_crash": journal_bytes,
+            "recover_info": {k: v for k, v in info_rec.items()
+                             if k != "corrupt_keys"},
+            "token_identical": identical,
+            "pool": {"used_blocks": stats["used_blocks"],
+                     "peak_used_blocks": stats["peak_used_blocks"],
+                     "allocator_clean": True}}
+    return rows, info
+
+
+# ---------------------------------------------------------------------------
 # speculative decoding: predictable-continuation Poisson trace (BENCH_8)
 # ---------------------------------------------------------------------------
 
@@ -1259,6 +1444,7 @@ def main(argv=None) -> None:
     PARANOID = bool(getattr(args, "paranoid", False))
     cfg, params, eng = _build()
     paged_info = chunk_info = prio_info = chaos_info = spec_info = None
+    crash_info = None
     if args.smoke:
         rows = bench_poisson(cfg, params, eng, n_req=8, util=args.util,
                              max_batch=4, quantum=4, seed=args.seed,
@@ -1304,6 +1490,17 @@ def main(argv=None) -> None:
             smoke_asserts=True)
         rows += chrows
         assert chaos_info["recovered"] >= 1, chaos_info
+        # crash-restart point: journal + checkpoint, kill at a mid-run
+        # flush boundary, recover into a fresh scheduler. Asserts
+        # token-identity of every stream vs the uninterrupted twin, a
+        # committed pre-crash checkpoint, zero leaked blocks; the tuned
+        # goodput-through-restart + recovery-latency numbers run in the
+        # full bench -> BENCH_9.json
+        krows, crash_info = bench_crash(
+            cfg, params, eng, n_req=8, max_new=12, max_batch=4, quantum=4,
+            checkpoint_every=2, seed=args.seed, smoke_asserts=True)
+        rows += krows
+        assert crash_info["token_identical"], crash_info
         # speculative point: draft/verify windows on a selected
         # predictable-continuation trace — asserts token identity against
         # both the greedy scheduler and the solo-generate oracle, zero
@@ -1344,6 +1541,13 @@ def main(argv=None) -> None:
             util=min(args.util, 0.8), p_nan=0.05, seed=args.seed,
             smoke_asserts=True)
         rows += chrows
+        # crash-restart at scale: goodput through the kill+recover cycle
+        # and recovery latency land in the JSON for BENCH_9
+        krows, crash_info = bench_crash(
+            cfg, params, eng, n_req=max(8, args.n_req // 3), max_new=12,
+            max_batch=4, quantum=4, checkpoint_every=2, seed=args.seed,
+            smoke_asserts=True)
+        rows += krows
         # speculative decoding at scale: the >=1.5x acceptance number,
         # measured acceptance, and open-loop latency land in the JSON for
         # BENCH_8
@@ -1370,6 +1574,8 @@ def main(argv=None) -> None:
             payload["priority_preemption"] = prio_info
         if chaos_info is not None:
             payload["chaos"] = chaos_info
+        if crash_info is not None:
+            payload["crash"] = crash_info
         if spec_info is not None:
             payload["speculative"] = spec_info
         with open(args.json, "w") as f:

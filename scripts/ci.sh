@@ -9,11 +9,15 @@
 # a chaos point — seeded NaN-logit faults + an allocator drought + a flush
 # stall + client cancellations — that asserts zero leaked pool blocks,
 # >=1 quarantine + precision-fallback recovery, and token-identity of the
-# recovered request vs a clean accuracy-critical run, and a speculative
-# decoding point — draft/verify windows on a predictable-continuation
-# trace — that asserts token identity against both the greedy scheduler
-# and the solo-generate oracle, zero leaked blocks, and >=1.2x closed-loop
-# decode throughput), then the
+# recovered request vs a clean accuracy-critical run, a crash-restart
+# point — write-ahead journal + live-state checkpoints, a hard kill at a
+# mid-run boundary, recovery into a fresh scheduler — that asserts every
+# post-restart stream is token-identical to the uninterrupted twin, a
+# committed pre-crash checkpoint, and zero leaked pool blocks, and a
+# speculative decoding point — draft/verify windows on a
+# predictable-continuation trace — that asserts token identity against
+# both the greedy scheduler and the solo-generate oracle, zero leaked
+# blocks, and >=1.2x closed-loop decode throughput), then the
 # paged-attention kernel gate (token identity vs the gather path +
 # strictly fewer bytes per decode step), and finally the docs gate
 # smoke-executes every README/docs code snippet and checks markdown links.

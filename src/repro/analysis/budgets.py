@@ -20,7 +20,8 @@ check_static.py`` + :class:`repro.analysis.tracker.SchedulerAudit`):
   pool lifetime.
 - ``max-prefill-waves`` — at most :data:`MAX_PREFILL_WAVES_PER_ROUND`
   admission-wave dispatches per ``admit()`` round (cold / shared /
-  resume).
+  resume / chunk-continuation; imminent continuations pre-commit their
+  share of the budget before new kinds classify).
 - ``no-retrace`` — zero new cache entries after warmup.
 - ``no-per-token-dispatch`` — the stepwise ``_decode`` executable is
   never dispatched by the fused serving path.

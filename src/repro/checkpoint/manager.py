@@ -4,11 +4,21 @@ Layout per step::
 
     <dir>/step_000123/
         arrays.npz        flattened pytree leaves ("/"-joined key paths)
-        meta.json         step, leaf treedef manifest, user metadata
+        meta.json         step, per-leaf manifest (shape/dtype/crc32), metadata
     <dir>/step_000123.DONE  (commit marker — written last, rename-atomic)
 
 Restart picks the newest *committed* step, so a host dying mid-write can never
 corrupt restore (the torn directory is ignored and garbage-collected).
+``meta.json`` carries a per-leaf **manifest** — name, shape, dtype and crc32
+of every stored array — and :func:`restore` validates the payload against it
+before unflattening, raising :class:`CheckpointIntegrityError` (a named
+``ValueError``) on any mismatch instead of a cryptic downstream reshape
+failure. Bit-rot on one leaf is therefore detected *and localizable*:
+``restore(..., strict=False)`` drops the bad leaves and reports them in
+``meta["corrupt_keys"]`` so callers with per-leaf fallback paths (the serving
+durability layer re-prefills a corrupted row from its prompt) can salvage the
+rest of the checkpoint.
+
 Elastic rescale: arrays are saved host-complete (device_get), so restoring
 onto a *different* mesh is just ``jax.device_put(tree, new_shardings)`` —
 exercised by ``tests/test_fault_tolerance.py``.
@@ -22,14 +32,27 @@ from __future__ import annotations
 import json
 import os
 import shutil
+import zlib
 from typing import Any, Optional
 
 import jax
 import numpy as np
 
-__all__ = ["save", "restore", "latest_step", "CheckpointManager"]
+__all__ = ["save", "restore", "latest_step", "CheckpointManager",
+           "CheckpointIntegrityError"]
 
 _DONE = ".DONE"
+
+
+class CheckpointIntegrityError(ValueError):
+    """A stored leaf contradicts the checkpoint's own manifest.
+
+    Raised by :func:`restore` when an array is missing, has a different
+    shape/dtype than ``meta.json`` recorded at save time, or fails its
+    crc32 — i.e. the checkpoint directory was corrupted *after* commit
+    (bit-rot, truncated file, manual tampering). Distinct from the
+    structural errors a *healthy* checkpoint can raise against a
+    mismatched ``tree_like`` (``KeyError`` / plain ``ValueError``)."""
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:
@@ -38,6 +61,10 @@ def _flatten(tree) -> dict[str, np.ndarray]:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p)))) for p in path)
         flat[key] = np.asarray(jax.device_get(leaf))
     return flat
+
+
+def _crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
 
 
 def save(directory: str, step: int, tree: Any, metadata: Optional[dict] = None) -> str:
@@ -51,8 +78,11 @@ def save(directory: str, step: int, tree: Any, metadata: Optional[dict] = None) 
     os.makedirs(tmp)
     flat = _flatten(tree)
     np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    manifest = {k: {"shape": list(v.shape), "dtype": str(v.dtype),
+                    "crc32": _crc(v)} for k, v in flat.items()}
     with open(os.path.join(tmp, "meta.json"), "w") as f:
         json.dump({"step": step, "keys": sorted(flat),
+                   "manifest": manifest,
                    "metadata": metadata or {},
                    "process_count": jax.process_count()}, f)
     if os.path.exists(final):
@@ -64,32 +94,125 @@ def save(directory: str, step: int, tree: Any, metadata: Optional[dict] = None) 
     return final
 
 
-def latest_step(directory: str) -> Optional[int]:
+def _committed_steps(directory: str) -> list[int]:
+    """Committed steps, oldest→newest. A marker whose directory has already
+    vanished (a concurrent ``_gc`` between listdir and our read) does not
+    count — the marker is removed *first* on collection, so marker+dir
+    present together means the payload is complete."""
     if not os.path.isdir(directory):
-        return None
-    steps = [int(n[len("step_"):-len(_DONE)])
-             for n in os.listdir(directory)
-             if n.startswith("step_") and n.endswith(_DONE)]
-    return max(steps) if steps else None
+        return []
+    steps = []
+    for n in os.listdir(directory):
+        if n.startswith("step_") and n.endswith(_DONE):
+            if os.path.isdir(os.path.join(directory, n[:-len(_DONE)])):
+                steps.append(int(n[len("step_"):-len(_DONE)]))
+    return sorted(steps)
 
 
-def restore(directory: str, tree_like: Any, step: Optional[int] = None,
-            shardings: Any = None) -> tuple[Any, dict]:
-    """Restore into the structure of ``tree_like``.
+def latest_step(directory: str) -> Optional[int]:
+    steps = _committed_steps(directory)
+    return steps[-1] if steps else None
 
-    ``shardings`` (optional pytree of NamedSharding / device) re-places every
-    leaf — this is the elastic-rescale path: a checkpoint from a 4-device mesh
-    restores cleanly onto 8 devices (or 1).
-    """
-    if step is None:
-        step = latest_step(directory)
-        if step is None:
-            raise FileNotFoundError(f"no committed checkpoint in {directory}")
-    path = os.path.join(directory, f"step_{step:09d}")
+
+def _load_step(path: str) -> tuple[dict, dict]:
     with np.load(os.path.join(path, "arrays.npz")) as z:
         flat = {k: z[k] for k in z.files}
     with open(os.path.join(path, "meta.json")) as f:
         meta = json.load(f)
+    return flat, meta
+
+
+def _validate(flat: dict, meta: dict, strict: bool) -> list[str]:
+    """Check every leaf against the manifest; returns the corrupt keys.
+
+    ``strict`` raises :class:`CheckpointIntegrityError` on the first
+    problem; non-strict collects the bad keys (and removes them from
+    ``flat``) so the caller can salvage the healthy remainder."""
+    manifest = meta.get("manifest")
+    if manifest is None:             # pre-manifest checkpoint: nothing to check
+        return []
+    bad: list[str] = []
+
+    def flag(key, why):
+        if strict:
+            raise CheckpointIntegrityError(f"checkpoint leaf {key!r}: {why}")
+        bad.append(key)
+
+    for key, spec in manifest.items():
+        if key not in flat:
+            flag(key, "missing from arrays.npz")
+            continue
+        arr = flat[key]
+        if list(arr.shape) != list(spec["shape"]):
+            flag(key, f"shape {list(arr.shape)} != manifest {spec['shape']}")
+        elif str(arr.dtype) != spec["dtype"]:
+            flag(key, f"dtype {arr.dtype} != manifest {spec['dtype']}")
+        elif _crc(arr) != spec["crc32"]:
+            flag(key, "crc32 mismatch (bit-rot or truncated write)")
+    for key in sorted(set(flat) - set(manifest)):
+        flag(key, "not in manifest")
+    for key in bad:
+        flat.pop(key, None)
+    return bad
+
+
+def _unflatten_keys(flat: dict) -> dict:
+    """Rebuild a nested dict from the "/"-joined key paths (the
+    ``tree_like=None`` restore mode — durability checkpoints have
+    data-dependent structure, so there is no static template to match)."""
+    tree: dict = {}
+    for key, arr in flat.items():
+        parts = key.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = arr
+    return tree
+
+
+def restore(directory: str, tree_like: Any = None, step: Optional[int] = None,
+            shardings: Any = None, strict: bool = True) -> tuple[Any, dict]:
+    """Restore a committed checkpoint; returns ``(tree, meta)``.
+
+    With ``tree_like`` the payload is validated against that structure and
+    unflattened into it (missing leaf → ``KeyError``, shape mismatch →
+    ``ValueError`` — template errors, not corruption). With
+    ``tree_like=None`` the nested dict is rebuilt from the stored key paths
+    (leaves stay host ``np.ndarray``\\ s). Either way the per-leaf manifest
+    is verified first: a corrupted leaf raises
+    :class:`CheckpointIntegrityError` (``strict=True``) or is dropped and
+    listed in ``meta["corrupt_keys"]`` (``strict=False``).
+
+    ``shardings`` (optional pytree of NamedSharding / device) re-places every
+    leaf — this is the elastic-rescale path: a checkpoint from a 4-device mesh
+    restores cleanly onto 8 devices (or 1).
+
+    When ``step`` is ``None`` the newest committed step is used; if it
+    vanishes between selection and read (a concurrent retention ``_gc``),
+    restore falls back to the next older committed step.
+    """
+    if step is not None:
+        flat, meta = _load_step(os.path.join(directory, f"step_{step:09d}"))
+    else:
+        steps = _committed_steps(directory)
+        flat = meta = None
+        for s in reversed(steps):
+            try:
+                flat, meta = _load_step(
+                    os.path.join(directory, f"step_{s:09d}"))
+                break
+            except FileNotFoundError:
+                continue             # _gc won the race for this step
+        if flat is None:
+            raise FileNotFoundError(f"no committed checkpoint in {directory}")
+    meta = dict(meta)
+    meta["corrupt_keys"] = _validate(flat, meta, strict)
+
+    if tree_like is None:
+        tree = _unflatten_keys(flat)
+        if shardings is not None:
+            tree = jax.device_put(tree, shardings)
+        return tree, meta
 
     paths_and_leaves, tdef = jax.tree_util.tree_flatten_with_path(tree_like)
     leaves = []
@@ -121,8 +244,10 @@ class CheckpointManager:
         self._gc()
         return path
 
-    def restore(self, tree_like: Any, step: Optional[int] = None, shardings=None):
-        return restore(self.directory, tree_like, step, shardings)
+    def restore(self, tree_like: Any = None, step: Optional[int] = None,
+                shardings=None, strict: bool = True):
+        return restore(self.directory, tree_like, step, shardings,
+                       strict=strict)
 
     def latest_step(self) -> Optional[int]:
         return latest_step(self.directory)
@@ -134,8 +259,16 @@ class CheckpointManager:
             n[:-len(_DONE)] for n in os.listdir(self.directory)
             if n.startswith("step_") and n.endswith(_DONE))
         for n in committed[:-self.keep] if self.keep else []:
-            shutil.rmtree(os.path.join(self.directory, n), ignore_errors=True)
-            os.remove(os.path.join(self.directory, n + _DONE))
+            # marker FIRST: a concurrent latest_step/restore that listed the
+            # marker before this removal either still finds the payload
+            # intact (no rmtree yet) or, finding it gone, falls back to the
+            # next older committed step — never a half-deleted read.
+            try:
+                os.remove(os.path.join(self.directory, n + _DONE))
+            except FileNotFoundError:
+                pass
+            shutil.rmtree(os.path.join(self.directory, n),
+                          ignore_errors=True)
         # torn writes (no commit marker)
         for n in os.listdir(self.directory):
             full = os.path.join(self.directory, n)

@@ -135,6 +135,39 @@ def main() -> None:
                     help="external drafter from the registry instead of "
                          "the self-speculative n-gram lookup (e.g. "
                          "'repeat'; default: self-speculative)")
+    ap.add_argument("--journal-dir", default=None, metavar="DIR",
+                    help="crash-consistent serving: write-ahead request "
+                         "journal + live-state checkpoints under DIR. On "
+                         "boot, a non-empty DIR is recovered first — the "
+                         "newest committed checkpoint restores live/queued "
+                         "state, the journal suffix replays, and every "
+                         "accepted request resumes token-identically "
+                         "(docs/serving.md §Durability). Requires "
+                         "--continuous")
+    ap.add_argument("--checkpoint-every", type=int, default=8,
+                    metavar="ROUNDS",
+                    help="live-state checkpoint cadence in scheduler "
+                         "rounds (default: 8; 0 = journal only — nothing "
+                         "is lost either way, a checkpoint just bounds "
+                         "recovery recompute). Only with --journal-dir")
+    ap.add_argument("--drain-on-sigterm", action="store_true",
+                    help="graceful shutdown: SIGTERM stops admission, "
+                         "runs every admitted row to a terminal status, "
+                         "writes a final checkpoint (with --journal-dir) "
+                         "and exits; queued requests stay journaled for "
+                         "the next process. Requires --continuous")
+    ap.add_argument("--kv16-masters", action="store_true",
+                    help="keep f32 KV masters for shared/chunked rows even "
+                         "at --kv-bits 16 (structurally bit-exact "
+                         "continuations + exact kv16 checkpoints; costs "
+                         "host memory)")
+    ap.add_argument("--aging", type=int, default=None, metavar="ROUNDS",
+                    help="anti-starvation promotion: a queued request "
+                         "that has waited ROUNDS scheduler rounds at the "
+                         "head of its class climbs one priority level "
+                         "(position only — profile binding and billing "
+                         "keep the submitted class). Default: off = "
+                         "strict lowest-level-first")
     ap.add_argument("--paranoid", action="store_true",
                     help="run the full block-pool invariant audit "
                          "(refcounts vs free/LRU/live partition, "
@@ -165,6 +198,15 @@ def main() -> None:
     if args.speculate and not args.continuous:
         raise SystemExit("--speculate needs --continuous (draft/verify "
                          "windows run through the slot-pool segment)")
+    if (args.journal_dir or args.drain_on_sigterm) and not args.continuous:
+        raise SystemExit("--journal-dir/--drain-on-sigterm need --continuous "
+                         "(durability hooks live on the slot-pool scheduler)")
+    stop = {"drain": False}
+    if args.drain_on_sigterm:
+        # install before the (slow) model/executable build: a TERM during
+        # warmup drains at the first step boundary instead of killing us
+        import signal
+        signal.signal(signal.SIGTERM, lambda *_: stop.update(drain=True))
     srv = AdaptiveServer(cfg, params, engine,
                          ServingConfig(slots=256, kv_bits=args.kv_bits,
                                        max_batch=4, paged_kv=args.paged_kv,
@@ -175,9 +217,11 @@ def main() -> None:
                                        prefill_chunk=args.prefill_chunk,
                                        priority_classes=args.priority_classes,
                                        preemption=args.preemption,
+                                       aging=args.aging,
                                        speculate=args.speculate,
                                        draft_k=args.draft_k,
-                                       draft_model=args.draft_model),
+                                       draft_model=args.draft_model,
+                                       kv16_masters=args.kv16_masters),
                          manager=mgr)
     rng = np.random.default_rng(args.seed)
     n_cls = max(1, args.priority_classes)
@@ -204,15 +248,44 @@ def main() -> None:
                                    max_nan=max(1, args.requests // 4),
                                    nan_at={min(1, args.requests - 1): (0,)},
                                    alloc_at=(2,))
-        sched = ContinuousScheduler(
-            srv, quantum=args.quantum,
+        sched_kwargs = dict(
+            quantum=args.quantum,
             shed=(ShedPolicy(max_queue=args.shed)
                   if args.shed is not None else None),
             faults=faults, retry_budget=args.retry_budget,
             paranoid=args.paranoid)
+        if args.journal_dir:
+            from repro.serving.durability import recover
+            sched = recover(srv, args.journal_dir,
+                            checkpoint_every=args.checkpoint_every,
+                            **sched_kwargs)
+            ri = sched.recover_info
+            if ri["resumed_rows"] or ri["chunk_rows"] or ri["replayed"]:
+                print(f"[serve] recovered from {args.journal_dir}: "
+                      f"{ri['resumed_rows']} live rows resumable, "
+                      f"{ri['chunk_rows']} mid-prompt chunk rows rebuilt, "
+                      f"{ri['replayed']} journal records replayed, "
+                      f"{len(ri['refilled'])} re-prefilled after corruption "
+                      f"({ri['recovery_s']*1e3:.0f} ms)")
+        else:
+            sched = ContinuousScheduler(srv, **sched_kwargs)
         for r in reqs:
             sched.submit(r)
-        results = sched.run()
+        drained = False
+        while sched.step():
+            if stop["drain"]:
+                # graceful shutdown: finish every admitted row, leave the
+                # queue journaled for the next process, cut one final
+                # checkpoint, exit 0
+                sched.drain()
+                if sched.durable is not None:
+                    sched.durable.checkpoint()
+                drained = True
+                break
+        results = [sched.results.get(i) for i in range(sched._n)]
+        if drained:
+            print(f"[serve] SIGTERM drain: {sched.pending} request(s) left "
+                  f"queued (journaled) after finishing all admitted rows")
     else:
         results = srv.serve(reqs)
     wall = time.perf_counter() - t0
@@ -224,8 +297,11 @@ def main() -> None:
               f"lru cached {st['lru_cached_blocks']}, "
               f"preemptions {st['preemptions']} "
               f"(resumed {st['resumes']})")
-    n_tok = sum(len(r["tokens"]) for r in results)
+    n_tok = sum(len(r["tokens"]) for r in results if r)
     for i, r in enumerate(results):
+        if r is None:                # still queued after a SIGTERM drain
+            print(f"[serve] req{i}: queued (journaled for next process)")
+            continue
         status = r.get("status")
         extra = "" if status is None else f" [{status.value}" + (
             f": {r['reason']}]" if r.get("reason") else "]")

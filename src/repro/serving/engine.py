@@ -126,7 +126,12 @@ class ServingConfig:
     host-side KV masters are snapshotted (:meth:`~repro.serving.scheduler.
     ContinuousScheduler.evict_row`) and they resume later through the
     continuation-prefill executable, token-identically. Requires the paged
-    pool on a ``supports_prefix_sharing`` stack.
+    pool on a ``supports_prefix_sharing`` stack. ``aging`` — anti-
+    starvation promotion age in scheduler rounds: a queued class head
+    that has waited this many rounds is promoted one level up the
+    ladder (queue position only — profile binding, billing and
+    preemption keep the request's class); ``None`` keeps strict
+    lowest-level-first.
 
     Speculative-decoding knobs (docs/serving.md §Speculation):
 
@@ -148,6 +153,21 @@ class ServingConfig:
     the current token (the degenerate run-length drafter). External
     small-model drafters plug in as a traced ``draft_fn(hist, tok) ->
     [B, draft_k]`` via :class:`AdaptiveServer`'s ``draft_fn`` argument.
+
+    Durability knob (docs/serving.md §Durability):
+
+    ``kv16_masters`` — keep full-precision (f32) KV masters for shared
+    prefixes and chunked rows even at ``kv_bits=16``. The bf16 pool is
+    normally its own master (shared admissions gather the prefix straight
+    from the shared blocks), which is token-identical but not
+    *structurally* bit-exact: a continuation attends over bf16-rounded
+    prefix values where a cold prefill attends over the raw f32 ones.
+    With masters on, every continuation path (shared, chunked, restore)
+    replays the prefix from the raw activations — the same structural
+    bit-exactness the preemption-restore path has at int KV — and durable
+    checkpoints snapshot exact row state at kv16. Costs host memory
+    (f32 masters per registry entry / in-flight chunk row); identity of
+    delivered tokens does not depend on it.
     """
 
     slots: int = 4096
@@ -163,10 +183,12 @@ class ServingConfig:
     prefill_chunk: Optional[int] = None
     priority_classes: int = 1
     preemption: bool = False
+    aging: Optional[int] = None
     speculate: bool = False
     draft_k: int = 4
     draft_hist: int = 32
     draft_model: Optional[str] = None
+    kv16_masters: bool = False
 
 
 @dataclasses.dataclass
@@ -364,13 +386,17 @@ class AdaptiveServer:
                 self.block_size,
                 (int(serving.prefill_chunk) // self.block_size)
                 * self.block_size)
-        # full-precision prefix masters are only needed when the pool's
-        # storage is lossy (int KV): a bf16 pool *is* its own master, so
-        # kv16 shared admissions gather the prefix straight from the shared
-        # blocks and the registry stores nothing but block ids. Chunked
-        # prefill needs them for the same reason (each chunk replays the
-        # previous ones as its prefix).
-        self._collect_masters = serving.kv_bits != 16 and bool(
+        # full-precision prefix masters are needed when the pool's storage
+        # is lossy (int KV): a bf16 pool *is* its own master, so kv16 shared
+        # admissions gather the prefix straight from the shared blocks and
+        # the registry stores nothing but block ids. Chunked prefill needs
+        # them for the same reason (each chunk replays the previous ones as
+        # its prefix). ``kv16_masters`` opts a bf16 pool into the same
+        # master-backed continuations (structural bit-exactness + exact
+        # durable snapshots at kv16 — see the ServingConfig docstring).
+        self.masters_mode = (serving.kv_bits != 16
+                             or bool(serving.kv16_masters))
+        self._collect_masters = self.masters_mode and bool(
             self.prefix_sharing or self.chunk_tokens)
 
         def admit_paged_fn(profile_id, batch, slots_idx, dest, tok, pos,
@@ -493,13 +519,14 @@ class AdaptiveServer:
         # the same continuation executable
         if not (self.prefix_sharing or self.chunk_tokens):
             self._admit_shared = None
-        elif serving.kv_bits == 16:
+        elif not self.masters_mode:
             self._admit_shared = jax.jit(admit_shared_pool_fn,
                                          donate_argnums=(7, 8, 9))
         else:
-            # int-KV variant: prefix replayed from full-precision registry
-            # masters (the pool's int8 rows were quantized on the *owner's*
-            # per-row grid and are not bit-shareable)
+            # master-backed variant: prefix replayed from full-precision
+            # registry masters — mandatory at int KV (the pool's int8 rows
+            # were quantized on the *owner's* per-row grid and are not
+            # bit-shareable), opt-in at kv16 via ``kv16_masters``
             self._admit_shared = jax.jit(_admit_shared_body,
                                          donate_argnums=(10, 11, 12))
         self._clear_rows = jax.jit(clear_rows_fn, donate_argnums=(1,))
@@ -519,9 +546,13 @@ class AdaptiveServer:
                 "preemption requires the paged KV pool on a full-causal "
                 "attention stack (supports_prefix_sharing): suspended rows "
                 "resume through the continuation-prefill executable")
-        if not serving.preemption:
+        # built on every capable stack (not just under preemption): crash
+        # recovery re-admits checkpointed rows through the exact same
+        # executable, and jit objects compile lazily — an unused restore
+        # path costs nothing
+        if not (serving.paged_kv and T.supports_prefix_sharing(cfg)):
             self._admit_restore = None
-        elif serving.kv_bits != 16 and self._admit_shared is not None:
+        elif self.masters_mode and self._admit_shared is not None:
             self._admit_restore = self._admit_shared
         else:
             self._admit_restore = jax.jit(_admit_shared_body,

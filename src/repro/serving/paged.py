@@ -413,7 +413,7 @@ class PrefixRegistry:
         return e
 
     def register_chain(self, keys: list[bytes], j_max: int, blocks,
-                       mk, mv) -> None:
+                       mk, mv, share_blocks: Optional[bool] = None) -> None:
         """Offer every key of one prompt's block-aligned prefix chain,
         longest first — key ``i`` of ``keys`` covers ``(j_max − i)``
         blocks. Every key is offered (``register`` no-ops on present ones)
@@ -424,9 +424,20 @@ class PrefixRegistry:
         stored. At int KV precisions entries share the ONE master buffer
         ``mk``/``mv`` (already truncated to ``j_max`` blocks) and snapshot
         per-length raw amax — O(chain), not O(chain²), memory.
+
+        ``share_blocks`` marks the pool blocks bit-shareable (bf16 pool;
+        int8 rows are quantized on the owner's per-row grid and are not).
+        It defaults to ``mk is None`` — the classic two modes — and
+        ``share_blocks=True`` *with* masters is the ``kv16_masters`` mode:
+        entries keep the CoW block claim AND the full-precision masters,
+        so shared admissions still map instead of re-store while the
+        prefix compute replays the raw activations (structural
+        bit-exactness + exact durable snapshots).
         """
         if j_max < 1 or not keys:
             return
+        if share_blocks is None:
+            share_blocks = mk is None
         import jax.numpy as jnp
         bs = self.alloc.block_size
         for i, key in enumerate(keys):           # longest first
@@ -434,13 +445,13 @@ class PrefixRegistry:
                 continue
             n_blk = j_max - i
             n_tok = n_blk * bs
+            bids = blocks[:n_blk] if share_blocks else None
             if mk is None:                       # kv16: pool blocks = masters
-                self.register(key, n_tok, blocks[:n_blk],
-                              None, None, None, None)
+                self.register(key, n_tok, bids, None, None, None, None)
             else:
                 ka = jnp.max(jnp.abs(mk[:, :n_tok]), axis=(1, 3))
                 va = jnp.max(jnp.abs(mv[:, :n_tok]), axis=(1, 3))
-                self.register(key, n_tok, None, mk, mv, ka, va)
+                self.register(key, n_tok, bids, mk, mv, ka, va)
 
     def acquire(self, entry: PrefixEntry) -> None:
         """A row starts mapping the entry's blocks: live blocks gain a

@@ -196,6 +196,23 @@ class SchedulingPolicy:
         when the queue is empty."""
         raise NotImplementedError
 
+    # ---- durability (serving/durability.py checkpoints) ------------------
+    def queue_state(self) -> dict:
+        """JSON-serializable snapshot of the queue discipline's mutable
+        state (order, ages) — everything a process restart cannot rebuild
+        from the request set alone."""
+        raise NotImplementedError
+
+    def restore_queue_state(self, state: dict) -> None:
+        """Inverse of :meth:`queue_state` on a freshly built policy."""
+        raise NotImplementedError
+
+    # ---- aging -----------------------------------------------------------
+    def age_tick(self) -> None:
+        """One scheduler round passed: age queued requests (anti-starvation
+        hook — the scheduler calls this every round; disciplines without
+        aging ignore it)."""
+
     # ---- preemption ------------------------------------------------------
     def pick_victims(self, request, rows: Sequence[RowState],
                      need_slots: int, need_blocks: int) -> list[RowState]:
@@ -243,6 +260,12 @@ class FifoPolicy(SchedulingPolicy):
     def shed_tail(self) -> Optional[tuple[int, int]]:
         return (self._q[-1], 0) if self._q else None
 
+    def queue_state(self) -> dict:
+        return {"q": [int(r) for r in self._q]}
+
+    def restore_queue_state(self, state: dict) -> None:
+        self._q = deque(int(r) for r in state["q"])
+
 
 class PriorityPolicy(SchedulingPolicy):
     """Per-class FIFOs, served strictly lowest-level-first.
@@ -251,21 +274,38 @@ class PriorityPolicy(SchedulingPolicy):
     requests re-enter at the front of their class). ``preemptive`` arms
     :meth:`pick_victims`; ``victim_picker`` is the pluggable selection
     strategy (:func:`default_victim_picker` unless overridden).
+
+    ``aging`` arms anti-starvation promotion: every scheduler round ages
+    each queued request by one (:meth:`age_tick`), and a class head that
+    has waited ``aging`` rounds is promoted ONE level up — appended to the
+    tail of the next-more-urgent queue, behind that class's own backlog,
+    with its age reset (climbing two levels takes two full ages). Under a
+    sustained critical flood a saver request therefore reaches the front
+    in bounded rounds instead of starving forever. Promotion moves queue
+    *position only*: the request keeps its class for profile binding,
+    billing and preemption (a promoted saver never pins the accuracy
+    profile). ``aging=None`` (default) preserves strict
+    lowest-level-first exactly.
     """
 
     def __init__(self, classes: Sequence[PriorityClass],
                  preemptive: bool = False,
-                 victim_picker: Optional[Callable] = None):
+                 victim_picker: Optional[Callable] = None,
+                 aging: Optional[int] = None):
         assert classes, "at least one priority class"
         self.classes = tuple(sorted(classes, key=lambda c: c.level))
         assert [c.level for c in self.classes] == list(range(len(
             self.classes))), "class levels must be 0..n-1"
         self.preemptive = bool(preemptive)
         self.victim_picker = victim_picker or default_victim_picker
+        assert aging is None or aging >= 1, "aging is rounds >= 1"
+        self.aging = aging
+        self._waited: dict[int, int] = {}     # rid -> rounds since enqueue
         self._q: dict[int, deque[int]] = {c.level: deque()
                                           for c in self.classes}
 
     def enqueue(self, rid: int, request) -> None:
+        self._waited[rid] = 0
         self._q[self.klass(request).level].append(rid)
 
     def head(self) -> Optional[int]:
@@ -277,10 +317,16 @@ class PriorityPolicy(SchedulingPolicy):
     def pop_head(self) -> int:
         for lvl in range(len(self.classes)):
             if self._q[lvl]:
-                return self._q[lvl].popleft()
+                rid = self._q[lvl].popleft()
+                self._waited.pop(rid, None)
+                return rid
         raise IndexError("pop from empty policy queue")
 
     def push_front(self, rid: int, request) -> None:
+        # rollback/resume re-entry: lands at the request's CLASS front
+        # (a promotion earned before eviction is forfeited — the wait
+        # counter restarts with the new queue residence)
+        self._waited.setdefault(rid, 0)
         self._q[self.klass(request).level].appendleft(rid)
 
     def __len__(self) -> int:
@@ -290,6 +336,7 @@ class PriorityPolicy(SchedulingPolicy):
         for q in self._q.values():
             try:
                 q.remove(rid)
+                self._waited.pop(rid, None)
                 return True
             except ValueError:
                 continue
@@ -304,6 +351,33 @@ class PriorityPolicy(SchedulingPolicy):
             if self._q[lvl]:
                 return (self._q[lvl][-1], lvl)
         return None
+
+    def queue_state(self) -> dict:
+        return {"q": {str(lvl): [int(r) for r in q]
+                      for lvl, q in self._q.items()},
+                "waited": {str(r): int(w) for r, w in self._waited.items()}}
+
+    def restore_queue_state(self, state: dict) -> None:
+        # restores queue POSITION (including earned aging promotions) —
+        # a promoted rid comes back in its promoted queue, not its class's
+        self._q = {c.level: deque(int(r)
+                                  for r in state["q"].get(str(c.level), []))
+                   for c in self.classes}
+        self._waited = {int(r): int(w)
+                        for r, w in state.get("waited", {}).items()}
+
+    def age_tick(self) -> None:
+        if self.aging is None:
+            return
+        for q in self._q.values():
+            for rid in q:
+                self._waited[rid] = self._waited.get(rid, 0) + 1
+        for lvl in range(1, len(self.classes)):
+            q = self._q[lvl]
+            if q and self._waited.get(q[0], 0) >= self.aging:
+                rid = q.popleft()
+                self._waited[rid] = 0
+                self._q[lvl - 1].append(rid)
 
     def pick_victims(self, request, rows: Sequence[RowState],
                      need_slots: int, need_blocks: int) -> list[RowState]:
@@ -354,5 +428,6 @@ def make_policy(scfg) -> SchedulingPolicy:
     n = int(getattr(scfg, "priority_classes", 1) or 1)
     if n > 1 or getattr(scfg, "preemption", False):
         return PriorityPolicy(default_classes(max(2, n)),
-                              preemptive=bool(scfg.preemption))
+                              preemptive=bool(scfg.preemption),
+                              aging=getattr(scfg, "aging", None))
     return FifoPolicy()

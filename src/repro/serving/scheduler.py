@@ -58,8 +58,10 @@ span replayed as the prefix with an empty suffix, pure data movement that
 rebuilds cache bytes, scales and carry **bit-exactly** — so a resumed row
 continues token-identically to an uninterrupted run by construction, at
 kv16 and kv8, shared-CoW rows included. An admission
-round dispatches at most TWO prefill waves (cold / shared / resume — a
-third kind waits a round), and every decode segment still runs the one
+round dispatches at most TWO prefill waves (cold / shared / resume /
+chunk-continuation — an over-budget kind waits a round; imminent chunk
+continuations pre-commit their share), and every decode segment still
+runs the one
 pool-lifetime ``_segment`` executable; ``tests/test_scheduler_policy.py``
 guards both.
 
@@ -186,7 +188,7 @@ class ContinuousScheduler:
         nslots = self.n_slots = scfg.max_batch
         self.paged = bool(scfg.paged_kv) and cfg.has_attn
         self.policy = policy if policy is not None else make_policy(scfg)
-        if self.policy.preemptive and (not self.paged
+        if self.policy.preemptive and (not self.paged or not scfg.preemption
                                        or server._admit_restore is None):
             raise ValueError(
                 "a preemptive policy needs the paged pool and a server "
@@ -271,6 +273,13 @@ class ContinuousScheduler:
         self._round = 0
         self._seg_dt: Optional[float] = None      # step wall-time EMA
         self._flush_idx = 0
+        # durability layer (serving/durability.py): when attached, the
+        # scheduler notifies it at every lifecycle edge (submit / cancel /
+        # finalize / deliver, fsync'd write-ahead records) and flush
+        # boundary (checkpoint cadence + crash-point markers). None = the
+        # classic in-memory scheduler, zero overhead.
+        self.durable = None
+        self.draining = False     # graceful drain: stop admitting, finish
         self.cancelled = self.expired = self.shed_count = self.failed = 0
         self.recovered = self.faults_detected = 0
         self.alloc_injected_rounds = 0
@@ -372,6 +381,11 @@ class ContinuousScheduler:
         rid = self._n
         self._n += 1
         self._reqs[rid] = request
+        if self.durable is not None:
+            # write-ahead: the submit record is durable BEFORE the request
+            # can observably exist (invariant 12 — an accepted request is
+            # never silently lost by a crash)
+            self.durable.on_submit(rid, request)
         if request.deadline_ms is not None:
             self._deadline[rid] = self.clock() + request.deadline_ms / 1e3
         if request.max_new <= 0:        # nothing to generate: done on arrival
@@ -426,6 +440,11 @@ class ContinuousScheduler:
         scheduler evicts the request's retained state, so a long-lived
         polling server stays O(pool), not O(requests ever served)."""
         done, self._done = self._done, []
+        if done and self.durable is not None:
+            # deliver record BEFORE handing results out: after a crash,
+            # recovery drops exactly the rids the caller already owns
+            # (exactly-once delivery), and re-delivers the rest
+            self.durable.on_deliver(done)
         out = []
         for rid in done:
             out.append((rid, self.results.pop(rid)))
@@ -461,6 +480,8 @@ class ContinuousScheduler:
             self.shed_count += 1
         elif status is RequestStatus.FAILED:
             self.failed += 1
+        if self.durable is not None:
+            self.durable.on_final(rid)
 
     def cancel(self, rid: int) -> bool:
         """Cancel a request wherever it currently sits; True if it took.
@@ -476,6 +497,12 @@ class ContinuousScheduler:
         whose last tokens are already in flight completes as
         ``COMPLETED``, never half-cancelled.
         """
+        took = self._cancel(rid)
+        if took and self.durable is not None:
+            self.durable.on_cancel(rid)
+        return took
+
+    def _cancel(self, rid: int) -> bool:
         if rid not in self._reqs or "status" in self.results.get(rid, {}):
             return False
         if self.policy.remove(rid):
@@ -733,6 +760,8 @@ class ContinuousScheduler:
         the allocator dry for this round — the round skips entirely, the
         same observable backpressure as a genuinely exhausted pool.
         """
+        if self.draining:
+            return 0                 # graceful drain: no new admissions
         if self.faults is not None and self.faults.alloc_dry(self._round):
             self.alloc_injected_rounds += 1
             return 0
@@ -819,9 +848,13 @@ class ContinuousScheduler:
         the shared wave, so two identical prompts arriving in the same
         cold wave no longer both prefill the prefix. Rollbacks keep their
         relative order; the strict stop-at-first-failure contract
-        otherwise holds within each class. (Chunk *continuation* waves —
-        :meth:`_advance_chunks`, at most one per in-flight pinned profile
-        per round — ride outside the two-kind admission cap, as before.)
+        otherwise holds within each class. Chunk *continuation* waves —
+        :meth:`_advance_chunks`, one per in-flight pinned profile per
+        round — count against the same two-dispatch budget: a round that
+        will advance chunks admits at most ``2 - groups`` new kinds, so
+        the audited ceiling holds even when restart recovery floods one
+        round with resumable rows, queued candidates AND restored
+        mid-prompt chunks at once.
         """
         self._maybe_preempt()
         free = [s for s in range(self.n_slots)
@@ -830,6 +863,11 @@ class ContinuousScheduler:
         shared_chunked, resume = [], []
         resume_pid: Optional[int] = None
         kinds: set = set()
+        # imminent chunk-continuation dispatches (one per pinned profile,
+        # rows admitted THIS round are "fresh" and sit out) pre-commit part
+        # of the round's two-dispatch budget
+        kind_cap = 2 - len({st["pid"] for st in self._chunk_state.values()
+                            if not st.get("fresh")})
         pending: dict[bytes, int] = {}   # key -> n_tokens this wave registers
         while free and len(self.policy):
             rid = self.policy.head()
@@ -841,8 +879,8 @@ class ContinuousScheduler:
                 continue
             req = self._reqs[rid]
             if rid in self._suspended:
-                if "resume" not in kinds and len(kinds) >= 2:
-                    break                # a third wave kind waits a round
+                if "resume" not in kinds and len(kinds) >= kind_cap:
+                    break                # over-budget wave kind waits a round
                 snap = self._suspended[rid]
                 if resume and snap.pid != resume_pid:
                     break                # one pinned-pid resume group/round
@@ -879,10 +917,10 @@ class ContinuousScheduler:
                             n_shared = pending[k] // self.block_size
                         break
             kind = "shared" if (entry is not None or wait) else "cold"
-            if kind not in kinds and len(kinds) >= 2:
+            if kind not in kinds and len(kinds) >= kind_cap:
                 if entry is not None:
                     self.registry.release(entry)
-                break                            # third kind: next round
+                break                            # over budget: next round
             blocks = self.allocator.alloc(need - n_shared)
             if blocks is None:                   # backpressure: head waits,
                 if entry is not None:            # policy order preserved
@@ -1035,27 +1073,16 @@ class ContinuousScheduler:
         self._caches = self._clear(
             self._pad_slot_idx([v.slot for v in victims]), self._caches)
 
-    def evict_row(self, slot: int) -> int:
-        """Suspend one live pool row; returns its rid.
-
-        The preemption state machine's SUSPEND edge: flush every in-flight
-        token (the snapshot needs the row's true progress), snapshot the
-        row's block table + host-side KV masters
-        (:class:`~repro.serving.paged.RowSnapshot` — masters via
-        :func:`repro.models.transformer.paged_row_masters`, exact int-KV
-        scale preimages via :func:`~repro.models.transformer.
-        amax_for_scale`), release its blocks (registered prefixes park in
-        the retired-block LRU; a mapped CoW entry just drops this sharer's
-        references), and requeue the request at the front of its class.
-        The caller unmaps the slot's block table (``_clear_rows``) — the
-        host-side twin of in-graph retirement, so the row's residual
-        frozen-position writes can never follow the freed blocks to their
-        next owner. The row later resumes through
-        :meth:`_dispatch_resume`, token-identically.
-        """
+    def _snapshot_row(self, slot: int) -> RowSnapshot:
+        """Materialize a live row's :class:`RowSnapshot` — the row's true
+        progress as replayable data (f32 masters + exact int-KV scale
+        preimages). Pure read; the caller must have flushed every
+        in-flight token first (``_flush(0)``) so the snapshot reflects the
+        row's real position. Shared by the preemption SUSPEND edge
+        (:meth:`evict_row`) and the durability layer's live-state
+        checkpoint — crash recovery replays the exact same bytes through
+        the exact same restore executable."""
         rid = self.slot_req[slot]
-        assert rid is not None and slot not in self._chunk_state
-        self._flush(0)
         req = self._reqs[rid]
         res = self.results[rid]
         g = len(res["tokens"])              # ≥ 1: admission emitted one
@@ -1079,10 +1106,35 @@ class ContinuousScheduler:
             va = jnp.asarray(T.amax_for_scale(
                 # repro: allow(host-sync) suspend edge materializes masters
                 np.asarray(pool.v_scale[:, slot]), qmax))
-        self._suspended[rid] = RowSnapshot(
+        return RowSnapshot(
             rid=rid, n_done=p_written,
             last_tok=int(res["tokens"][-1]), pid=pid,
             master_k=mk, master_v=mv, k_amax=ka, v_amax=va)
+
+    def evict_row(self, slot: int) -> int:
+        """Suspend one live pool row; returns its rid.
+
+        The preemption state machine's SUSPEND edge: flush every in-flight
+        token (the snapshot needs the row's true progress), snapshot the
+        row's block table + host-side KV masters
+        (:class:`~repro.serving.paged.RowSnapshot` — masters via
+        :func:`repro.models.transformer.paged_row_masters`, exact int-KV
+        scale preimages via :func:`~repro.models.transformer.
+        amax_for_scale`), release its blocks (registered prefixes park in
+        the retired-block LRU; a mapped CoW entry just drops this sharer's
+        references), and requeue the request at the front of its class.
+        The caller unmaps the slot's block table (``_clear_rows``) — the
+        host-side twin of in-graph retirement, so the row's residual
+        frozen-position writes can never follow the freed blocks to their
+        next owner. The row later resumes through
+        :meth:`_dispatch_resume`, token-identically.
+        """
+        rid = self.slot_req[slot]
+        assert rid is not None and slot not in self._chunk_state
+        self._flush(0)
+        self._suspended[rid] = self._snapshot_row(slot)
+        req = self._reqs[rid]
+        blocks, reg = self._slot_blocks[slot]
         self._release_blocks(blocks)
         if reg is not None:
             self.registry.release(reg)
@@ -1244,13 +1296,16 @@ class ContinuousScheduler:
             t = np.asarray(reqs[j].tokens, np.int32)
             j_max = (len(t) - 1) // bs
             mk = mv = None
-            if not kv16 and j_max >= 1:
+            if raw is not None and j_max >= 1:
                 k_all, v_all = raw
                 c0 = bucket - len(t)
                 mk = k_all[:, j, c0:c0 + j_max * bs].astype(jnp.float32)
                 mv = v_all[:, j, c0:c0 + j_max * bs].astype(jnp.float32)
+            # kv16_masters: blocks stay shareable (the bf16 pool is still
+            # exact) AND the f32 masters ride along for durable snapshots
             self.registry.register_chain(self._prefix_keys.get(rid, []),
-                                         j_max, blocks, mk, mv)
+                                         j_max, blocks, mk, mv,
+                                         share_blocks=kv16)
 
     def _call_continuation(self, fn, pid, batch, sidx, dest, bt_rows,
                            plen_pre, pp: int, pre: list,
@@ -1275,7 +1330,7 @@ class ContinuousScheduler:
         cfg = self.srv.cfg
         a = dest.shape[0]
         nb_oob = self.allocator.n_blocks
-        if self.srv.scfg.kv_bits == 16 and not masters:
+        if not self.srv.masters_mode and not masters:
             pb = pp // self.block_size
             pre_bids = np.full((a, pb), nb_oob, np.int32)
             for j, (n_tok, bids, *_rest) in enumerate(pre):
@@ -1521,13 +1576,15 @@ class ContinuousScheduler:
         t = np.asarray(self._reqs[rid].tokens, np.int32)
         j_max = (len(t) - 1) // self.block_size
         mk = mv = None
-        if self.srv.scfg.kv_bits != 16 and j_max >= 1:
+        if st["mk"] is not None and j_max >= 1:
             # one master buffer for the whole chain, truncated to the
             # registrable span (entries slice by their own n_tokens)
             mk = st["mk"][:, :j_max * self.block_size]
             mv = st["mv"][:, :j_max * self.block_size]
         self.registry.register_chain(self._prefix_keys.get(rid, []),
-                                     j_max, st["map"], mk, mv)
+                                     j_max, st["map"], mk, mv,
+                                     share_blocks=self.srv.scfg.kv_bits
+                                     == 16)
 
     def _post_admission(self, tok0, pname: str, rows) -> None:
         """Common post-dispatch bookkeeping for paged admission waves.
@@ -1805,6 +1862,7 @@ class ContinuousScheduler:
             if s > 0.0:
                 time.sleep(s)            # injected stall: watchdog fodder
         names = self.srv.engine.profile_names
+        drained = len(self._inflight) > keep
         while len(self._inflight) > keep:
             e = self._inflight.pop(0)
             # repro: allow(host-sync) the flush boundary IS the sync point
@@ -1849,6 +1907,10 @@ class ContinuousScheduler:
                         self.clock() - self._q_t0.pop(rid))
                     self.recovered += 1
                 self._done.append(rid)
+                if self.durable is not None:
+                    self.durable.on_final(rid)
+        if drained and self.durable is not None:
+            self.durable.on_flush()      # crash-point / consistency-cut mark
 
     # ------------------------------------------------------------------ drive
     def step(self) -> bool:
@@ -1870,7 +1932,10 @@ class ContinuousScheduler:
                                       if x[0] > self._round]
                 for _, rid in reversed(ripe):    # preserve relative order
                     self.policy.push_front(rid, self._reqs[rid])
-        self.admit()
+        self.policy.age_tick()           # anti-starvation promotion (if on)
+        n_adm = self.admit()
+        if n_adm and self.durable is not None:
+            self.durable.on_admit(n_adm)
         ran = False
         if self.live_rows:
             self.run_segment()
@@ -1884,6 +1949,8 @@ class ContinuousScheduler:
         if ran:         # EMA over rounds that actually ran a segment
             self._seg_dt = (dt if self._seg_dt is None
                             else 0.5 * dt + 0.5 * self._seg_dt)
+        if self.durable is not None:
+            self.durable.on_step_end()   # checkpoint cadence hook
         if self.watchdog is not None:
             self.watchdog.record(f"round {self._round}", dt)
         if self.paranoid:
@@ -1898,3 +1965,19 @@ class ContinuousScheduler:
         while self.step():
             pass
         return [self.results.get(i) for i in range(self._n)]
+
+    def drain(self) -> None:
+        """Graceful-shutdown drain: stop admitting new work, then step the
+        pool until every already-admitted row (live, chunked, in-flight,
+        reaped, quarantined) has reached a terminal status. Queued-but-
+        never-admitted requests stay queued — a durability layer
+        checkpoints them for the next process; without one the caller
+        still holds their journal/submission record. The SIGTERM handler
+        in ``launch/serve.py`` drives this."""
+        self.draining = True
+        if self.durable is not None:
+            self.durable.on_drain()
+        while (self.live_rows or self._inflight
+               or (self.paged and self._chunk_state)
+               or self._to_reap or self._nf_rows or self._quarantine_q):
+            self.step()

@@ -70,3 +70,42 @@ def test_elastic_restore_with_shardings(tmp_path):
                      shardings={"w": dev})
     np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(t["w"]))
     assert out["w"].devices() == {dev}
+
+
+def test_manifest_detects_silent_corruption(tmp_path):
+    """A bit-rotted leaf fails its manifest crc32: strict restore raises
+    the named CheckpointIntegrityError; strict=False drops the leaf,
+    lists it in meta["corrupt_keys"], and keeps every healthy leaf —
+    the serving recovery path's per-row fallback contract."""
+    from repro.checkpoint.manager import CheckpointIntegrityError
+    t = {"good": jnp.arange(8.0), "bad": jnp.ones((3, 3))}
+    save(str(tmp_path), 1, t)
+    sdir = tmp_path / "step_000000001"
+    with np.load(sdir / "arrays.npz") as z:
+        flat = {n: z[n] for n in z.files}
+    flat["bad"] = flat["bad"] + 1.0           # same shape/dtype, new bytes
+    np.savez(sdir / "arrays.npz", **flat)
+    with pytest.raises(CheckpointIntegrityError, match="bad"):
+        restore(str(tmp_path))
+    out, meta = restore(str(tmp_path), strict=False)
+    assert meta["corrupt_keys"] == ["bad"]
+    assert "bad" not in out
+    np.testing.assert_array_equal(np.asarray(out["good"]), np.arange(8.0))
+
+
+def test_restore_falls_back_when_gc_wins_race(tmp_path):
+    """A commit marker whose payload directory vanished (retention _gc
+    removes the marker first, but a lister may hold a stale snapshot)
+    must not wedge restore: it falls back to the next older committed
+    step instead of failing on the half-deleted newest."""
+    import shutil
+    save(str(tmp_path), 1, {"w": jnp.zeros(4)})
+    save(str(tmp_path), 2, {"w": jnp.ones(4)})
+    shutil.rmtree(tmp_path / "step_000000002")    # gc raced: dir gone,
+    # marker still on disk (the stale-listing window)
+    assert os.path.exists(tmp_path / "step_000000002.DONE")
+    out, meta = restore(str(tmp_path))
+    assert meta["step"] == 1
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.zeros(4))
+    with pytest.raises(FileNotFoundError):
+        restore(str(tmp_path), step=2)            # explicit step: loud

@@ -1,0 +1,404 @@
+"""Crash-consistent serving: journal, checkpoints, token-identical restart.
+
+The load-bearing properties of the durability layer (docs/serving.md
+§Durability, invariant 12 — *no accepted request is lost by a restart*):
+
+* **kill-at-every-flush-boundary recovery is token-identical**: for every
+  round boundary of a mixed workload (priority classes, speculation,
+  chunked prefill, CoW shared prefixes), abandoning the process there and
+  recovering from journal + newest checkpoint delivers exactly the token
+  streams of an uninterrupted twin, at kv16 and kv8, with statuses
+  terminal, the allocator audit clean and zero leaked blocks;
+* **the journal is crash-consistent**: a torn tail (partial last line,
+  bad checksum) is truncated on reopen and ignored by ``scan``, and the
+  write-ahead submit record alone — no checkpoint at all — is enough to
+  recover every accepted request;
+* **corruption degrades, never loses**: a checkpoint leaf that fails its
+  manifest checksum drops only the affected row to re-prefill-from-prompt
+  (``recover_info["refilled"]``) — the request still completes with the
+  exact twin stream;
+* **the energy ledger survives restart**: replaying the recovered
+  scheduler's event log through a fresh ProfileManager reproduces the
+  ledger, and total billed inferences ≡ delivered tokens;
+* **graceful drain** finishes live rows without admitting new ones,
+  leaves queued requests queued, and a cold restart completes them;
+* the pool-lifetime single-``_segment``-executable and ≤2-prefill-waves
+  invariants hold across the restart (SchedulerAudit-guarded).
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis.tracker import SchedulerAudit
+from repro.configs import get_smoke
+from repro.core.engine import AdaptiveEngine, QuantIndex
+from repro.core.manager import ProfileManager, ProfileStats
+from repro.core.profiles import paper_profiles
+from repro.models import transformer as T
+from repro.serving.durability import Durability, RequestJournal, recover
+from repro.serving.engine import (AdaptiveServer, Request, RequestStatus,
+                                  ServingConfig)
+from repro.serving.scheduler import ContinuousScheduler
+
+
+def _build(arch="granite-3-2b"):
+    cfg = get_smoke(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    names = T.quant_layer_names(cfg)
+    profs = paper_profiles(names, inner_layers=[])
+    eng = AdaptiveEngine(tuple(profs), QuantIndex(names),
+                         lambda p, br, b: T.train_loss(p, cfg, br, b))
+    return cfg, params, eng
+
+
+@pytest.fixture(scope="module")
+def dense_parts():
+    return _build()
+
+
+@pytest.fixture(scope="module")
+def spec16(dense_parts):
+    """kv16 + speculation + CoW prefix sharing (plain pool-as-master)."""
+    cfg, params, eng = dense_parts
+    return AdaptiveServer(cfg, params, eng,
+                          ServingConfig(slots=64, max_batch=4, block_size=8,
+                                        pool_blocks=64, priority_classes=2,
+                                        speculate=True, draft_k=2))
+
+
+@pytest.fixture(scope="module")
+def chunk8(dense_parts):
+    """kv8 + chunked prefill + CoW prefix sharing (int-KV masters)."""
+    cfg, params, eng = dense_parts
+    return AdaptiveServer(cfg, params, eng,
+                          ServingConfig(slots=64, max_batch=4, block_size=8,
+                                        pool_blocks=64, priority_classes=2,
+                                        kv_bits=8, prefill_chunk=16))
+
+
+def _manager():
+    stats = [ProfileStats(n, acc, e, 1e-3) for n, acc, e in [
+        ("A16-W8", 0.99, 4.0), ("A16-W4", 0.953, 2.0), ("A8-W8", 0.988, 3.0),
+        ("A8-W4", 0.953, 1.5), ("A4-W4", 0.958, 1.0), ("Mixed", 0.975, 2.0)]]
+    return ProfileManager(stats, accuracy_target=0.985, accuracy_floor=0.90,
+                          budget_j=150.0, low_energy=0.5)
+
+
+def _workload(cfg, seed=0):
+    """Mixed classes + a 16-token shared system prefix (CoW, two block-
+    aligned sharers) + one 40-token prompt (chunks at prefill_chunk=16)."""
+    rng = np.random.default_rng(seed)
+    sys_p = rng.integers(0, cfg.vocab, 16).astype(np.int32)
+    mk = lambda n: rng.integers(0, cfg.vocab, n).astype(np.int32)
+    return [
+        Request(tokens=np.concatenate([sys_p, mk(5)]), max_new=6, priority=1),
+        Request(tokens=np.concatenate([sys_p, mk(7)]), max_new=5, priority=0),
+        Request(tokens=mk(40), max_new=4, priority=1),
+        Request(tokens=mk(6), max_new=8, priority=0),
+        Request(tokens=mk(9), max_new=6, priority=1),
+        Request(tokens=mk(5), max_new=4, priority=0),
+    ]
+
+
+def _pattern(sched, reqs, stop_after=None):
+    """The canonical client pattern: four requests up front, the rest
+    arrive after round 1. Returns rounds stepped (or stops early to
+    simulate a crash at the ``stop_after``-th flush boundary)."""
+    for r in reqs[:4]:
+        sched.submit(r)
+    steps = 0
+    while True:
+        if stop_after is not None and steps == stop_after:
+            return steps
+        more = sched.step()
+        steps += 1
+        if steps == 1 and len(reqs) > 4:
+            for r in reqs[4:]:
+                sched.submit(r)
+            more = True
+        if not more:
+            return steps
+
+
+def _finish(sched, reqs):
+    """Drive a recovered scheduler to completion, re-submitting any late
+    arrivals the crash predates (rids are dense: ``_n`` counts accepted
+    submissions, so ``reqs[_n:]`` is exactly the unjournaled tail)."""
+    if sched._n < len(reqs):
+        for r in reqs[sched._n:]:
+            sched.submit(r)
+    while sched.step():
+        pass
+
+
+def _assert_identical(sched, reqs, twin):
+    for rid in range(len(reqs)):
+        got = sched.results[rid]
+        assert got["status"] is RequestStatus.COMPLETED, (rid, got)
+        assert [int(x) for x in got["tokens"]] == \
+               [int(x) for x in twin[rid]["tokens"]], rid
+    sched.check()
+    assert sched.allocator.used_blocks == 0
+
+
+# ---------------------------------------------------------------------------
+# journal unit tests (pure host, no model)
+# ---------------------------------------------------------------------------
+
+def test_journal_torn_tail_truncated_on_reopen(tmp_path):
+    """A crash mid-write leaves a torn tail; scan stops at it and reopen
+    truncates it, so the next append produces a clean suffix."""
+    p = str(tmp_path / "journal.jsonl")
+    j = RequestJournal(p)
+    j.append({"t": "submit", "rid": 0}, sync=True)
+    j.append({"t": "final", "rid": 0})
+    j.close()
+    with open(p, "ab") as f:
+        f.write(b'deadbeef {"t": "gar')          # no newline: torn
+    assert [r["t"] for _, r in RequestJournal.scan(p)] == ["submit", "final"]
+    j2 = RequestJournal(p)                       # reopen truncates the tail
+    j2.append({"t": "cancel", "rid": 0})
+    j2.close()
+    recs = RequestJournal.scan(p)
+    assert [r["t"] for _, r in recs] == ["submit", "final", "cancel"]
+    assert recs[-1][0] == os.path.getsize(p)     # byte-exact valid prefix
+
+
+def test_journal_checksum_gates_suffix(tmp_path):
+    """A bit-flip in a middle record invalidates it AND everything after —
+    scan returns only the intact prefix (no resynchronization guessing)."""
+    p = str(tmp_path / "journal.jsonl")
+    j = RequestJournal(p)
+    for rid in range(3):
+        j.append({"t": "submit", "rid": rid})
+    j.close()
+    raw = open(p, "rb").read().splitlines(keepends=True)
+    raw[1] = raw[1][:12] + b"X" + raw[1][13:]    # corrupt record 1's payload
+    with open(p, "wb") as f:
+        f.writelines(raw)
+    recs = RequestJournal.scan(p)
+    assert [r["rid"] for _, r in recs] == [0]
+
+
+# ---------------------------------------------------------------------------
+# the tentpole: kill + restore at EVERY flush boundary, kv16 and kv8
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("which", ["kv16-spec", "kv8-chunked"])
+def test_crash_restart_token_identity_every_boundary(which, spec16, chunk8,
+                                                     tmp_path):
+    """For every round boundary k of the workload, abandon the scheduler
+    after k rounds (checkpoint_every=1: the newest checkpoint IS that
+    boundary's cut) and recover into a fresh scheduler over the same
+    server. Delivered streams ≡ the uninterrupted twin, per request, and
+    the pool drains clean. k=0 exercises journal-only recovery (no
+    checkpoint committed yet); the midpoint trial additionally audits the
+    single-segment and ≤2-prefill-waves invariants after restart."""
+    srv = spec16 if which == "kv16-spec" else chunk8
+    reqs = _workload(srv.cfg)
+    tw = ContinuousScheduler(srv, quantum=4)
+    rounds = _pattern(tw, reqs)
+    twin = [tw.results[i] for i in range(len(reqs))]
+    assert rounds >= 3                            # matrix is non-trivial
+
+    for k in range(rounds):
+        jd = str(tmp_path / f"{which}-k{k}")
+        s1 = ContinuousScheduler(srv, quantum=4)
+        Durability(s1, jd, checkpoint_every=1)
+        _pattern(s1, reqs, stop_after=k)          # CRASH: abandon s1
+        s2 = recover(srv, jd, checkpoint_every=1, quantum=4)
+        assert s2.recover_info["recovery_s"] >= 0.0
+        if k == rounds // 2:
+            with SchedulerAudit(s2) as audit:
+                _finish(s2, reqs)
+            audit.assert_single_segment()
+            audit.assert_max_prefill_waves(2)
+        else:
+            _finish(s2, reqs)
+        _assert_identical(s2, reqs, twin)
+
+
+def test_journal_only_recovery_no_checkpoint(spec16, tmp_path):
+    """checkpoint_every=0: the write-ahead submit records alone recover
+    every accepted request (invariant 12 needs no checkpoint — a
+    checkpoint only bounds recovery recompute)."""
+    srv = spec16
+    reqs = _workload(srv.cfg, seed=3)
+    tw = ContinuousScheduler(srv, quantum=4)
+    _pattern(tw, reqs)
+    twin = [tw.results[i] for i in range(len(reqs))]
+
+    jd = str(tmp_path / "jd")
+    s1 = ContinuousScheduler(srv, quantum=4)
+    Durability(s1, jd)                            # journal only, no cadence
+    _pattern(s1, reqs, stop_after=3)              # CRASH mid-flight
+    s2 = recover(srv, jd, quantum=4)
+    # everything restarts from the prompt: nothing resumed, nothing lost
+    assert s2.recover_info["resumed_rows"] == 0
+    assert s2._n >= 4
+    _finish(s2, reqs)
+    _assert_identical(s2, reqs, twin)
+
+
+def test_recover_is_idempotent_on_recrash(chunk8, tmp_path):
+    """Crashing again immediately after recovery (before any new round)
+    recovers to the same state: the fresh checkpoint recover() writes
+    makes a re-crash a no-op, not a replay storm."""
+    srv = chunk8
+    reqs = _workload(srv.cfg, seed=5)
+    tw = ContinuousScheduler(srv, quantum=4)
+    _pattern(tw, reqs)
+    twin = [tw.results[i] for i in range(len(reqs))]
+
+    jd = str(tmp_path / "jd")
+    s1 = ContinuousScheduler(srv, quantum=4)
+    Durability(s1, jd, checkpoint_every=1)
+    _pattern(s1, reqs, stop_after=2)              # crash #1
+    recover(srv, jd, checkpoint_every=1, quantum=4)   # crash #2: abandon too
+    s3 = recover(srv, jd, checkpoint_every=1, quantum=4)
+    assert s3.recover_info["replayed"] == 0       # nothing past the cut
+    _finish(s3, reqs)
+    _assert_identical(s3, reqs, twin)
+
+
+# ---------------------------------------------------------------------------
+# corruption: checksum failure degrades to re-prefill, never loses
+# ---------------------------------------------------------------------------
+
+def test_corrupted_snapshot_refills_from_prompt(spec16, tmp_path):
+    """Flip a live row's master-K leaf inside the newest checkpoint. The
+    manifest checksum catches it, recovery drops ONLY that row to
+    re-prefill-from-prompt (recover_info["refilled"]) and the request
+    still completes with the exact twin stream."""
+    srv = spec16
+    reqs = _workload(srv.cfg, seed=7)
+    tw = ContinuousScheduler(srv, quantum=4)
+    rounds = _pattern(tw, reqs)
+    twin = [tw.results[i] for i in range(len(reqs))]
+
+    for k in range(2, rounds):
+        jd = str(tmp_path / f"k{k}")
+        s1 = ContinuousScheduler(srv, quantum=4)
+        Durability(s1, jd, checkpoint_every=1)
+        _pattern(s1, reqs, stop_after=k)
+        step = s1.durable.manager.latest_step()
+        sdir = os.path.join(jd, "checkpoints", f"step_{step:09d}")
+        with np.load(os.path.join(sdir, "arrays.npz")) as z:
+            flat = {n: z[n] for n in z.files}
+        victims = [n for n in flat if n.startswith("rows/")
+                   and n.endswith("/mk")]
+        if not victims:
+            continue                              # no live row at this cut
+        flat[victims[0]] = flat[victims[0]] + 1.0    # silent bit-rot
+        np.savez(os.path.join(sdir, "arrays.npz"), **flat)
+
+        s2 = recover(srv, jd, checkpoint_every=1, quantum=4)
+        rid = int(victims[0].split("/")[1])
+        assert rid in s2.recover_info["refilled"]
+        assert s2.recover_info["corrupt_keys"]
+        _finish(s2, reqs)
+        _assert_identical(s2, reqs, twin)
+        return
+    pytest.fail("no crash point left a live row in the checkpoint")
+
+
+# ---------------------------------------------------------------------------
+# ledger: billed ≡ delivered through the restart
+# ---------------------------------------------------------------------------
+
+def test_billed_equals_delivered_through_restart(dense_parts, tmp_path):
+    """The manager ledger is part of the cut: after recovery, replaying
+    the (restored + re-run) event log through a fresh ProfileManager
+    reproduces profiles and spend exactly, and total billed inferences
+    equal total delivered tokens — the re-run rounds re-bill precisely
+    what the discarded post-cut rounds had billed."""
+    cfg, params, eng = dense_parts
+    mgr = _manager()
+    srv = AdaptiveServer(cfg, params, eng,
+                         ServingConfig(slots=64, max_batch=2, block_size=8,
+                                       priority_classes=2), manager=mgr)
+    reqs = _workload(cfg, seed=11)[:4]
+    jd = str(tmp_path / "jd")
+    s1 = ContinuousScheduler(srv, quantum=3)
+    Durability(s1, jd, checkpoint_every=1)
+    _pattern(s1, reqs, stop_after=2)              # CRASH past one ledger cut
+    s2 = recover(srv, jd, checkpoint_every=1, quantum=3)
+    _finish(s2, reqs)
+    for rid, req in enumerate(reqs):
+        assert s2.results[rid]["status"] is RequestStatus.COMPLETED
+        assert len(s2.results[rid]["tokens"]) == req.max_new
+    oracle = _manager()
+    for pid, n_rows, critical in s2.events:
+        assert oracle.select(accuracy_critical=critical) == pid
+        oracle.account(pid, n_rows)
+    assert abs(oracle.spent_j - mgr.spent_j) < 1e-9
+    assert sum(n for _, n, _ in s2.events) == sum(r.max_new for r in reqs)
+    s2.check()
+
+
+# ---------------------------------------------------------------------------
+# graceful drain + cold restart
+# ---------------------------------------------------------------------------
+
+def test_drain_finishes_live_keeps_queued_restart_completes(spec16, tmp_path):
+    """drain() stops admitting, runs live rows to completion, and leaves
+    queued requests queued; a final checkpoint + cold restart completes
+    them token-identically (the SIGTERM path in launch/serve.py)."""
+    srv = spec16
+    reqs = _workload(srv.cfg, seed=13)[:5]        # max_batch=4: one queues
+    tw = ContinuousScheduler(srv, quantum=4)
+    for r in reqs:
+        tw.submit(r)
+    tw.run()
+    twin = [tw.results[i] for i in range(len(reqs))]
+
+    jd = str(tmp_path / "jd")
+    s1 = ContinuousScheduler(srv, quantum=4)
+    dur = Durability(s1, jd, checkpoint_every=2)
+    for r in reqs:
+        s1.submit(r)
+    s1.step()
+    s1.drain()
+    assert s1.live_rows == 0 and not s1._inflight
+    n_done = sum(1 for rid in range(len(reqs))
+                 if s1.results.get(rid, {}).get("status")
+                 is RequestStatus.COMPLETED)
+    assert n_done == 4 and s1.pending == 1        # queued request survives
+    dur.checkpoint()                              # shutdown cut
+
+    s2 = recover(srv, jd, checkpoint_every=2, quantum=4)
+    assert s2.pending == 1 and not s2.draining    # drain doesn't persist
+    _finish(s2, reqs)
+    _assert_identical(s2, reqs, twin)
+
+
+# ---------------------------------------------------------------------------
+# kv16 f32 masters (ServingConfig.kv16_masters)
+# ---------------------------------------------------------------------------
+
+def test_kv16_masters_registry_and_crash_identity(dense_parts, tmp_path):
+    """kv16_masters=True keeps f32 masters alongside shared blocks: the
+    registry carries both (structural bit-exactness for every
+    continuation), streams match the plain-kv16 server exactly, and a
+    crash/recover cycle restores shared prefixes from the masters."""
+    cfg, params, eng = dense_parts
+    srv = AdaptiveServer(cfg, params, eng,
+                         ServingConfig(slots=64, max_batch=4, block_size=8,
+                                       pool_blocks=64, kv16_masters=True))
+    assert srv.masters_mode and srv._collect_masters
+    reqs = _workload(cfg, seed=17)[:4]
+    tw = ContinuousScheduler(srv, quantum=4)
+    rounds = _pattern(tw, reqs)
+    twin = [tw.results[i] for i in range(len(reqs))]
+    assert any(e.master_k is not None and e.block_ids is not None
+               for e in tw.registry._entries.values())
+
+    jd = str(tmp_path / "jd")
+    s1 = ContinuousScheduler(srv, quantum=4)
+    Durability(s1, jd, checkpoint_every=1)
+    _pattern(s1, reqs, stop_after=max(2, rounds // 2))
+    s2 = recover(srv, jd, checkpoint_every=1, quantum=4)
+    _finish(s2, reqs)
+    _assert_identical(s2, reqs, twin)

@@ -126,6 +126,58 @@ def test_make_policy_from_config():
     assert [c.name for c in pol.classes] == ["critical", "standard", "saver"]
     assert pol.classes[0].accuracy_critical
     assert not pol.classes[0].preemptible and pol.classes[0].can_preempt
+    assert pol.aging is None
+    assert make_policy(ServingConfig(priority_classes=2, aging=5)).aging == 5
+
+
+def test_aging_promotes_starved_saver_in_bounded_rounds():
+    """Anti-starvation regression: under a sustained critical flood a
+    saver request is promoted one level per ``aging`` rounds and reaches
+    the head in bounded time; without aging it starves forever."""
+    def flood_rounds_until_served(aging, budget=40):
+        pol = PriorityPolicy(default_classes(3), aging=aging)
+        saver = Request(np.zeros(4, np.int32), priority=2)
+        pol.enqueue(0, saver)
+        for rnd in range(1, budget + 1):
+            crit = Request(np.zeros(4, np.int32), priority=0)
+            pol.enqueue(100 + rnd, crit)           # one new critical/round
+            pol.age_tick()
+            if pol.pop_head() == 0:                # one service slot/round
+                return rnd
+        return None
+
+    assert flood_rounds_until_served(aging=None) is None     # starves
+    served = flood_rounds_until_served(aging=3)
+    # two promotions (saver->standard->critical) then drain the critical
+    # backlog ahead of it: bounded, and well inside the budget
+    assert served is not None and served <= 3 * 2 + 8
+
+    # default (aging=None) preserves strict lowest-level-first exactly
+    pol = PriorityPolicy(default_classes(3))
+    for rid, lvl in [(0, 2), (1, 0), (2, 1), (3, 2)]:
+        pol.enqueue(rid, Request(np.zeros(4, np.int32), priority=lvl))
+    for _ in range(10):
+        pol.age_tick()                             # must be a no-op
+    assert [pol.pop_head() for _ in range(4)] == [1, 2, 0, 3]
+
+
+def test_aging_promotion_survives_queue_state_roundtrip():
+    """Durability: queue_state()/restore_queue_state() round-trips earned
+    promotions and wait counters — a restart does not reset a starved
+    request's climb (docs/serving.md §Durability)."""
+    pol = PriorityPolicy(default_classes(3), aging=2)
+    pol.enqueue(0, Request(np.zeros(4, np.int32), priority=2))
+    pol.enqueue(1, Request(np.zeros(4, np.int32), priority=1))
+    pol.age_tick()
+    pol.age_tick()                # rid 0 -> standard (behind 1), ages reset
+    pol.age_tick()                # both waited 1 at level 1
+    st = pol.queue_state()
+    twin = PriorityPolicy(default_classes(3), aging=2)
+    twin.restore_queue_state(st)
+    assert twin.queue_state() == st
+    twin.age_tick()               # head of standard hits aging -> critical
+    assert twin.head() == 1
+    assert [twin.pop_head(), twin.pop_head()] == [1, 0]
 
 
 # ---------------------------------------------------------------------------
