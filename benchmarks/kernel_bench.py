@@ -107,7 +107,9 @@ def _paged_step_bytes(row_blocks, n_lblk, bs, hkv, d, esize, quantum):
     every step and pays the view build + exit fold-back (two more
     pool-sized round trips) once per ``quantum``-step segment; the kernel
     streams only the blocks each row actually maps — per-step traffic is
-    proportional to live tokens, not provisioned capacity.
+    proportional to live tokens, not provisioned capacity. ``esize`` is
+    bytes per stored element: 2 (bf16), 1 (int8), 0.5 (packed int4 — two
+    nibbles per byte).
     """
     b = len(row_blocks)
     view_kv = 2 * b * n_lblk * bs * hkv * d * esize      # K+V, dense view
@@ -137,7 +139,7 @@ def bench_paged_attention(n_blocks: int = 64, bs: int = 16, b: int = 8,
     n_lblk = n_blocks // b
     lens = [int(rng.integers(bs, min(3 * bs, n_lblk * bs))) for _ in range(b)]
     q = jnp.asarray(rng.normal(size=(b, hkv, hg, d)), jnp.float32)
-    esize = 1 if kv_bits == 8 else 2
+    esize = {16: 2, 8: 1, 4: 0.5}[kv_bits]
     if kv_bits == 8:
         kp = jnp.asarray(rng.integers(-127, 128, (n_blocks, bs, hkv, d)),
                          jnp.int8)
@@ -145,6 +147,15 @@ def bench_paged_attention(n_blocks: int = 64, bs: int = 16, b: int = 8,
                          jnp.int8)
         ks = jnp.asarray(rng.uniform(0.01, 0.1, (b, hkv)), jnp.float32)
         vs = jnp.asarray(rng.uniform(0.01, 0.1, (b, hkv)), jnp.float32)
+    elif kv_bits == 4:
+        # int4 grids packed two-per-byte: the pool stores [.., D/2] int8
+        from repro.core.qtypes import pack_int4
+        kp = pack_int4(jnp.asarray(
+            rng.integers(-7, 8, (n_blocks, bs, hkv, d)), jnp.int8))
+        vp = pack_int4(jnp.asarray(
+            rng.integers(-7, 8, (n_blocks, bs, hkv, d)), jnp.int8))
+        ks = jnp.asarray(rng.uniform(0.05, 0.2, (b, hkv)), jnp.float32)
+        vs = jnp.asarray(rng.uniform(0.05, 0.2, (b, hkv)), jnp.float32)
     else:
         kp = jnp.asarray(rng.normal(size=(n_blocks, bs, hkv, d)),
                          jnp.float32).astype(jnp.bfloat16)
@@ -183,6 +194,9 @@ def bench_paged_attention(n_blocks: int = 64, bs: int = 16, b: int = 8,
     info = {
         "n_blocks": n_blocks, "block_size": bs, "batch": b,
         "kv_bits": kv_bits, "quantum": quantum,
+        # K+V payload + token_idx metadata of one physical block — the
+        # quantity that sets pool token capacity at a fixed byte budget
+        "block_bytes": int(2 * bs * hkv * d * esize + bs * 4),
         "mapped_blocks": int(sum(row_blocks)),
         "tok_s_gather_ref": b / t_gather * 1e6,
         "tok_s_kernel_interpret": b / t_kernel * 1e6,
@@ -200,8 +214,8 @@ def bench_paged_attention(n_blocks: int = 64, bs: int = 16, b: int = 8,
 def _smoke_token_identity() -> dict:
     """CI gate: one real ``decode_segment`` over one paged pool, decoded by
     both backends from identical state — emitted tokens must match exactly
-    at kv16 and kv8 (the kernel path replaces the gather path bit-for-bit
-    at the token level, the serving contract)."""
+    at kv16, kv8 and packed-kv4 (the kernel path replaces the gather path
+    bit-for-bit at the token level, the serving contract)."""
     from repro.configs import get_smoke
     from repro.models import transformer as T
 
@@ -215,7 +229,7 @@ def _smoke_token_identity() -> dict:
                          lambda p, br, b_: T.train_loss(p, cfg, br, b_))
     table = jnp.asarray(eng.table)
     out = {}
-    for kv_bits in (16, 8):
+    for kv_bits in (16, 8, 4):
         b, slots, bs, steps = 4, 32, 8, 6
         n_lblk = slots // bs
         rng = np.random.default_rng(kv_bits)
@@ -260,6 +274,31 @@ def _smoke_token_identity() -> dict:
     return out
 
 
+def sweep_block_size(kv_bits: int = 4, pool_tokens: int = 1024,
+                     sizes: tuple = (8, 16, 32)) -> dict:
+    """Mini block-size sweep for the packed-kv4 kernel at equal pool tokens.
+
+    Block size trades gather/view waste against per-block metadata and DMA
+    granularity; the sweep holds the pool's token capacity fixed
+    (``n_blocks * bs = pool_tokens``) and picks the size with the lowest
+    kernel bytes per decode step — the config the ``--json`` payload
+    persists for deployments to start from.
+    """
+    rows = []
+    for bs in sizes:
+        _, info = bench_paged_attention(n_blocks=pool_tokens // bs, bs=bs,
+                                        kv_bits=kv_bits)
+        rows.append({"block_size": bs,
+                     "n_blocks": info["n_blocks"],
+                     "kernel_bytes_per_step": info["kernel_bytes_per_step"],
+                     "gather_bytes_per_step": info["gather_bytes_per_step"],
+                     "block_bytes": info["block_bytes"],
+                     "max_err_vs_gather": info["max_err_vs_gather"]})
+    best = min(rows, key=lambda r: r["kernel_bytes_per_step"])
+    return {"kv_bits": kv_bits, "pool_tokens": pool_tokens,
+            "best_block_size": best["block_size"], "rows": rows}
+
+
 def _parse_args(argv=None) -> argparse.Namespace:
     ap = argparse.ArgumentParser(
         description="Pallas kernel microbenchmarks. Emits "
@@ -274,6 +313,10 @@ def _parse_args(argv=None) -> argparse.Namespace:
     ap.add_argument("--json", type=str, default=None, metavar="PATH",
                     help="write rows + paged-attention byte accounting as "
                          "JSON")
+    ap.add_argument("--sweep-block-size", action="store_true",
+                    help="kv4 block-size mini sweep (8/16/32) at equal "
+                         "pool tokens; the best config (lowest kernel "
+                         "bytes/step) is printed and persisted in --json")
     return ap.parse_args(argv)
 
 
@@ -283,7 +326,7 @@ def main(argv=None) -> None:
     paged_info: dict = {}
     if args.smoke:
         identity = _smoke_token_identity()
-        for kv in (16, 8):
+        for kv in (16, 8, 4):
             prows, info = bench_paged_attention(kv_bits=kv)
             rows += prows
             paged_info[f"kv{kv}"] = info
@@ -291,10 +334,34 @@ def main(argv=None) -> None:
     else:
         rows += bench_qmatmul()
         rows += bench_qkv_attention()
-        for kv in (16, 8):
+        for kv in (16, 8, 4):
             prows, info = bench_paged_attention(kv_bits=kv)
             rows += prows
             paged_info[f"kv{kv}"] = info
+    if "kv4" in paged_info and "kv8" in paged_info:
+        k4, k8 = paged_info["kv4"], paged_info["kv8"]
+        # packed-int4 contract at the reference pool point: strictly fewer
+        # kernel bytes per step than kv8, and >= 1.5x pool token capacity
+        # at equal block count + byte budget (2x payload minus the shared
+        # token_idx metadata)
+        assert k4["kernel_bytes_per_step"] < k8["kernel_bytes_per_step"], \
+            (k4["kernel_bytes_per_step"], k8["kernel_bytes_per_step"])
+        cap = k8["block_bytes"] / k4["block_bytes"]
+        assert cap >= 1.5, f"kv4 token-capacity ratio {cap:.2f} < 1.5"
+        paged_info["kv4_vs_kv8"] = {
+            "kernel_bytes_per_step_ratio":
+                k4["kernel_bytes_per_step"] / k8["kernel_bytes_per_step"],
+            "token_capacity_x": cap,
+        }
+    if args.sweep_block_size:
+        paged_info["block_size_sweep"] = sw = sweep_block_size()
+        for r in sw["rows"]:
+            rows.append((f"paged_attention_kv4_bs{r['block_size']}_sweep",
+                         0.0,
+                         f"kernel_bytes_per_step={r['kernel_bytes_per_step']};"
+                         f"kernel_err={r['max_err_vs_gather']:.1e}"))
+        print(f"# kv4 block-size sweep: best bs={sw['best_block_size']} "
+              f"at {sw['pool_tokens']} pool tokens", file=sys.stderr)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.3f},{derived}")

@@ -1,0 +1,135 @@
+"""Offline per-layer KV precision search → the ``--precision-policy`` file.
+
+The offline half of the precision ladder (docs/serving.md §Precision
+ladder): :meth:`ProfileManager.search_precision` walks the bytes/accuracy
+frontier by greedily lowering one layer's KV bit-width one rung at a time
+(16 → 8 → 4), scoring each candidate schedule by its logit deviation from
+the all-bf16 baseline on a fixed probe batch and costing it by the analytic
+KV bytes a decode step writes+reads per token.  The winning schedule is a
+plain ``int32[n_layers]`` array — *data* to the serving engine's jitted
+decode (the ``kv_table`` row), never a retrace.
+
+  PYTHONPATH=src python benchmarks/precision_frontier.py \
+      --arch granite-3-2b --max-drop 0.05 --json policy.json
+
+The JSON payload feeds ``repro.launch.serve --precision-policy policy.json``
+(profile 0 pins the all-high row; the rest ride the searched schedule).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, get_config, get_smoke
+from repro.core.engine import AdaptiveEngine, QuantIndex
+from repro.core.manager import ProfileManager, ProfileStats
+from repro.core.profiles import paper_profiles
+from repro.models import transformer as T
+
+
+def kv_bytes_per_token(cfg, sched) -> float:
+    """Analytic KV bytes one decoded token writes (K+V, all layers).
+
+    The structural cost the schedule controls: each layer stores
+    ``2 * n_kv * head_dim`` values per token at its own bit-width — the
+    quantity that sets pool capacity at a fixed block count.
+    """
+    return float(sum(2 * cfg.n_kv * cfg.head_dim * int(b) / 8 for b in sched))
+
+
+def build_score_fn(cfg, params, bits_row, probe_tokens, slots: int = 32):
+    """Proxy degradation: mean last-token logit deviation vs the all-16 row.
+
+    Runs the *same* prefill executable with ``kv_sched`` as data, so every
+    candidate schedule is one forward pass, and the all-high row scores an
+    exact 0 (``kv_refine`` at eff>=16 is a passthrough).
+    """
+    batch = {"tokens": jnp.asarray(probe_tokens)}
+
+    def logits_of(sched):
+        y, _ = T.prefill(params, cfg, bits_row, batch, slots,
+                         kv_sched=jnp.asarray(sched, jnp.int32))
+        return np.asarray(y, np.float64)
+
+    base = logits_of(np.full((cfg.n_layers,), 16, np.int32))
+    denom = float(np.abs(base).mean()) + 1e-12
+
+    def score(sched) -> float:
+        return float(np.abs(logits_of(sched) - base).mean()) / denom
+
+    return score
+
+
+def search(arch: str, max_drop: float, full: bool = False,
+           seed: int = 0) -> dict:
+    cfg = get_config(arch) if full else get_smoke(arch)
+    if not cfg.causal:
+        raise SystemExit("encoder-only arch has no KV decode path")
+    params = T.init_params(cfg, jax.random.PRNGKey(seed))
+    names = T.quant_layer_names(cfg)
+    profs = paper_profiles(names, inner_layers=[])
+    eng = AdaptiveEngine(tuple(profs), QuantIndex(names),
+                         lambda p, br, b: T.train_loss(p, cfg, br, b))
+    bits_row = jnp.asarray(eng.table)[0]
+    rng = np.random.default_rng(seed)
+    probe = rng.integers(0, cfg.vocab, (4, 12)).astype(np.int32)
+    score_fn = build_score_fn(cfg, params, bits_row, probe)
+    # the search is a ProfileManager method (same object that binds profiles
+    # online) but needs no energy ledger — a zero-budget manager is fine
+    mgr = ProfileManager([ProfileStats("hi", 0.99, 1.0, 1.0)],
+                         accuracy_target=0.985, accuracy_floor=0.95,
+                         budget_j=0.0)
+    sched, frontier = mgr.search_precision(
+        cfg.n_layers, score_fn, lambda s: kv_bytes_per_token(cfg, s),
+        ladder=(16, 8, 4), max_drop=max_drop)
+    return {
+        "arch": arch, "n_layers": cfg.n_layers, "max_drop": max_drop,
+        "schedule": [int(b) for b in sched],
+        "score": frontier[-1]["score"],
+        "bytes_per_token": frontier[-1]["bytes"],
+        "bytes_per_token_all16": frontier[0]["bytes"],
+        "frontier": frontier,
+    }
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="Search a per-layer KV bit-width schedule (16/8/4) on "
+                    "the bytes/accuracy frontier; --json writes the "
+                    "--precision-policy payload for repro.launch.serve.")
+    ap.add_argument("--arch", default="granite-3-2b", choices=ARCHS)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--max-drop", type=float, default=0.05,
+                    help="proxy-score budget: max mean relative logit "
+                         "deviation from the all-bf16 baseline (default "
+                         "0.05)")
+    ap.add_argument("--json", type=str, default=None, metavar="PATH",
+                    help="write the searched schedule + frontier as JSON")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    out = search(args.arch, args.max_drop, full=args.full, seed=args.seed)
+    print(f"# {args.arch}: schedule={out['schedule']} "
+          f"score={out['score']:.4f} "
+          f"bytes/token {out['bytes_per_token_all16']:.0f} -> "
+          f"{out['bytes_per_token']:.0f} "
+          f"({out['bytes_per_token']/out['bytes_per_token_all16']:.2f}x)")
+    for st in out["frontier"]:
+        print(f"frontier,{st['bytes']:.0f},{st['score']:.5f},"
+              f"{'/'.join(str(b) for b in st['schedule'])}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"# json written to {args.json}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -41,8 +41,19 @@ python scripts/check_static.py
 python benchmarks/serving_bench.py --smoke --paranoid
 
 # paged-attention kernel gate: kernel/gather token identity on a real
-# decode_segment + strictly fewer per-decode-step bytes than the gather path
+# decode_segment at kv16/kv8/packed-kv4 + strictly fewer per-decode-step
+# bytes than the gather path (kv4 additionally: fewer kernel bytes/step
+# than kv8 and >=1.5x pool token capacity at equal block count)
 python benchmarks/kernel_bench.py --smoke
+
+# packed-int4 + precision-policy point: search a per-layer KV schedule on
+# the smoke model and serve through it at kv4 end to end (the searched
+# schedule rides the jitted decode as data; profile 0 pins the all-high row)
+python benchmarks/precision_frontier.py --arch granite-3-2b \
+    --max-drop 0.05 --json /tmp/ci_precision_policy.json
+python -m repro.launch.serve --arch granite-3-2b --requests 4 --max-new 6 \
+    --kv-bits 4 --continuous --paged-backend pallas \
+    --precision-policy /tmp/ci_precision_policy.json
 
 python scripts/check_docs.py README.md docs/serving.md docs/analysis.md
 

@@ -92,6 +92,23 @@ REFERENCE_BUDGETS: tuple[SegmentBudget, ...] = (
         steps=4,
         max_aval_bytes=163_840,
     ),
+    # BENCH_10 packed-int4 point: same geometry as BENCH_4, half the kv8
+    # pool bytes. The packed view is small enough that the aval ceiling
+    # alone no longer separates the backends — the no-gather-view
+    # invariant does: the pallas path must never materialize the
+    # [B, n_lblk*bs] packed view (measured pallas peak 131,072 B; the
+    # ceiling keeps the standard ~25% headroom above it).
+    SegmentBudget(
+        name="bench10-kv4",
+        arch="granite-3-2b",
+        batch=8,
+        slots=128,
+        block_size=16,
+        pool_blocks=64,
+        kv_bits=4,
+        steps=4,
+        max_aval_bytes=163_840,
+    ),
     # BENCH_6 chaos point: tiny 10-block pool under drought, batch 4.
     SegmentBudget(
         name="bench6-chaos-kv16",

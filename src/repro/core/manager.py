@@ -201,6 +201,71 @@ class ProfileManager:
                                          draft_w=draft_w,
                                          provisional=provisional)
 
+    def search_precision(self, n_layers: int,
+                         score_fn: Callable[[np.ndarray], float],
+                         bytes_fn: Callable[[np.ndarray], float],
+                         *, ladder: Sequence[int] = (16, 8, 4),
+                         max_drop: float = 0.05) -> tuple[np.ndarray, list[dict]]:
+        """Search a per-layer KV bit-width schedule (greedy frontier descent).
+
+        The offline half of the precision-policy loop: the online half
+        (``select``/``plan_schedule_*``) binds a *profile* per step, and this
+        search produces the per-layer KV schedule a profile carries (the
+        ``kv_table`` row the serving engine gathers as data — no retrace).
+
+        Starts from the all-high schedule (``ladder[0]`` everywhere — the
+        exact-passthrough baseline) and greedily lowers one layer one rung at
+        a time, always taking the move with the best bytes-saved per unit of
+        proxy-score increase, while the cumulative proxy score stays within
+        ``max_drop`` of the baseline. Layers are never raised back: the walk
+        is a monotone descent of the bytes axis, and every accepted state is
+        recorded on the frontier.
+
+        Args:
+            n_layers: schedule length.
+            score_fn: ``schedule -> float`` proxy degradation (0 at the
+                all-high baseline; larger = worse). Must be deterministic.
+            bytes_fn: ``schedule -> float`` KV bytes/step under the schedule.
+            ladder: bit-widths high → low (each move drops one rung).
+            max_drop: proxy-score budget — moves that would exceed it are
+                rejected.
+        Returns:
+            ``(schedule, frontier)``: the final ``int32[n_layers]`` schedule
+            and the accepted-state frontier, each entry a dict with
+            ``schedule`` (list), ``score``, and ``bytes``.
+        """
+        ladder = [int(b) for b in ladder]
+        assert sorted(ladder, reverse=True) == ladder and len(ladder) >= 1
+        rung = np.zeros((n_layers,), np.int64)      # index into `ladder`
+        sched = np.full((n_layers,), ladder[0], np.int32)
+        base = float(score_fn(sched))
+        frontier = [{"schedule": sched.tolist(), "score": base,
+                     "bytes": float(bytes_fn(sched))}]
+        while True:
+            best = None                              # (ratio, layer, score, by)
+            cur_bytes = frontier[-1]["bytes"]
+            for l in range(n_layers):
+                if rung[l] + 1 >= len(ladder):
+                    continue
+                cand = sched.copy()
+                cand[l] = ladder[rung[l] + 1]
+                s = float(score_fn(cand))
+                if s - base > max_drop:
+                    continue
+                by = float(bytes_fn(cand))
+                saved = max(cur_bytes - by, 1e-12)
+                ratio = max(s - frontier[-1]["score"], 0.0) / saved
+                if best is None or ratio < best[0]:
+                    best = (ratio, l, s, by)
+            if best is None:
+                break
+            _, l, s, by = best
+            rung[l] += 1
+            sched[l] = ladder[rung[l]]
+            frontier.append({"schedule": sched.tolist(), "score": s,
+                             "bytes": by})
+        return sched, frontier
+
     def exhausted(self) -> bool:
         """Whether the energy budget is fully spent."""
         if not self.budget_j:           # zero budget = unconstrained (see

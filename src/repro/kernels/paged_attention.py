@@ -13,9 +13,11 @@ scores, so a dead row reads garbage bytes but contributes nothing.
 
 Layout (matches :class:`repro.models.attention.PagedKVCache`):
   q        [B, Hkv, Hg, D]   f32/bf16 — one decode token per row
-  k/v pool [n_blocks, bs, Hkv, D]     bf16 (kv16) or int8 (kv8)
+  k/v pool [n_blocks, bs, Hkv, D]     bf16 (kv16) or int8 (kv8);
+           [n_blocks, bs, Hkv, D/2]   int8 at kv4 — two nibbles per byte,
+           unpacked in VMEM inside the kernel (low nibble = even index)
   tidx     [n_blocks, bs]    int32 absolute token index per slot, −1 = empty
-  scales   [B, Hkv]          f32 per-row dequant scales (kv8)
+  scales   [B, Hkv]          f32 per-row dequant scales (kv8/kv4)
   bt       [B * n_lblk]      int32 flattened block table (scalar prefetch)
   pos      [B]               int32 current absolute position (scalar prefetch)
 
@@ -25,6 +27,9 @@ lives in VMEM across the block loop and is flushed on the last block. The
 int8 path contracts on the int grid and folds the per-(B,Hkv) scale into the
 scores/output afterwards — the exact operation order of the jnp
 ``decode_attention`` int8 fast path, so the two stay numerically aligned.
+The int4 path DMAs the packed half-width block, unpacks the nibbles in VMEM
+and dequantizes **before** the contraction — `decode_attention`'s kv4
+(dequantize-first) order — so kv4 streams half of kv8's pool bytes per step.
 Validated in interpret mode against ``ref.paged_attention_ref`` and the
 gather-view oracle (``tests/test_paged_attention_kernel.py``).
 """
@@ -37,6 +42,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.qtypes import unpack_int4
 from repro.kernels import CompilerParams
 
 __all__ = ["paged_attention_pallas", "paged_attention_pallas_multi"]
@@ -61,7 +67,12 @@ def _kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, tidx_ref, ks_ref, vs_ref,
     mapped = (entry >= 0) & (entry < n_blocks)
 
     q = q_ref[0, 0].astype(jnp.float32) * sm_scale          # [Hg, D]
-    k = k_ref[0, :, 0].astype(jnp.float32)                  # [bs, D]
+    if bits == 4:
+        # packed nibbles: unpack in VMEM and dequantize before the dot —
+        # decode_attention's kv4 (dequantize-first) operation order
+        k = unpack_int4(k_ref[0, :, 0]).astype(jnp.float32) * ks_ref[0, 0]
+    else:
+        k = k_ref[0, :, 0].astype(jnp.float32)              # [bs, D]
     scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # [Hg, bs]
     if bits == 8:
         # int-grid contraction, scale folded after — decode_attention's order
@@ -78,7 +89,10 @@ def _kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, tidx_ref, ks_ref, vs_ref,
     # explicit zero on masked columns: with every key masked so far,
     # exp(NEG_INF − NEG_INF) would otherwise contribute 1 per dead slot
     p = jnp.where(keep[None, :], jnp.exp(scores - m_new), 0.0)  # [Hg, bs]
-    v = v_ref[0, :, 0].astype(jnp.float32)                  # [bs, D]
+    if bits == 4:
+        v = unpack_int4(v_ref[0, :, 0]).astype(jnp.float32) * vs_ref[0, 0]
+    else:
+        v = v_ref[0, :, 0].astype(jnp.float32)              # [bs, D]
     l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
     acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
         p, v, preferred_element_type=jnp.float32)
@@ -109,9 +123,11 @@ def paged_attention_pallas(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
 
     ``window <= 0`` means full attention. Returns ``[B, Hkv, Hg, D]`` f32.
     """
-    assert bits in (8, 16), f"paged kernel supports kv16/kv8, got kv{bits}"
+    assert bits in (4, 8, 16), \
+        f"paged kernel supports kv16/kv8/kv4, got kv{bits}"
     b, hkv, hg, d = q.shape
-    n_blocks, bs, _, _ = k_pool.shape
+    n_blocks, bs, _, dk = k_pool.shape   # dk = D (kv8/kv16) or D/2 (kv4 packed)
+    assert dk == (d // 2 if bits == 4 else d)
     _, n_lblk = block_table.shape
     win = window if window > 0 else n_lblk * bs + 1
 
@@ -131,10 +147,10 @@ def paged_attention_pallas(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
         grid=(b, hkv, n_lblk),
         in_specs=[
             pl.BlockSpec((1, 1, hg, d), lambda r, h, lb, bt, p: (r, h, 0, 0)),
-            pl.BlockSpec((1, bs, 1, d),
+            pl.BlockSpec((1, bs, 1, dk),
                          lambda r, h, lb, bt, p:
                          (phys(r * n_lblk + lb, bt), 0, h, 0)),
-            pl.BlockSpec((1, bs, 1, d),
+            pl.BlockSpec((1, bs, 1, dk),
                          lambda r, h, lb, bt, p:
                          (phys(r * n_lblk + lb, bt), 0, h, 0)),
             pl.BlockSpec((1, bs),

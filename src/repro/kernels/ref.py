@@ -78,7 +78,8 @@ def paged_attention_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     row's blocks through its table (unmapped entries fill with zeros /
     ``token_idx`` −1) followed by the masked-softmax decode attention of
     ``repro.models.attention.decode_attention`` — including the int8 fast
-    path's operation order (contract on the int grid, scale the scores).
+    path's operation order (contract on the int grid, scale the scores) and
+    the kv4 packed path's (unpack the nibbles, dequantize, then contract).
 
     q ``[B, Hkv, Hg, D]``; k/v pool ``[n_blocks, bs, Hkv, D]``; returns
     ``[B, Hkv, Hg, D]`` f32. ``window <= 0`` = full attention.
@@ -95,8 +96,17 @@ def paged_attention_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
         g = jnp.take(pool, bt, axis=0, mode="fill", fill_value=fill)
         return g.reshape(b, n_lblk * bs, *pool.shape[2:])
 
-    kf = gather(k_pool, 0).astype(jnp.float32)          # [B, S, Hkv, D]
-    vf = gather(v_pool, 0).astype(jnp.float32)
+    if bits == 4:
+        # packed pool: gather the half-width bytes (fill 0 unpacks to zeros),
+        # unpack, and dequantize *before* the contraction — exactly
+        # decode_attention's kv4 (dequantize-first) operation order
+        kf = unpack_int4(gather(k_pool, 0)).astype(jnp.float32) \
+            * jnp.asarray(k_scale, jnp.float32)[:, None, :, None]
+        vf = unpack_int4(gather(v_pool, 0)).astype(jnp.float32) \
+            * jnp.asarray(v_scale, jnp.float32)[:, None, :, None]
+    else:
+        kf = gather(k_pool, 0).astype(jnp.float32)       # [B, S, Hkv, D]
+        vf = gather(v_pool, 0).astype(jnp.float32)
     tidx = gather(token_idx, -1)                         # [B, S]
     qh = q.astype(jnp.float32) * d ** -0.5
     scores = jnp.einsum("bkgd,bskd->bkgs", qh, kf)

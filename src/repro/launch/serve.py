@@ -41,7 +41,19 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--kv-bits", type=int, default=16, choices=[8, 16])
+    ap.add_argument("--kv-bits", type=int, default=16, choices=[4, 8, 16],
+                    help="KV-cache precision: 16 = bf16, 8 = int8, 4 = "
+                         "packed int4 (two tokens' nibbles per byte — half "
+                         "the pool bytes of kv8, 2x the token capacity at "
+                         "equal block count)")
+    ap.add_argument("--precision-policy", default=None, metavar="PATH",
+                    help="per-layer KV bit-width policy JSON (written by "
+                         "benchmarks/precision_frontier.py): profile 0 — "
+                         "the accuracy-critical binding — pins the all-"
+                         "high row, every other profile rides the searched "
+                         "frontier schedule. The [n_profiles, n_layers] "
+                         "table is data to the jitted decode (no retrace "
+                         "on profile switches)")
     ap.add_argument("--budget-inferences", type=float, default=200,
                     help="energy budget in units of full-power inferences")
     ap.add_argument("--continuous", action="store_true",
@@ -201,6 +213,19 @@ def main() -> None:
     if (args.journal_dir or args.drain_on_sigterm) and not args.continuous:
         raise SystemExit("--journal-dir/--drain-on-sigterm need --continuous "
                          "(durability hooks live on the slot-pool scheduler)")
+    policy = None
+    if args.precision_policy:
+        import json
+        with open(args.precision_policy) as f:
+            pp = json.load(f)
+        row = tuple(int(b) for b in pp["schedule"])
+        if len(row) != cfg.n_layers:
+            raise SystemExit(f"--precision-policy schedule has {len(row)} "
+                             f"layers, model has {cfg.n_layers}")
+        # profile 0 is the accuracy-critical binding: pin it to the exact
+        # all-high row; the rest ride the searched frontier schedule
+        policy = tuple((16,) * cfg.n_layers if i == 0 else row
+                       for i in range(len(profs)))
     stop = {"drain": False}
     if args.drain_on_sigterm:
         # install before the (slow) model/executable build: a TERM during
@@ -221,7 +246,8 @@ def main() -> None:
                                        speculate=args.speculate,
                                        draft_k=args.draft_k,
                                        draft_model=args.draft_model,
-                                       kv16_masters=args.kv16_masters),
+                                       kv16_masters=args.kv16_masters,
+                                       precision_policy=policy),
                          manager=mgr)
     rng = np.random.default_rng(args.seed)
     n_cls = max(1, args.priority_classes)

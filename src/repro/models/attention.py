@@ -28,9 +28,38 @@ from .pshard import constrain
 __all__ = ["gqa_attention", "swa_attention", "decode_attention", "KVCache",
            "init_kv_cache", "update_kv_cache",
            "PagedKVCache", "init_paged_kv_cache", "update_paged_kv_cache",
-           "paged_view", "paged_decode_attention", "prefix_attention"]
+           "paged_view", "paged_decode_attention", "prefix_attention",
+           "kv_refine"]
 
 NEG_INF = -1e30
+
+
+def kv_refine(x: jax.Array, eff_bits: jax.Array) -> jax.Array:
+    """Per-layer precision-policy fake-quant of fresh K/V projections.
+
+    ``eff_bits`` is a traced int32 scalar — one entry of the searched
+    per-layer bit-width schedule (``kv_table[profile, layer]``), so
+    switching schedules never retraces. Applied at the attention boundary
+    (immediately after the QKV projection) in **every** path that births
+    K/V — cold prefill, continuation/chunked prefill suffixes, and decode
+    steps — so attention reads, cache writes, and collected full-precision
+    masters all see the same refined values; replayed prefix masters are
+    already refined and must never pass through here again (fake-quant is
+    not bit-stable under scale recomputation).
+
+    Numerics: deterministic symmetric fake-quant on a per-position grid —
+    ``amax`` over the head dim, ``qmax = 2^(bits-1) - 1``, round-to-nearest,
+    clip. ``eff_bits >= 16`` is an exact passthrough (`jnp.where` with the
+    f32 round-trip of ``x``), which is what pins a critical-class profile
+    row of all-16 entries token-identical to the no-policy baseline.
+    """
+    eff = jnp.asarray(eff_bits, jnp.int32)
+    qmax = jnp.exp2(jnp.minimum(eff, 15).astype(jnp.float32) - 1.0) - 1.0
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-9) / qmax
+    fq = jnp.clip(jnp.round(xf / scale), -qmax, qmax) * scale
+    return jnp.where(eff >= 16, xf, fq).astype(x.dtype)
 
 
 def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,

@@ -31,7 +31,8 @@ import numpy as np
 
 from .attention import (KVCache, PagedKVCache, decode_attention,
                         decode_attention_window, gqa_attention, init_kv_cache,
-                        init_paged_kv_cache, paged_decode_attention,
+                        init_paged_kv_cache, kv_refine,
+                        paged_decode_attention,
                         paged_decode_attention_window, paged_view,
                         prefix_attention, swa_attention, update_kv_cache,
                         update_kv_cache_window, update_paged_kv_cache,
@@ -252,13 +253,18 @@ def _attend(cfg: ModelConfig, q, k, v, s: int, kv_valid=None):
 
 def _layer_forward(cfg: ModelConfig, lp: dict, lb: jax.Array, x: jax.Array,
                    positions: jax.Array, collect_kv: bool,
-                   collect_ssm: bool, valid: Optional[jax.Array] = None):
+                   collect_ssm: bool, valid: Optional[jax.Array] = None,
+                   kv_eff: Optional[jax.Array] = None):
     """One layer over a full sequence. Returns (x, aux, collected).
 
     ``valid`` ``[B, S]`` bool marks real tokens of a left-padded ragged batch
     (None = every token real): pad keys are masked out of attention, pad steps
     are masked out of the SSM recurrence, and pad tokens are dropped from the
     MoE capacity dispatch — a ragged row computes exactly what it would solo.
+    ``kv_eff`` (traced int32 scalar, optional) is this layer's precision-
+    policy bit-width: fresh K/V are refined (:func:`~repro.models.attention.
+    kv_refine`) right after the QKV projection, so attention reads AND the
+    collected cache/master values see the same refined tensors.
     """
     b, s, d = x.shape
     aux = jnp.zeros((), jnp.float32)
@@ -267,6 +273,8 @@ def _layer_forward(cfg: ModelConfig, lp: dict, lb: jax.Array, x: jax.Array,
     if cfg.family == "hybrid":
         xin = _norm(cfg, lp["norm_attn"], x)
         q, k, v = _attn_qkv(cfg, lp, xin, lb, positions)
+        if kv_eff is not None:
+            k, v = kv_refine(k, kv_eff), kv_refine(v, kv_eff)
         attn = _attend(cfg, q, k, v, s, kv_valid=valid)
         attn = qlinear(lp["attn_out"], attn.reshape(b, s, -1),
                        lb[_site_idx(cfg, "attn_out")])
@@ -305,6 +313,8 @@ def _layer_forward(cfg: ModelConfig, lp: dict, lb: jax.Array, x: jax.Array,
     # attention families: dense / moe / vlm / audio
     xin = _norm(cfg, lp["norm_attn"], x)
     q, k, v = _attn_qkv(cfg, lp, xin, lb, positions)
+    if kv_eff is not None:
+        k, v = kv_refine(k, kv_eff), kv_refine(v, kv_eff)
     attn = _attend(cfg, q, k, v, s, kv_valid=valid)
     x = x + qlinear(lp["attn_out"], attn.reshape(b, s, -1),
                     lb[_site_idx(cfg, "attn_out")])
@@ -367,37 +377,50 @@ def _embed_inputs(cfg: ModelConfig, params: dict, bits_row: jax.Array,
 
 
 def forward(params: dict, cfg: ModelConfig, bits_row: jax.Array, batch: dict,
-            collect: bool = False):
+            collect: bool = False, kv_sched: Optional[jax.Array] = None):
     """Backbone over a full sequence.
 
     Returns (hidden [B,S,d], aux_loss, collected) where ``collected`` stacks
     per-layer (kv, ssm_final) when ``collect`` (prefill → cache handoff).
+    ``kv_sched`` (``int32[L]``, optional, *data*) is a per-layer KV
+    precision-policy row — each layer's fresh K/V are refined at its entry's
+    bit-width before attention/collection; ``None`` keeps the lowering
+    byte-identical to the policy-free path (the scan xs tuple is unchanged).
     """
     x, positions, valid = _embed_inputs(cfg, params, bits_row, batch)
     _, _, layer_bits = split_bits(cfg, bits_row)
 
     def body(carry, xs):
         x, aux = carry
-        lp, lb = xs
+        if kv_sched is None:
+            lp, lb = xs
+            ke = None
+        else:
+            lp, lb, ke = xs
         x, a, col = _layer_forward(cfg, lp, lb, x, positions,
                                    collect_kv=collect and cfg.has_attn,
                                    collect_ssm=collect and cfg.has_ssm,
-                                   valid=valid)
+                                   valid=valid, kv_eff=ke)
         return (x, aux + a), col
 
     body_fn = body
     if cfg.remat:
         body_fn = jax.checkpoint(body, policy=_remat_policy(cfg))
     carry0 = (x, jnp.zeros((), jnp.float32))
+    xs_all = ((params["layers"], layer_bits) if kv_sched is None
+              else (params["layers"], layer_bits,
+                    jnp.asarray(kv_sched, jnp.int32)))
     if cfg.scan_layers:
-        (x, aux), collected = jax.lax.scan(body_fn, carry0,
-                                           (params["layers"], layer_bits))
+        (x, aux), collected = jax.lax.scan(body_fn, carry0, xs_all)
     else:  # depth-unrolled variant (roofline analysis lowering)
         carry = carry0
         cols = []
         for l in range(cfg.n_layers):
             lp = jax.tree.map(lambda a: a[l], params["layers"])
-            carry, col = body_fn(carry, (lp, layer_bits[l]))
+            xs_l = ((lp, layer_bits[l]) if kv_sched is None
+                    else (lp, layer_bits[l],
+                          jnp.asarray(kv_sched, jnp.int32)[l]))
+            carry, col = body_fn(carry, xs_l)
             cols.append(col)
         (x, aux) = carry
         collected = jax.tree.map(lambda *xs: jnp.stack(xs), *cols) if cols and cols[0] else ()
@@ -618,20 +641,27 @@ def paged_row_masters(kv_pool, slot: int, block_ids, n_tok: int):
             gather(kv_pool.v, kv_pool.v_scale[:, slot]))
 
 
-def amax_for_scale(scale: np.ndarray, qmax: float) -> np.ndarray:
+def amax_for_scale(scale: np.ndarray, qmax: float,
+                   strict: bool = True) -> np.ndarray:
     """Invert the int-KV scale calibration ``s = amax/qmax + 1e-9``, f32-exact.
 
     The preemption restore wave re-quantizes a suspended row's masters
     through ``prefill_extend``'s calibration ``max(suffix_amax, amax)/qmax
     + 1e-9``; passing an ``amax`` whose forward image is bit-equal to the
     row's suspended scale makes the restored scale — and with it every
-    re-quantized int — identical to the uninterrupted row's. Every scale
-    in the system has that form (prefill calibration and the decode
-    running-max update both produce ``a/qmax + 1e-9`` for some observed
-    float32 ``a``), so an exact preimage exists within a few ulp of
-    ``(s − 1e-9)·qmax``; this searches per element and fails loudly if the
-    image cannot be matched (a scale that the calibration could never have
-    produced).
+    re-quantized int — identical to the uninterrupted row's. Scales born
+    of true f32 division have such a preimage within a few ulp of
+    ``(s − 1e-9)·qmax``; this searches per element. But XLA may lower a
+    divide-by-constant as multiply-by-reciprocal (observed inside the
+    fused decode scan at qmax=7), and division by a non-power-of-2 maps
+    the float grid ~1.14 result-ulps per input ulp — so a device-produced
+    scale can sit on a result value that true division skips entirely, at
+    ANY search radius. ``strict=False`` returns the nearest approximate
+    preimage for such elements instead of raising; callers relying on
+    bit-exact restoration must then force the exact scale separately
+    (``RowSnapshot.k_scale``/``v_scale`` — re-quantization itself is
+    robust to a few-ulp scale error since ``round(i·(1±ε)) == i`` for
+    ``|i| ≤ qmax``, so only the scale bytes need forcing).
     """
     s = np.asarray(scale, np.float32)
     qmax32, eps = np.float32(qmax), np.float32(1e-9)
@@ -657,7 +687,9 @@ def amax_for_scale(scale: np.ndarray, qmax: float) -> np.ndarray:
                 a = lo
                 break
         else:
-            raise ValueError(f"no amax preimage for scale {sv!r}")
+            if strict:
+                raise ValueError(f"no amax preimage for scale {sv!r}")
+            a = np.float32(np.float32(sv - eps) * qmax32)
         out[it.multi_index] = a
     return out
 
@@ -665,7 +697,8 @@ def amax_for_scale(scale: np.ndarray, qmax: float) -> np.ndarray:
 def decode_step(params: dict, cfg: ModelConfig, bits_row: jax.Array,
                 tokens: jax.Array, pos: jax.Array, caches: dict,
                 row_valid: Optional[jax.Array] = None,
-                paged_backend: str = "gather"):
+                paged_backend: str = "gather",
+                kv_sched: Optional[jax.Array] = None):
     """One decode step. tokens ``[B,1]``, pos ``[B]`` → (logits [B,V], caches).
 
     ``row_valid`` ``[B]`` bool marks rows still generating (continuous-batching
@@ -678,6 +711,10 @@ def decode_step(params: dict, cfg: ModelConfig, bits_row: jax.Array,
     CPU/oracle path) while ``"pallas"`` attends **in place** against the
     block pool (:func:`repro.models.attention.paged_decode_attention`) — no
     ``[B, n_lblk*bs]`` copy exists anywhere in the step.
+
+    ``kv_sched`` (``int32[L]``, optional, *data*): per-layer precision-policy
+    row — the step's fresh K/V are refined per layer before the cache write
+    and the attention read, exactly like the prefill paths.
     """
     eb, _, layer_bits = split_bits(cfg, bits_row)
     x = embed_lookup(params["embed"], tokens, eb)
@@ -685,11 +722,17 @@ def decode_step(params: dict, cfg: ModelConfig, bits_row: jax.Array,
     b = tokens.shape[0]
 
     def body(x, xs):
-        lp, lb, cache = xs
+        if kv_sched is None:
+            lp, lb, cache = xs
+            ke = None
+        else:
+            lp, lb, cache, ke = xs
         new_cache = dict(cache)
         if cfg.has_attn:
             xin = _norm(cfg, lp["norm_attn"], x)
             q, k, v = _attn_qkv(cfg, lp, xin, lb, positions)
+            if ke is not None:
+                k, v = kv_refine(k, ke), kv_refine(v, ke)
             if "kv_view" in cache:
                 # paged fast path (decode_segment): the block table is
                 # fixed for the whole segment, so the dense per-row view
@@ -762,7 +805,11 @@ def decode_step(params: dict, cfg: ModelConfig, bits_row: jax.Array,
                             gated=cfg.act == "silu", act=cfg.act)
         return x, new_cache
 
-    layers_and_caches = (params["layers"], layer_bits, caches)
+    if kv_sched is None:
+        layers_and_caches = (params["layers"], layer_bits, caches)
+    else:
+        layers_and_caches = (params["layers"], layer_bits, caches,
+                             jnp.asarray(kv_sched, jnp.int32))
     if cfg.scan_layers:
         x, new_caches = jax.lax.scan(body, x, layers_and_caches)
     else:  # depth-unrolled analysis variant
@@ -860,7 +907,8 @@ def overlay_params(base: dict, overlay: dict) -> dict:
 def decode_many(params: dict, cfg: ModelConfig, table: jax.Array,
                 schedule: jax.Array, logits0: jax.Array, pos0: jax.Array,
                 caches: dict, row_budget: Optional[jax.Array] = None,
-                prequant: Optional[dict] = None):
+                prequant: Optional[dict] = None,
+                kv_table: Optional[jax.Array] = None):
     """Fused multi-token greedy decode: one ``lax.scan`` over generation steps.
 
     The whole decode loop stays on device — per-step argmax sampling, KV/SSM
@@ -901,7 +949,8 @@ def decode_many(params: dict, cfg: ModelConfig, table: jax.Array,
         prequant = prequant_decode_weights(params, cfg, table)
     ys, _, _, _, caches = decode_segment(params, cfg, table, schedule[1:],
                                          jnp.where(live0, tok0, 0), pos0,
-                                         caches, budget - 1, prequant=prequant)
+                                         caches, budget - 1, prequant=prequant,
+                                         kv_table=kv_table)
     tokens = jnp.concatenate([out0[:, None], ys], axis=1)
     return tokens, schedule, caches
 
@@ -911,7 +960,8 @@ def decode_segment(params: dict, cfg: ModelConfig, table: jax.Array,
                    caches: dict, remaining: jax.Array,
                    prequant: Optional[dict] = None,
                    paged_backend: str = "gather",
-                   fault_step: Optional[jax.Array] = None):
+                   fault_step: Optional[jax.Array] = None,
+                   kv_table: Optional[jax.Array] = None):
     """Fused decode *segment*: ``len(schedule)`` scan steps from an arbitrary
     mid-generation state — the continuous-batching quantum primitive.
 
@@ -973,10 +1023,14 @@ def decode_segment(params: dict, cfg: ModelConfig, table: jax.Array,
         tok, pos, ok, cch = carry
         live = i < rem                       # done-mask: row still generating?
         bits_row = table[pid]
+        # per-layer KV precision row, gathered by the step's (traced)
+        # profile id — like bits_row, a schedule switch never retraces
+        ks = None if kv_table is None else kv_table[pid]
         p_step = overlay_params(params,
                                 jax.tree.map(lambda a: a[pid], prequant))
         logits, cch = decode_step(p_step, cfg, bits_row, tok[:, None], pos, cch,
-                                  row_valid=live, paged_backend=paged_backend)
+                                  row_valid=live, paged_backend=paged_backend,
+                                  kv_sched=ks)
         # fault injection: the targeted row's logits go NaN at its fault
         # step — after the KV write (the pool stays clean), before the
         # argmax and finite-check (both token and flag see the poison)
@@ -1390,7 +1444,8 @@ def decode_segment_spec(params: dict, cfg: ModelConfig, table: jax.Array,
 
 
 def prefill(params: dict, cfg: ModelConfig, bits_row: jax.Array, batch: dict,
-            slots: int, *, kv_bits: int = 16, return_raw_kv: bool = False):
+            slots: int, *, kv_bits: int = 16, return_raw_kv: bool = False,
+            kv_sched: Optional[jax.Array] = None):
     """Full-sequence prefill → (last-token logits [B,V], decode-ready caches).
 
     Ragged batches (``batch["prompt_len"]``): each left-padded row hands off
@@ -1407,7 +1462,8 @@ def prefill(params: dict, cfg: ModelConfig, bits_row: jax.Array, batch: dict,
     the exact cache-fill (attention reads and int-KV scale calibration) a
     cold prefill would have done.
     """
-    hidden, _, collected = forward(params, cfg, bits_row, batch, collect=True)
+    hidden, _, collected = forward(params, cfg, bits_row, batch, collect=True,
+                                   kv_sched=kv_sched)
     b, s, _ = hidden.shape
     plen = batch.get("prompt_len")
     caches = init_caches(cfg, b, slots, kv_bits=kv_bits)
@@ -1472,7 +1528,8 @@ def prefill(params: dict, cfg: ModelConfig, bits_row: jax.Array, batch: dict,
 
 def forward_extend(params: dict, cfg: ModelConfig, bits_row: jax.Array,
                    batch: dict, prefix_k: jax.Array, prefix_v: jax.Array,
-                   prefix_len: jax.Array):
+                   prefix_len: jax.Array,
+                   kv_sched: Optional[jax.Array] = None):
     """Backbone over a prompt *suffix*, attending to precomputed prefix KV.
 
     The shared-prefix admission path skips re-running the backbone over a
@@ -1503,9 +1560,18 @@ def forward_extend(params: dict, cfg: ModelConfig, bits_row: jax.Array,
     x = constrain(x, "dp", None, None)
 
     def body(x, xs):
-        lp, lb, kp, vp = xs
+        if kv_sched is None:
+            lp, lb, kp, vp = xs
+            ke = None
+        else:
+            lp, lb, kp, vp, ke = xs
         xin = _norm(cfg, lp["norm_attn"], x)
         q, k, v = _attn_qkv(cfg, lp, xin, lb, positions)
+        if ke is not None:
+            # refine ONLY the fresh suffix K/V — the prefix masters were
+            # refined when they were born; re-refining is not bit-stable
+            # (the recomputed fake-quant scale drifts by ulps)
+            k, v = kv_refine(k, ke), kv_refine(v, ke)
         attn = prefix_attention(q, kp, vp, k, v, positions=positions,
                                 prefix_len=plen, suffix_valid=valid)
         x = x + qlinear(lp["attn_out"], attn.reshape(b, s, -1),
@@ -1517,9 +1583,11 @@ def forward_extend(params: dict, cfg: ModelConfig, bits_row: jax.Array,
                     gated=cfg.act == "silu", act=cfg.act)
         return x, (k, v)
 
-    x, kv_col = jax.lax.scan(body, x,
-                             (params["layers"], layer_bits,
-                              prefix_k, prefix_v))
+    xs_all = ((params["layers"], layer_bits, prefix_k, prefix_v)
+              if kv_sched is None
+              else (params["layers"], layer_bits, prefix_k, prefix_v,
+                    jnp.asarray(kv_sched, jnp.int32)))
+    x, kv_col = jax.lax.scan(body, x, xs_all)
     x = _norm(cfg, params["norm_f"], x)
     return x, kv_col
 
@@ -1530,7 +1598,8 @@ def prefill_extend(params: dict, cfg: ModelConfig, bits_row: jax.Array,
                    prefix_len: jax.Array,
                    prefix_k_amax: Optional[jax.Array] = None,
                    prefix_v_amax: Optional[jax.Array] = None,
-                   return_raw_kv: bool = False):
+                   return_raw_kv: bool = False,
+                   kv_sched: Optional[jax.Array] = None):
     """Shared-prefix prefill → (last-token logits, dense decode caches).
 
     Runs :func:`forward_extend` over the suffix only, then builds the same
@@ -1553,7 +1622,8 @@ def prefill_extend(params: dict, cfg: ModelConfig, bits_row: jax.Array,
     replay this one as its prefix masters at int KV precisions.
     """
     hidden, kv_col = forward_extend(params, cfg, bits_row, batch,
-                                    prefix_k, prefix_v, prefix_len)
+                                    prefix_k, prefix_v, prefix_len,
+                                    kv_sched=kv_sched)
     b, s, _ = hidden.shape
     caches = init_caches(cfg, b, slots, kv_bits=kv_bits)
     k_all, v_all = kv_col                        # [L, B, Sb, Hkv, hd]

@@ -23,8 +23,9 @@ before it is intact.
 **Live-state checkpoints** (:meth:`Durability.checkpoint`) — a consistency
 cut at a flush boundary: force ``_flush(0)`` (no token in flight), then
 capture every live row as the SAME :class:`~repro.serving.paged.RowSnapshot`
-the preemption SUSPEND edge takes (f32 KV masters + exact int-KV scale
-preimages via ``_snapshot_row``), plus mid-admission chunk rows' accumulated
+the preemption SUSPEND edge takes (f32 KV masters + int-KV scale preimages
+and exact scale rows via ``_snapshot_row``), plus mid-admission chunk rows'
+accumulated
 masters, master-backed registry entries, policy-queue order (with aging
 state), per-request ledgers, the ProfileManager energy ledger, and every
 robustness counter — written through :mod:`repro.checkpoint.manager`'s
@@ -261,6 +262,7 @@ def _capture(s) -> tuple[dict, dict]:
         arr = {"mk": snap.master_k, "mv": snap.master_v}
         if snap.k_amax is not None:
             arr["ka"], arr["va"] = snap.k_amax, snap.v_amax
+            arr["ksc"], arr["vsc"] = snap.k_scale, snap.v_scale
         rows_arr[str(rid)] = arr
     for rid, snap in s._suspended.items():
         if rid in skip:
@@ -271,6 +273,7 @@ def _capture(s) -> tuple[dict, dict]:
         arr = {"mk": snap.master_k, "mv": snap.master_v}
         if snap.k_amax is not None:
             arr["ka"], arr["va"] = snap.k_amax, snap.v_amax
+            arr["ksc"], arr["vsc"] = snap.k_scale, snap.v_scale
         rows_arr[str(rid)] = arr
     chunks_meta, chunks_arr = {}, {}
     if s.paged:
@@ -424,7 +427,7 @@ def _apply_checkpoint(s, tree, meta, pending: dict, info: dict) -> None:
         arr = tree.get("rows", {}).get(rid_s, {})
         int_kv = s.srv.scfg.kv_bits in (4, 8)
         if (("rows", rid_s) in bad or "mk" not in arr or "mv" not in arr
-                or (int_kv and "ka" not in arr)):
+                or (int_kv and ("ka" not in arr or "ksc" not in arr))):
             _refill(s, rid, rm["kind"], info)
             continue
         s._suspended[rid] = RowSnapshot(
@@ -432,7 +435,9 @@ def _apply_checkpoint(s, tree, meta, pending: dict, info: dict) -> None:
             last_tok=int(rm["last_tok"]), pid=int(rm["pid"]),
             master_k=jnp.asarray(arr["mk"]), master_v=jnp.asarray(arr["mv"]),
             k_amax=(jnp.asarray(arr["ka"]) if "ka" in arr else None),
-            v_amax=(jnp.asarray(arr["va"]) if "va" in arr else None))
+            v_amax=(jnp.asarray(arr["va"]) if "va" in arr else None),
+            k_scale=(jnp.asarray(arr["ksc"]) if "ksc" in arr else None),
+            v_scale=(jnp.asarray(arr["vsc"]) if "vsc" in arr else None))
         if rm["kind"] == "live":
             # a live row was NOT queued at the cut (suspended ones were,
             # by evict_row); it resumes through the normal admission path

@@ -34,6 +34,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import logging
 from typing import Optional, Sequence
 
 import jax
@@ -82,7 +83,9 @@ class ServingConfig:
     ``slots`` — per-row KV capacity in tokens; must cover ``prompt_len +
     max_new`` for every request (sliding-window stacks ring within their
     window regardless). ``kv_bits`` — KV cache storage precision: 16 (bf16
-    baseline) or 8 (int8, the beyond-paper memory-roofline win). ``max_batch``
+    baseline), 8 (int8, the beyond-paper memory-roofline win) or 4 (packed
+    int4, two nibbles per byte — half of kv8's pool bytes, 2× its token
+    capacity; the paged-attention kernel unpacks in VMEM). ``max_batch``
     — decode rows: the static group width of :meth:`AdaptiveServer.serve` and
     the slot-pool size of :class:`~repro.serving.scheduler.
     ContinuousScheduler`. ``greedy`` — argmax sampling (the only mode the
@@ -167,7 +170,24 @@ class ServingConfig:
     bit-exactness the preemption-restore path has at int KV — and durable
     checkpoints snapshot exact row state at kv16. Costs host memory
     (f32 masters per registry entry / in-flight chunk row); identity of
-    delivered tokens does not depend on it.
+    delivered tokens does not depend on it. Only meaningful at
+    ``kv_bits=16`` — int pools (kv8/kv4) already keep masters, and the
+    combination is rejected at construction.
+
+    Precision-policy knob (docs/serving.md §Precision ladder):
+
+    ``precision_policy`` — per-profile, per-layer KV bit-width schedule: a
+    ``[n_profiles, n_layers]`` nested tuple of entries in (4, 8, 16),
+    typically searched offline against the accuracy-vs-bytes frontier
+    (:meth:`repro.core.manager.ProfileManager.search_precision` /
+    ``benchmarks/precision_frontier.py``). The table rides the executables
+    as **data** (rows gathered by the traced profile id), so profile
+    switches never retrace; entries of 16 are exact passthrough, which is
+    how a ``critical``-bound profile row pins the hand-set baseline
+    token-identically while ``saver`` profiles ride the searched frontier.
+    ``None`` (default) disables the policy with a byte-identical lowering.
+    Incompatible with ``speculate`` (draft/verify windows do not thread
+    the per-layer schedule).
     """
 
     slots: int = 4096
@@ -189,6 +209,7 @@ class ServingConfig:
     draft_hist: int = 32
     draft_model: Optional[str] = None
     kv16_masters: bool = False
+    precision_policy: Optional[tuple] = None
 
 
 @dataclasses.dataclass
@@ -253,6 +274,14 @@ class AdaptiveServer:
         self.scfg = serving
         self.manager = manager
         table = engine.table
+        if serving.kv_bits not in (4, 8, 16, 32):
+            raise ValueError(f"kv_bits must be 4, 8, 16 or 32, "
+                             f"got {serving.kv_bits}")
+        if serving.kv16_masters and serving.kv_bits != 16:
+            raise ValueError(
+                "kv16_masters only applies to bf16 pools (kv_bits=16): "
+                f"a kv{serving.kv_bits} pool is lossy and always keeps "
+                "full-precision masters")
         if serving.speculate:
             if not T.supports_speculation(cfg, serving.kv_bits):
                 raise ValueError(
@@ -277,33 +306,68 @@ class AdaptiveServer:
                                  f"'ngram' or 'repeat' (or pass draft_fn)")
         self.draft_fn = draft_fn
 
+        # ---- per-layer precision policy (kv_table) -----------------------
+        # precision as a policy OUTPUT: each profile binds an int32[L] row
+        # of per-layer KV bit-widths. The [P, L] table is a server-lifetime
+        # constant the executables close over; rows are gathered by the
+        # *traced* profile id, so schedule/profile switches never retrace —
+        # the same bits-as-data trick as the engine's quant table. With no
+        # policy every call site passes kv_sched=None and the lowering is
+        # byte-identical to the policy-free engine.
+        kv_table = None
+        if serving.precision_policy is not None:
+            if serving.speculate:
+                raise ValueError(
+                    "precision_policy is incompatible with speculate=True: "
+                    "draft/verify windows do not thread the per-layer KV "
+                    "schedule")
+            pol = np.asarray(serving.precision_policy, np.int32)
+            n_prof = len(engine.profile_names)
+            if pol.shape != (n_prof, cfg.n_layers):
+                raise ValueError(
+                    f"precision_policy must have shape [n_profiles="
+                    f"{n_prof}, n_layers={cfg.n_layers}], got "
+                    f"{tuple(pol.shape)}")
+            if not np.isin(pol, (4, 8, 16)).all():
+                raise ValueError(
+                    "precision_policy entries must be 4, 8 or 16")
+            kv_table = jnp.asarray(pol)
+        self.kv_table = kv_table
+
         def prefill_fn(params, profile_id, batch):
             bits = jnp.asarray(table)[profile_id]
+            ks = None if kv_table is None else kv_table[profile_id]
             return T.prefill(params, cfg, bits, batch, serving.slots,
-                             kv_bits=serving.kv_bits)
+                             kv_bits=serving.kv_bits, kv_sched=ks)
 
         def decode_fn(params, profile_id, tokens, pos, caches):
             bits = jnp.asarray(table)[profile_id]
-            return T.decode_step(params, cfg, bits, tokens, pos, caches)
+            ks = None if kv_table is None else kv_table[profile_id]
+            return T.decode_step(params, cfg, bits, tokens, pos, caches,
+                                 kv_sched=ks)
 
         def generate_fn(params, prequant, schedule, logits0, pos0, caches,
                         row_budget):
             return T.decode_many(params, cfg, jnp.asarray(table), schedule,
                                  logits0, pos0, caches, row_budget=row_budget,
-                                 prequant=prequant)
+                                 prequant=prequant, kv_table=kv_table)
 
         # ---- paged decode backend ----------------------------------------
         # "pallas" = in-place paged-attention kernel (interpret mode off-TPU,
         # compiled on TPU); "gather" = per-segment dense view, the oracle.
-        # kv4 packs two values per byte, which the kernel does not unpack —
-        # it degrades to the gather path.
+        # kv4/kv8/kv16 all have a kernel path (kv4 unpacks its nibbles in
+        # VMEM); any other precision degrades to gather — loudly.
         pb = serving.paged_backend
         if pb not in ("auto", "pallas", "gather"):
             raise ValueError(f"paged_backend must be auto|pallas|gather, "
                              f"got {pb!r}")
         if pb == "auto":
             pb = "pallas" if jax.default_backend() == "tpu" else "gather"
-        if serving.kv_bits not in (8, 16):
+        if pb == "pallas" and serving.kv_bits not in (4, 8, 16):
+            logging.getLogger("repro.serving").warning(
+                "paged_backend degraded pallas -> gather: kv_bits=%d has "
+                "no paged-attention kernel path (kv4/kv8/kv16 only)",
+                serving.kv_bits)
             pb = "gather"
         self.paged_backend = pb
 
@@ -321,7 +385,8 @@ class AdaptiveServer:
                                     schedule, tok, pos, caches, remaining,
                                     prequant=self._prequant,
                                     paged_backend=self.paged_backend,
-                                    fault_step=fault_step)
+                                    fault_step=fault_step,
+                                    kv_table=kv_table)
 
         def segment_spec_fn(schedule, hist, spec_on, tok, pos, caches,
                             remaining, quota, fault_step):
@@ -350,8 +415,10 @@ class AdaptiveServer:
             # token_idx entries of a retired request must not survive into
             # the new request's attention window.
             bits = jnp.asarray(table)[profile_id]
+            ks = None if kv_table is None else kv_table[profile_id]
             logits, rows = T.prefill(self.params, cfg, bits, batch,
-                                     serving.slots, kv_bits=serving.kv_bits)
+                                     serving.slots, kv_bits=serving.kv_bits,
+                                     kv_sched=ks)
             tok0 = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             caches = jax.tree.map(
                 lambda pool, row: pool.at[:, slots_idx].set(row, mode="drop"),
@@ -411,9 +478,11 @@ class AdaptiveServer:
             # every private block wholesale also clears any stale
             # ``token_idx`` left by the block's previous owner.
             bits = jnp.asarray(table)[profile_id]
+            ks = None if kv_table is None else kv_table[profile_id]
             out = T.prefill(self.params, cfg, bits, batch, self.slots_p,
                             kv_bits=serving.kv_bits,
-                            return_raw_kv=self._collect_masters)
+                            return_raw_kv=self._collect_masters,
+                            kv_sched=ks)
             logits, rows = out[0], out[1]
             raw = out[2] if self._collect_masters else None
             tok0 = jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -443,11 +512,12 @@ class AdaptiveServer:
             # Chunked prefill reuses this executable verbatim: a chunk's
             # "prefix" is simply the row's own previously processed chunks.
             bits = jnp.asarray(table)[profile_id]
+            ks = None if kv_table is None else kv_table[profile_id]
             out = T.prefill_extend(
                 self.params, cfg, bits, batch, self.slots_p,
                 kv_bits=serving.kv_bits, prefix_k=kpre, prefix_v=vpre,
                 prefix_len=prefix_len, prefix_k_amax=ka, prefix_v_amax=va,
-                return_raw_kv=self._collect_masters)
+                return_raw_kv=self._collect_masters, kv_sched=ks)
             logits, rows = out[0], out[1]
             raw = out[2] if self._collect_masters else None
             tok0 = jnp.argmax(logits, axis=-1).astype(jnp.int32)

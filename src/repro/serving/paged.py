@@ -75,9 +75,12 @@ class RowSnapshot:
     holds. ``pid`` pins the wave to the profile of the row's last
     pre-eviction step (billing bookkeeping only — with an empty suffix no
     profile-dependent compute lands in the cache). ``k_amax``/``v_amax``
-    (``[L, Hkv]``, int-KV only) are the exact scale preimages
-    (:func:`repro.models.transformer.amax_for_scale`) that make the
-    restore recalibration land on the suspended scales bit-exactly.
+    (``[L, Hkv]``, int-KV only) are best-effort scale preimages
+    (:func:`repro.models.transformer.amax_for_scale`, ``strict=False``)
+    that land the restore recalibration on — or within a few ulp of —
+    the suspended scales; ``k_scale``/``v_scale`` carry the exact
+    suspended scales, forced over the restored row afterwards (see the
+    field comment below).
     """
 
     rid: int
@@ -88,6 +91,16 @@ class RowSnapshot:
     master_v: Any
     k_amax: Any
     v_amax: Any
+    # Exact suspended scale rows ([L, Hkv] f32, int-KV only). The amax
+    # preimage above is best-effort (``amax_for_scale(..., strict=False)``):
+    # XLA's reciprocal-multiply lowering of /qmax can emit scales true f32
+    # division never produces, so no preimage exists for the restore wave's
+    # recalibration to hit. Re-quantization is insensitive to the resulting
+    # few-ulp scale drift (``round(i·(1±ε)) == i`` for ``|i| ≤ qmax``) — the
+    # ints land bit-exact regardless — and the scheduler then FORCES these
+    # rows over the restored slot's scales, closing the loop by assignment.
+    k_scale: Any = None
+    v_scale: Any = None
 
 
 def prefix_keys(tokens: np.ndarray, block_size: int) -> list[bytes]:

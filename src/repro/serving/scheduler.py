@@ -1095,21 +1095,26 @@ class ContinuousScheduler:
             + list(blocks)
         mk, mv = T.paged_row_masters(self._caches["kv"], slot, row_map,
                                      p_written)
-        ka = va = None
+        ka = va = ksc = vsc = None
         kv_bits = self.srv.scfg.kv_bits
         if kv_bits in (4, 8):
             qmax = 127.0 if kv_bits == 8 else 7.0
             pool = self._caches["kv"]
-            ka = jnp.asarray(T.amax_for_scale(
-                # repro: allow(host-sync) suspend edge materializes masters
-                np.asarray(pool.k_scale[:, slot]), qmax))
-            va = jnp.asarray(T.amax_for_scale(
-                # repro: allow(host-sync) suspend edge materializes masters
-                np.asarray(pool.v_scale[:, slot]), qmax))
+            # repro: allow(host-sync) suspend edge materializes masters
+            ksc = np.asarray(pool.k_scale[:, slot])
+            # repro: allow(host-sync) suspend edge materializes masters
+            vsc = np.asarray(pool.v_scale[:, slot])
+            # best-effort preimages: XLA's reciprocal-multiply /qmax can
+            # emit scales with no exact division preimage (seen at qmax=7);
+            # the exact scales ride along and are forced post-restore.
+            ka = jnp.asarray(T.amax_for_scale(ksc, qmax, strict=False))
+            va = jnp.asarray(T.amax_for_scale(vsc, qmax, strict=False))
+            ksc, vsc = jnp.asarray(ksc), jnp.asarray(vsc)
         return RowSnapshot(
             rid=rid, n_done=p_written,
             last_tok=int(res["tokens"][-1]), pid=pid,
-            master_k=mk, master_v=mv, k_amax=ka, v_amax=va)
+            master_k=mk, master_v=mv, k_amax=ka, v_amax=va,
+            k_scale=ksc, v_scale=vsc)
 
     def evict_row(self, slot: int) -> int:
         """Suspend one live pool row; returns its rid.
@@ -1195,9 +1200,22 @@ class ContinuousScheduler:
             self._admit_restore, pid, batch, sidx, dest, bt_rows, plen_pre,
             pp, [(s.n_done, None, s.master_k, s.master_v, s.k_amax, s.v_amax)
                  for s in snaps], masters=True)
-        self._tok = self._tok.at[
-            jnp.asarray(np.asarray([slot for _, slot, _ in rows], np.int32))
-        ].set(jnp.asarray(np.asarray([s.last_tok for s in snaps], np.int32)))
+        sl = jnp.asarray(np.asarray([slot for _, slot, _ in rows], np.int32))
+        if snaps[0].k_scale is not None:
+            # force the suspended rows' exact scales over the wave's
+            # recalibration: the amax preimages are best-effort (XLA's
+            # /qmax lowering can produce scales with no exact preimage),
+            # and while the re-quantized ints are identical either way,
+            # the scale bytes themselves must match the uninterrupted
+            # row's for the next segment to be bit-exact.
+            kv = self._caches["kv"]
+            self._caches["kv"] = kv._replace(
+                k_scale=kv.k_scale.at[:, sl].set(
+                    jnp.stack([s.k_scale for s in snaps], axis=1)),
+                v_scale=kv.v_scale.at[:, sl].set(
+                    jnp.stack([s.v_scale for s in snaps], axis=1)))
+        self._tok = self._tok.at[sl].set(
+            jnp.asarray(np.asarray([s.last_tok for s in snaps], np.int32)))
         for (rid, slot, blocks), s in zip(rows, snaps):
             req = self._reqs[rid]
             self.slot_req[slot] = rid

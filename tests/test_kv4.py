@@ -1,0 +1,429 @@
+"""Packed int4 KV end to end: kernel, serving stack, precision policy.
+
+The load-bearing properties of the kv4 precision rung (docs/serving.md
+§Precision ladder):
+
+* ``pack_int4``/``unpack_int4`` round-trip the full signed nibble range
+  with the documented layout (low nibble = even index);
+* the paged-attention kernel (interpret mode) matches the gather-view
+  oracle at kv4 across block-boundary cache lengths, fragmented
+  out-of-order tables, and dead rows — nibbles unpacked in VMEM,
+  dequantize-first operation order;
+* the serving stack carries kv4 through every lifecycle the pool
+  supports: continuous scheduling (both backends, token-identical to
+  solo), preempt/resume, crash/restart recovery, and shared-prefix CoW;
+* unsupported combinations fail loudly (kv4 + ``kv16_masters``) and a
+  kernel-less precision degrades ``paged_backend`` with a warning, never
+  silently;
+* a per-layer mixed bit-width schedule (kv4/kv8/kv16 layers) rides the
+  jitted decode as *data*: scheduler ≡ solo under the same policy, zero
+  retraces (DispatchAudit-guarded), the critical profile's pinned all-16
+  row is token-identical to the no-policy baseline, and billed ≡
+  delivered.
+"""
+import logging
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.tracker import DispatchAudit
+from repro.configs import get_smoke
+from repro.core.engine import AdaptiveEngine, QuantIndex
+from repro.core.manager import ProfileManager, ProfileStats
+from repro.core.profiles import paper_profiles
+from repro.core.qtypes import pack_int4, unpack_int4
+from repro.kernels import ref
+from repro.kernels.paged_attention import paged_attention_pallas
+from repro.models import transformer as T
+from repro.serving.durability import Durability, recover
+from repro.serving.engine import (AdaptiveServer, Request, RequestStatus,
+                                  ServingConfig)
+from repro.serving.scheduler import ContinuousScheduler
+
+
+def _build(arch="granite-3-2b"):
+    cfg = get_smoke(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    names = T.quant_layer_names(cfg)
+    profs = paper_profiles(names, inner_layers=[])
+    eng = AdaptiveEngine(tuple(profs), QuantIndex(names),
+                         lambda p, br, b: T.train_loss(p, cfg, br, b))
+    return cfg, params, eng
+
+
+@pytest.fixture(scope="module")
+def dense_parts():
+    return _build()
+
+
+def _solo_tokens(parts, req, kv_bits=16, slots=64, policy=None):
+    cfg, params, eng = parts
+    srv = AdaptiveServer(cfg, params, eng,
+                         ServingConfig(slots=slots, max_batch=4,
+                                       kv_bits=kv_bits,
+                                       precision_policy=policy))
+    return srv.generate(req.tokens[None, :], req.max_new)["tokens"][0]
+
+
+def _mixed_policy(parts):
+    """One kv4/kv8/kv16-striped row for every profile (n_layers-agnostic)."""
+    cfg, _, eng = parts
+    row = tuple((4, 8, 16)[l % 3] for l in range(cfg.n_layers))
+    return tuple(row for _ in eng.profile_names)
+
+
+# ---------------------------------------------------------------------------
+# pack/unpack units
+# ---------------------------------------------------------------------------
+
+def test_pack_unpack_roundtrip():
+    """Every signed nibble value (-8..7) survives pack → unpack across
+    ranks, the carrier halves the trailing axis, and dtype stays int8."""
+    rng = np.random.default_rng(0)
+    for shape in [(8,), (3, 4), (2, 5, 6), (4, 1, 2, 16)]:
+        x = rng.integers(-8, 8, shape).astype(np.int8)
+        p = pack_int4(jnp.asarray(x))
+        assert p.shape == shape[:-1] + (shape[-1] // 2,)
+        assert p.dtype == jnp.int8
+        np.testing.assert_array_equal(np.asarray(unpack_int4(p)), x)
+
+
+def test_pack_nibble_layout():
+    """The documented byte layout: low nibble = even index, high = odd —
+    the order the kernel's VMEM unpack and the oracle both assume."""
+    p = pack_int4(jnp.asarray([[1, -2, 7, -8]], jnp.int8))
+    def byte(lo, hi):
+        v = (lo & 0xF) | ((hi & 0xF) << 4)
+        return v - 256 if v > 127 else v
+    assert [int(p[0, 0]), int(p[0, 1])] == [byte(1, -2), byte(7, -8)]
+
+
+# ---------------------------------------------------------------------------
+# kernel vs gather-view oracle at kv4 (interpret mode)
+# ---------------------------------------------------------------------------
+
+def _pool_case4(seed, lengths, *, n_blocks=16, bs=8, n_lblk=4, hkv=2, d=16,
+                hg=2, dead_sentinels=()):
+    """Fragmented kv4 paged state: packed [n_blocks, bs, hkv, d/2] pools,
+    out-of-order physical blocks, lengths straddling block boundaries,
+    optional dead rows whose tables hold only unmapped sentinels."""
+    rng = np.random.default_rng(seed)
+    b = len(lengths) + len(dead_sentinels)
+    q = jnp.asarray(rng.normal(size=(b, hkv, hg, d)), jnp.float32)
+    kp = pack_int4(jnp.asarray(rng.integers(-7, 8, (n_blocks, bs, hkv, d)),
+                               jnp.int8))
+    vp = pack_int4(jnp.asarray(rng.integers(-7, 8, (n_blocks, bs, hkv, d)),
+                               jnp.int8))
+    ks = jnp.asarray(rng.uniform(0.05, 0.2, (b, hkv)), jnp.float32)
+    vs = jnp.asarray(rng.uniform(0.05, 0.2, (b, hkv)), jnp.float32)
+    perm = rng.permutation(n_blocks)
+    tidx = np.full((n_blocks, bs), -1, np.int32)
+    bt = np.full((b, n_lblk), n_blocks, np.int32)
+    pos = np.zeros((b,), np.int32)
+    nxt = 0
+    for r, ln in enumerate(lengths):
+        pos[r] = ln - 1
+        for lb in range(-(-ln // bs)):
+            p = int(perm[nxt]); nxt += 1
+            bt[r, lb] = p
+            nv = min(ln - lb * bs, bs)
+            tidx[p, :nv] = lb * bs + np.arange(nv)
+    for i, sent in enumerate(dead_sentinels):
+        bt[len(lengths) + i, :] = sent
+    return (q, kp, vp, ks, vs, jnp.asarray(tidx), jnp.asarray(bt),
+            jnp.asarray(pos))
+
+
+def test_kernel_matches_ref_kv4():
+    """Block-boundary lengths 7/8/9/16/17 through fragmented out-of-order
+    tables + two dead rows (−1 and ≥ n_blocks sentinels): the packed-int4
+    kernel equals the gather-view oracle to float precision, and dead rows
+    flush exact zeros on both paths."""
+    case = _pool_case4(3, (7, 8, 9, 16, 17), n_blocks=24,
+                       dead_sentinels=(-1, 24))
+    out_k = paged_attention_pallas(*case, bits=4, interpret=True)
+    out_r = ref.paged_attention_ref(*case, bits=4)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               atol=2e-5, rtol=1e-5)
+    assert np.all(np.asarray(out_k)[-2:] == 0)
+    assert np.all(np.asarray(out_r)[-2:] == 0)
+
+
+def test_kernel_windowed_kv4():
+    """Sliding-window masking agrees at kv4 too."""
+    case = _pool_case4(11, (9, 17, 23), n_blocks=16, n_lblk=4, bs=8)
+    out_k = paged_attention_pallas(*case, bits=4, window=8, interpret=True)
+    out_r = ref.paged_attention_ref(*case, bits=4, window=8)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               atol=2e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# serving thread-through: scheduler identity, config validation, degrade
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["gather", "pallas"])
+def test_scheduler_token_identity_kv4(dense_parts, backend):
+    """kv4 through the continuous scheduler — both decode backends emit
+    exactly the solo tokens for prompts straddling block boundaries."""
+    cfg, params, eng = dense_parts
+    srv = AdaptiveServer(cfg, params, eng,
+                         ServingConfig(slots=64, max_batch=4, kv_bits=4,
+                                       block_size=8, paged_backend=backend))
+    assert srv.paged_backend == backend       # kv4 has a kernel path
+    sched = ContinuousScheduler(srv, quantum=4)
+    rng = np.random.default_rng(13)
+    reqs = [Request(tokens=rng.integers(0, cfg.vocab, n).astype(np.int32),
+                    max_new=mn)
+            for n, mn in [(7, 6), (9, 5), (17, 6)]]
+    for r in reqs:
+        sched.submit(r)
+    results = sched.run()
+    for req, res in zip(reqs, results):
+        assert res["tokens"] == _solo_tokens(dense_parts, req, kv_bits=4)
+
+
+def test_kv4_kv16_masters_rejected(dense_parts):
+    """kv16_masters is a bf16-pool knob: combining it with a lossy int4
+    pool is a config error, not a silent ignore."""
+    cfg, params, eng = dense_parts
+    with pytest.raises(ValueError, match="kv16_masters"):
+        AdaptiveServer(cfg, params, eng,
+                       ServingConfig(slots=64, max_batch=4, kv_bits=4,
+                                     kv16_masters=True))
+
+
+def test_paged_backend_degrade_warns(dense_parts, caplog):
+    """A precision with no kernel path degrades pallas → gather with an
+    explicit one-line warning — never silently."""
+    cfg, params, eng = dense_parts
+    with caplog.at_level(logging.WARNING, logger="repro.serving"):
+        srv = AdaptiveServer(cfg, params, eng,
+                             ServingConfig(slots=64, max_batch=4, kv_bits=32,
+                                           paged_backend="pallas"))
+    assert srv.paged_backend == "gather"
+    assert any("degraded pallas -> gather" in r.message for r in caplog.records)
+
+
+def test_shared_prefix_identity_kv4(dense_parts):
+    """Shared-prefix reuse at kv4: int pools share via host-master replay
+    (``block_ids`` is kv16-only — a lossy pool never CoW-maps physical
+    blocks), so the second sharer rides a registry hit, replays the
+    prefix nibbles bit-exactly into its own blocks, and both sharers
+    match solo generation through the packed kernel."""
+    cfg, params, eng = dense_parts
+    srv = AdaptiveServer(cfg, params, eng,
+                         ServingConfig(slots=64, max_batch=4, kv_bits=4,
+                                       block_size=8, paged_backend="pallas"))
+    sched = ContinuousScheduler(srv, quantum=2)
+    rng = np.random.default_rng(29)
+    sys_prompt = rng.integers(0, cfg.vocab, 16).astype(np.int32)
+    r1 = Request(tokens=np.concatenate(
+        [sys_prompt, rng.integers(0, cfg.vocab, 4).astype(np.int32)]),
+        max_new=8)
+    r2 = Request(tokens=np.concatenate(
+        [sys_prompt, rng.integers(0, cfg.vocab, 7).astype(np.int32)]),
+        max_new=6)
+    sched.submit(r1)
+    sched.step()
+    entry = max(sched.registry._entries.values(), key=lambda e: e.n_tokens)
+    assert entry.block_ids is None        # int pool: masters, never CoW
+    sched.submit(r2)
+    while sched.step():
+        pass
+    assert sched.registry.hits == 1
+    results = sched.run()
+    for req, res in zip((r1, r2), results):
+        assert res["tokens"] == _solo_tokens(dense_parts, req, kv_bits=4)
+
+
+# ---------------------------------------------------------------------------
+# preempt/resume and crash/restart at kv4
+# ---------------------------------------------------------------------------
+
+def test_preempt_resume_token_identity_kv4(dense_parts):
+    """A preempted-then-resumed kv4 row emits exactly the tokens of an
+    uninterrupted run — the packed-nibble snapshot/rebuild round-trips."""
+    cfg, params, eng = dense_parts
+    srv = AdaptiveServer(cfg, params, eng,
+                         ServingConfig(slots=64, max_batch=2, block_size=8,
+                                       kv_bits=4, priority_classes=2,
+                                       preemption=True))
+    sched = ContinuousScheduler(srv, quantum=2)
+    rng = np.random.default_rng(17)
+    sys_p = rng.integers(0, cfg.vocab, 16).astype(np.int32)
+    s1 = Request(tokens=np.concatenate(
+        [sys_p, rng.integers(0, cfg.vocab, 4).astype(np.int32)]),
+        max_new=18, priority=1)
+    s2 = Request(tokens=np.concatenate(
+        [sys_p, rng.integers(0, cfg.vocab, 7).astype(np.int32)]),
+        max_new=16, priority=1)
+    crit = Request(tokens=rng.integers(0, cfg.vocab, 7).astype(np.int32),
+                   max_new=4, priority=0)
+    sched.submit(s1)
+    sched.step()
+    sched.submit(s2)
+    sched.step()
+    sched.step()
+    sched.submit(crit)              # pool pressure → policy evicts a saver
+    while sched.step():
+        pass
+    assert sched.preemptions >= 1 and sched.resumes == sched.preemptions
+    for rid, req in enumerate([s1, s2, crit]):
+        assert sched.results[rid]["tokens"] == \
+            _solo_tokens(dense_parts, req, kv_bits=4), f"rid={rid}"
+        assert len(sched.results[rid]["tokens"]) == req.max_new
+
+
+def test_crash_restart_token_identity_kv4(dense_parts, tmp_path):
+    """Abandon a kv4 scheduler mid-flight and recover from journal +
+    checkpoint: every request completes with exactly the uninterrupted
+    twin's stream — the int-nibble masters restore the packed pool."""
+    cfg, params, eng = dense_parts
+    srv = AdaptiveServer(cfg, params, eng,
+                         ServingConfig(slots=64, max_batch=4, block_size=8,
+                                       pool_blocks=64, kv_bits=4,
+                                       priority_classes=2))
+    rng = np.random.default_rng(23)
+    sys_p = rng.integers(0, cfg.vocab, 16).astype(np.int32)
+    mk = lambda n: rng.integers(0, cfg.vocab, n).astype(np.int32)
+    reqs = [
+        Request(tokens=np.concatenate([sys_p, mk(5)]), max_new=12,
+                priority=1),
+        Request(tokens=np.concatenate([sys_p, mk(7)]), max_new=5, priority=0),
+        Request(tokens=mk(9), max_new=6, priority=1),
+        Request(tokens=mk(6), max_new=10, priority=0),
+    ]
+    tw = ContinuousScheduler(srv, quantum=4)
+    for r in reqs:
+        tw.submit(r)
+    tw.run()
+    twin = [tw.results[i] for i in range(len(reqs))]
+
+    jd = str(tmp_path / "kv4-crash")
+    s1 = ContinuousScheduler(srv, quantum=4)
+    Durability(s1, jd, checkpoint_every=1)
+    for r in reqs:
+        s1.submit(r)
+    s1.step(); s1.step()                       # CRASH after two boundaries
+    s2 = recover(srv, jd, checkpoint_every=1, quantum=4)
+    assert s2.recover_info["resumed_rows"] >= 1
+    while s2.step():
+        pass
+    for rid in range(len(reqs)):
+        got = s2.results[rid]
+        assert got["status"] is RequestStatus.COMPLETED, rid
+        assert [int(x) for x in got["tokens"]] == \
+               [int(x) for x in twin[rid]["tokens"]], rid
+    s2.check()
+    assert s2.allocator.used_blocks == 0
+
+
+# ---------------------------------------------------------------------------
+# per-layer precision policy: identity, no-retrace, billing, pinning
+# ---------------------------------------------------------------------------
+
+def test_mixed_schedule_scheduler_identity(dense_parts):
+    """A kv4/kv8/kv16-striped per-layer schedule through the continuous
+    scheduler (pallas backend): token-identical to a solo run under the
+    same policy, distinct from the no-policy baseline, and the whole run
+    dispatches ONE segment executable with zero retraces — the schedule is
+    data, not a trace axis."""
+    cfg, params, eng = dense_parts
+    policy = _mixed_policy(dense_parts)
+    srv = AdaptiveServer(cfg, params, eng,
+                         ServingConfig(slots=64, max_batch=4, block_size=8,
+                                       paged_backend="pallas",
+                                       precision_policy=policy))
+    sched = ContinuousScheduler(srv, quantum=4)
+    rng = np.random.default_rng(37)
+    reqs = [Request(tokens=rng.integers(0, cfg.vocab, n).astype(np.int32),
+                    max_new=mn)
+            for n, mn in [(7, 6), (9, 5), (17, 6)]]
+    with DispatchAudit(srv, ["_segment"]) as audit:
+        for r in reqs:
+            sched.submit(r)
+        results = sched.run()
+        audit.assert_no_retrace()
+    assert srv._segment._cache_size() == 1
+    drifted = False
+    for req, res in zip(reqs, results):
+        assert res["tokens"] == _solo_tokens(dense_parts, req, policy=policy)
+        drifted |= res["tokens"] != _solo_tokens(dense_parts, req)
+    assert drifted       # the refined layers actually changed the stream
+
+
+def test_all16_policy_is_exact_passthrough(dense_parts):
+    """The all-16 row is byte-exact: a policy of 16s emits exactly the
+    no-policy tokens — the refine boundary at eff>=16 is an identity."""
+    cfg, _, eng = dense_parts
+    policy = tuple((16,) * cfg.n_layers for _ in eng.profile_names)
+    rng = np.random.default_rng(41)
+    req = Request(tokens=rng.integers(0, cfg.vocab, 9).astype(np.int32),
+                  max_new=6)
+    assert _solo_tokens(dense_parts, req, policy=policy) == \
+        _solo_tokens(dense_parts, req)
+
+
+def test_speculate_policy_rejected(dense_parts):
+    """Draft/verify windows do not thread the per-layer schedule — the
+    combination is a config error."""
+    cfg, params, eng = dense_parts
+    with pytest.raises(ValueError, match="speculate"):
+        AdaptiveServer(cfg, params, eng,
+                       ServingConfig(slots=64, max_batch=4, block_size=8,
+                                     speculate=True, draft_k=2,
+                                     precision_policy=_mixed_policy(
+                                         dense_parts)))
+
+
+def test_critical_pinned_identity_and_billing(dense_parts):
+    """Priority classes under a searched-style policy: the accuracy-bound
+    profiles pin the all-16 row, so a critical request's stream is
+    token-identical to the no-policy twin even while saver rows ride the
+    mixed frontier row — and the ledger bills exactly the delivered
+    tokens (billed ≡ delivered)."""
+    cfg, params, eng = dense_parts
+    stats = [ProfileStats(n, acc, e, 1e-3) for n, acc, e in [
+        ("A16-W8", 0.99, 4.0), ("A16-W4", 0.953, 2.0), ("A8-W8", 0.988, 3.0),
+        ("A8-W4", 0.953, 1.5), ("A4-W4", 0.958, 1.0), ("Mixed", 0.975, 2.0)]]
+    mixed = _mixed_policy(dense_parts)[0]
+    policy = tuple((16,) * cfg.n_layers if s.accuracy >= 0.985 else mixed
+                   for s in stats)
+
+    def run(pol):
+        mgr = ProfileManager(stats, accuracy_target=0.985,
+                             accuracy_floor=0.90, budget_j=60.0,
+                             low_energy=0.5)
+        srv = AdaptiveServer(cfg, params, eng,
+                             ServingConfig(slots=64, max_batch=4,
+                                           block_size=8, priority_classes=2,
+                                           precision_policy=pol),
+                             manager=mgr)
+        sched = ContinuousScheduler(srv, quantum=3)
+        rng = np.random.default_rng(43)
+        mk = lambda n: rng.integers(0, cfg.vocab, n).astype(np.int32)
+        reqs = [Request(tokens=mk(7), max_new=6, priority=0,
+                        accuracy_critical=True),
+                Request(tokens=mk(9), max_new=8, priority=1),
+                Request(tokens=mk(6), max_new=8, priority=1)]
+        for r in reqs:
+            sched.submit(r)
+        sched.run()
+        return sched, reqs
+
+    s_pol, reqs = run(policy)
+    s_base, _ = run(None)
+    # the saver regime engaged (mixed row exercised) on both runs
+    assert any("A4-W4" in s_pol.results[rid]["profile_trace"]
+               for rid in range(len(reqs)))
+    # identical profile evolution (billing is policy-independent) ...
+    assert s_pol.events == s_base.events
+    # ... and the critical request's stream is pinned to the baseline
+    assert s_pol.results[0]["profile_trace"] == \
+        s_base.results[0]["profile_trace"]
+    assert s_pol.results[0]["tokens"] == s_base.results[0]["tokens"]
+    # billed ≡ delivered: every event bills live rows, Σ = Σ max_new
+    assert sum(n for _, n, _ in s_pol.events) == sum(r.max_new for r in reqs)
